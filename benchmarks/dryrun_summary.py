@@ -1,0 +1,65 @@
+"""§Dry-run: per-cell compile/memory/collective-schedule summary table."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+DRYRUN = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+GiB = 2**30
+
+
+def markdown_table(mesh: str | None = None) -> str:
+    rows = ["| cell | mesh | status | args GiB | temps GiB | compile s | "
+            "collective ops (ag/ar/rs/a2a/cp) |",
+            "|---|---|---|---|---|---|---|"]
+    for p in sorted(DRYRUN.glob("*.json")):
+        r = json.loads(p.read_text())
+        if r.get("variant", "base") != "base":
+            continue
+        if mesh and r.get("mesh") != mesh:
+            continue
+        tag = r["tag"].replace(f"__{r.get('mesh','')}", "")
+        if r.get("skipped"):
+            rows.append(f"| {tag} | {r.get('mesh','-')} | SKIP "
+                        f"(full-attn long-ctx) | - | - | - | - |")
+            continue
+        if not r.get("ok"):
+            rows.append(f"| {tag} | {r['mesh']} | **FAIL** | - | - | - | "
+                        f"{str(r.get('error'))[:40]} |")
+            continue
+        ma = r.get("memory_analysis", {})
+        c = r.get("collectives", {}).get("counts_by_type", {})
+        rows.append(
+            "| {} | {} | OK | {:.2f} | {:.2f} | {:.0f} | {}/{}/{}/{}/{} |"
+            .format(
+                tag, r["mesh"],
+                ma.get("argument_size_in_bytes", 0) / GiB,
+                ma.get("temp_size_in_bytes", 0) / GiB,
+                r.get("compile_s", 0),
+                c.get("all-gather", 0), c.get("all-reduce", 0),
+                c.get("reduce-scatter", 0), c.get("all-to-all", 0),
+                c.get("collective-permute", 0),
+            ))
+    return "\n".join(rows)
+
+
+def run() -> list[tuple]:
+    ok = fail = skip = 0
+    for p in DRYRUN.glob("*.json"):
+        r = json.loads(p.read_text())
+        if r.get("variant", "base") != "base":
+            continue
+        if r.get("skipped"):
+            skip += 1
+        elif r.get("ok"):
+            ok += 1
+        else:
+            fail += 1
+    return [("dryrun/cells_ok", 0.0, ok),
+            ("dryrun/cells_skipped_by_design", 0.0, skip),
+            ("dryrun/cells_failed", 0.0, fail)]
+
+
+if __name__ == "__main__":
+    print(markdown_table())

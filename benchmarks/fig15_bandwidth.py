@@ -1,0 +1,25 @@
+"""Figs. 8/15: bandwidth breakdown (data / metadata / mispredict /
+clean-writeback+invalidate), normalized to the uncompressed baseline."""
+
+from __future__ import annotations
+
+from .memsim_suite import suite_results
+
+
+def run() -> list[tuple]:
+    res = suite_results()
+    rows = []
+    for wl, r in sorted(res["workloads"].items()):
+        base = r["baseline_accesses"]
+        for sch in ("explicit", "cram"):
+            b = r["schemes"][sch]["breakdown"]
+            norm = {k: v / base for k, v in b.items()}
+            fig = "fig8" if sch == "explicit" else "fig15"
+            rows.append((
+                f"{fig}/{wl}", 0.0,
+                "data=%.2f meta=%.2f mispred=%.3f wbclean+inv=%.2f" % (
+                    norm["data_reads"] + norm["wb_dirty"],
+                    norm["metadata"], norm["mispredict_extra"],
+                    norm["wb_clean+invalidate"]),
+            ))
+    return rows

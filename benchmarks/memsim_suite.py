@@ -1,0 +1,50 @@
+"""Shared runner: simulate the full 27-workload suite once, cache results.
+
+Every figure-level benchmark (fig 3/7/12/14/15/16/18, tables IV/V) reads
+from this cache, so `python -m benchmarks.run` costs one suite pass.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from pathlib import Path
+
+from repro.core.memsim import SCHEMES, SimConfig, run_workload
+from repro.core.traces import all_workload_names
+
+CACHE = Path(__file__).resolve().parents[1] / "experiments" / "memsim"
+N_EVENTS = int(os.environ.get("REPRO_BENCH_EVENTS", 300_000))
+
+
+def suite_results(force: bool = False) -> dict:
+    CACHE.mkdir(parents=True, exist_ok=True)
+    path = CACHE / f"suite_{N_EVENTS}.json"
+    if path.exists() and not force:
+        return json.loads(path.read_text())
+    out = {"n_events": N_EVENTS, "workloads": {}, "wall_s": {}}
+    for name in all_workload_names():
+        t0 = time.time()
+        out["workloads"][name] = run_workload(
+            name, schemes=SCHEMES, n_events=N_EVENTS)
+        out["wall_s"][name] = round(time.time() - t0, 2)
+        print(f"  memsim {name}: {out['wall_s'][name]}s", flush=True)
+    path.write_text(json.dumps(out))
+    return out
+
+
+def geomean(xs) -> float:
+    import numpy as np
+
+    xs = np.asarray(list(xs), dtype=np.float64)
+    return float(np.exp(np.log(np.maximum(xs, 1e-9)).mean()))
+
+
+def suite_of(name: str) -> str:
+    from repro.core.traces import BY_NAME
+
+    if name in BY_NAME:
+        return {"SPEC06": "SPEC", "SPEC17": "SPEC"}.get(
+            BY_NAME[name].suite, BY_NAME[name].suite)
+    return "MIX"

@@ -1,0 +1,65 @@
+"""§Roofline: aggregate the dry-run JSONs into the per-cell roofline table.
+
+For each (arch x shape x mesh): the three terms in seconds, the dominant
+bottleneck, MODEL_FLOPS = 6·N_active·D (train) or 2·N_active·D (inference)
+and the MODEL/HLO flops ratio (compiled-compute usefulness)."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+DRYRUN = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def model_flops_per_chip(rec: dict) -> float:
+    tokens = rec["global_batch"] * (
+        rec["seq_len"] if rec["kind"] in ("train", "prefill") else 1)
+    mult = 6 if rec["kind"] == "train" else 2
+    return mult * rec["active_params"] * tokens / rec["chips"]
+
+
+def rows_from_records(records) -> list[tuple]:
+    rows = []
+    for rec in records:
+        if rec.get("skipped"):
+            rows.append((f"roofline/{rec['tag']}", 0.0, "SKIP (long_500k "
+                         "needs sub-quadratic attention)"))
+            continue
+        if not rec.get("ok"):
+            rows.append((f"roofline/{rec['tag']}", 0.0,
+                         f"FAIL {rec.get('error', '?')[:60]}"))
+            continue
+        r = rec["roofline"]
+        mf = model_flops_per_chip(rec)
+        hlo = rec["extrapolated"]["flops"]
+        ratio = mf / hlo if hlo else 0.0
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        frac = r["compute_s"] / bound if bound else 0.0
+        rows.append((
+            f"roofline/{rec['tag']}", rec.get("compile_s", 0) * 1e6,
+            "c=%.3fs m=%.3fs coll=%.3fs dom=%s useful=%.2f roofline=%.2f"
+            % (r["compute_s"], r["memory_s"], r["collective_s"],
+               r["dominant"][:4], ratio, frac),
+        ))
+    return rows
+
+
+def load_records(mesh: str | None = None, variant: str = "base"):
+    recs = []
+    for p in sorted(DRYRUN.glob("*.json")):
+        rec = json.loads(p.read_text())
+        if mesh and rec.get("mesh") != mesh:
+            continue
+        if rec.get("variant", "base") != variant:
+            continue
+        recs.append(rec)
+    return recs
+
+
+def run() -> list[tuple]:
+    recs = load_records(mesh="16x16")
+    if not recs:
+        return [("roofline/NO_DATA", 0.0,
+                 "run python -m repro.launch.dryrun --all first")]
+    return rows_from_records(recs)

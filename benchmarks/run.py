@@ -1,0 +1,55 @@
+"""Benchmark driver: one module per paper table/figure + system benches.
+
+Prints ``name,us_per_call,derived`` CSV (one row per measured quantity) and
+mirrors everything to experiments/bench_results.json.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+MODULES = [
+    "fig4_compressibility",
+    "fig12_speedup",
+    "fig14_llp",
+    "fig15_bandwidth",
+    "table3_storage",
+    "table4_channels",
+    "table5_prefetch",
+    "kernel_bench",
+    "dryrun_summary",
+    "roofline_report",
+]
+
+
+def main() -> None:
+    only = sys.argv[1:] or None
+    all_rows = []
+    print("name,us_per_call,derived")
+    for mod_name in MODULES:
+        if only and mod_name not in only:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            rows = mod.run()
+        except Exception as e:  # keep the suite running
+            traceback.print_exc()
+            rows = [(f"{mod_name}/ERROR", 0.0, repr(e)[:100])]
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}")
+            all_rows.append({"name": name, "us_per_call": us,
+                             "derived": str(derived)})
+        print(f"# {mod_name} done in {time.time()-t0:.1f}s",
+              file=sys.stderr)
+    out = Path(__file__).resolve().parents[1] / "experiments"
+    out.mkdir(exist_ok=True)
+    (out / "bench_results.json").write_text(json.dumps(all_rows, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Serve a small model with batched requests + CRAM-KV accounting.
+
+  PYTHONPATH=src python examples/serve_lm.py [--arch phi4_mini_3_8b]
+"""
+
+import argparse
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="phi4_mini_3_8b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+    serve_main(["--arch", args.arch, "--batch", str(args.batch),
+                "--gen", str(args.gen), "--prompt-len", "32"])

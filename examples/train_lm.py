@@ -1,0 +1,26 @@
+"""End-to-end training driver: ~20M-param LM, a few hundred steps, with
+checkpoint/restart fault tolerance and CRAM-compressed checkpoints.
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 300] [--fault 150]
+"""
+
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--fault", type=int, default=0)
+    ap.add_argument("--preset", default="lm20m")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--json-out", default="experiments/train_lm.json")
+    args = ap.parse_args()
+    argv = ["--preset", args.preset, "--steps", str(args.steps),
+            "--batch", str(args.batch), "--ckpt-every", "50",
+            "--ckpt-dir", "/tmp/repro_train_lm",
+            "--json-out", args.json_out]
+    if args.fault:
+        argv += ["--inject-fault", str(args.fault)]
+    train_main(argv)

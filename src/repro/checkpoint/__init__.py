@@ -1,0 +1,9 @@
+"""Sharded checkpointing with the CRAM line codec."""
+
+from .codec import cram_compress_bytes, cram_decompress_bytes
+from .ckpt import CheckpointManager, load_checkpoint, save_checkpoint
+
+__all__ = [
+    "CheckpointManager", "save_checkpoint", "load_checkpoint",
+    "cram_compress_bytes", "cram_decompress_bytes",
+]

@@ -1,0 +1,46 @@
+"""Assigned architecture configs (exact numbers from the public pool).
+
+Each module exposes CONFIG (full-size) — selectable via --arch <id> in the
+launchers.  `get(name)` returns the full config; `get_smoke(name)` returns
+the reduced same-family config used by CPU smoke tests.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+ARCHS = (
+    "phi4_mini_3_8b",
+    "mistral_large_123b",
+    "qwen3_8b",
+    "nemotron_4_15b",
+    "whisper_base",
+    "mamba2_130m",
+    "zamba2_2_7b",
+    "llama4_maverick_400b_a17b",
+    "olmoe_1b_7b",
+    "llama_3_2_vision_90b",
+)
+
+# accept dashed ids from the assignment table too
+ALIASES = {a.replace("_", "-"): a for a in ARCHS}
+
+
+def canonical(name: str) -> str:
+    name = name.replace(".", "_")
+    return ALIASES.get(name, name)
+
+
+def get(name: str):
+    mod = importlib.import_module(f".{canonical(name)}", __package__)
+    return mod.CONFIG
+
+
+def get_smoke(name: str):
+    from ..models import smoke_config
+
+    return smoke_config(get(name))
+
+
+def all_configs():
+    return {a: get(a) for a in ARCHS}

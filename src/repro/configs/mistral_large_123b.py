@@ -1,0 +1,11 @@
+"""mistral-large-123b [dense] [hf:mistralai/Mistral-Large-Instruct-2407]."""
+from ..models import ModelConfig
+import jax.numpy as jnp
+
+CONFIG = ModelConfig(
+    name="mistral-large-123b", family="dense",
+    n_layers=88, d_model=12288, n_heads=96, n_kv_heads=8, head_dim=128,
+    d_ff=28672, vocab=32_768, mlp_act="swiglu",
+    # 123B: bf16 weights + FSDP sharding to fit 16GB/chip at 256 chips
+    param_dtype=jnp.bfloat16,
+)

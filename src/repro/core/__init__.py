@@ -1,0 +1,21 @@
+"""CRAM core: the paper's contribution as a reusable library.
+
+Layers:
+  * codecs: fpc, bdi, compress (hybrid FPC+BDI with in-line headers)
+  * protocol: marker (implicit metadata), mapping (restricted 4-line groups),
+    lit (inversion table), llp (line-location predictor), dynamic (cost/benefit
+    counter), evict_logic (layout transitions)
+  * models: cram (exact functional compressed memory), llc (group LLC),
+    memsim (fast trace-driven bandwidth simulator), traces (workload suite)
+"""
+
+from . import bdi, compress, dynamic, evict_logic, fpc, lit, llc, llp, mapping
+from . import marker
+from .cram import CRAMStats, CRAMSystem
+from .memsim import SCHEMES, SimConfig, run_workload, simulate, speedup
+
+__all__ = [
+    "bdi", "compress", "dynamic", "evict_logic", "fpc", "lit", "llc", "llp",
+    "mapping", "marker", "CRAMSystem", "CRAMStats", "SCHEMES", "SimConfig",
+    "run_workload", "simulate", "speedup",
+]

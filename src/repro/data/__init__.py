@@ -1,0 +1,5 @@
+"""Data pipeline: deterministic synthetic LM streams, sharded per host."""
+
+from .pipeline import DataConfig, SyntheticLM, make_batch_iterator
+
+__all__ = ["DataConfig", "SyntheticLM", "make_batch_iterator"]

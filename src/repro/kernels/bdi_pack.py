@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: BDI-style 2:1 pair packing of KV pages (CRAM-KV).
+
+One kernel invocation packs a pair of (page, Hkv, D2) int16 pages into a
+single slot of int8 delta-pairs against a shared base strip (pageA's
+token-0 row), reporting whether the pair fits (all deltas within int8).
+The unpack kernel inverts it.  Layout/semantics match ref.pack_pair_ref /
+ref.unpack_pair_ref exactly (allclose-tested in interpret mode).
+
+BlockSpec notes (TPU target): D2 = 2*head_dim = 256 lanes (2x the 128-lane
+register width); the whole page tile lives in VMEM (128 x 8 x 256 x 2B =
+512KB for the default page) — one slot is one DMA.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pack_kernel(a_ref, b_ref, packed_ref, base_ref, ok_ref):
+    a = a_ref[...].astype(jnp.int32)         # (page, Hkv, D2)
+    b = b_ref[...].astype(jnp.int32)
+    base = a[0]                              # (Hkv, D2)
+    da = a - base[None]
+    db = b - base[None]
+    ok = jnp.all((da >= -128) & (da <= 127)
+                 & (db >= -128) & (db <= 127))
+    packed = ((db & 0xFF) << 8) | (da & 0xFF)
+    packed_ref[...] = jax.lax.bitcast_convert_type(
+        packed.astype(jnp.uint16), jnp.int16)
+    base_ref[...] = base.astype(jnp.int16)
+    ok_ref[...] = jnp.full((1,), ok, jnp.int32)
+
+
+def _unpack_kernel(packed_ref, base_ref, a_ref, b_ref):
+    v = jax.lax.bitcast_convert_type(
+        packed_ref[...], jnp.uint16).astype(jnp.int32)
+    base = base_ref[...].astype(jnp.int32)
+    lo = ((v & 0xFF) ^ 0x80) - 0x80          # sign-extend low byte
+    hi = (((v >> 8) & 0xFF) ^ 0x80) - 0x80
+    a_ref[...] = (base[None] + lo).astype(jnp.int16)
+    b_ref[...] = (base[None] + hi).astype(jnp.int16)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pack_pair(page_a, page_b, *, interpret: bool = True):
+    """(page,Hkv,D2) int16 x2 -> (packed int16, base int16 (Hkv,D2), ok)."""
+    page, hkv, d2 = page_a.shape
+    packed, base, ok = pl.pallas_call(
+        _pack_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((page, hkv, d2), jnp.int16),
+            jax.ShapeDtypeStruct((hkv, d2), jnp.int16),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ),
+        interpret=interpret,
+    )(page_a, page_b)
+    return packed, base, ok[0] > 0
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def unpack_pair(packed, base, *, interpret: bool = True):
+    page, hkv, d2 = packed.shape
+    return pl.pallas_call(
+        _unpack_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((page, hkv, d2), jnp.int16),
+            jax.ShapeDtypeStruct((page, hkv, d2), jnp.int16),
+        ),
+        interpret=interpret,
+    )(packed, base)

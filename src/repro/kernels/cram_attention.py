@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: fused CRAM decode attention.
+
+Flash-decode over a CRAM-packed paged KV cache: the grid walks physical
+slots; each step DMAs one slot + its base strip into VMEM, checks the
+strip-tail marker (implicit metadata — no separate status fetch), inlines
+the int8->int16 BDI unpack for packed slots (one DMA yields TWO pages:
+the paper's bandwidth win), and accumulates online-softmax partials in
+VMEM scratch.  The final step normalizes into the output.
+
+The raw/packed selection is a jnp.where over both interpretations — on
+real TPU hardware this becomes a pl.when branch; in interpret mode the
+select keeps the kernel body simple and the numerics identical (noted in
+DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import MARKER_LANES
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, slot_ref, strip_ref, marker_ref, valid_ref,
+            out_ref, m_s, l_s, acc_s):
+    i = pl.program_id(0)
+    n = pl.num_programs(0)
+
+    @pl.when(i == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s[...], NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s[...])
+        acc_s[...] = jnp.zeros_like(acc_s[...])
+
+    q = q_ref[...].astype(jnp.float32)              # (Hq, D)
+    slot = slot_ref[0]                              # (page, Hkv, D2) int16
+    strip = strip_ref[0]                            # (Hkv, D2+2) int16
+    page, hkv, d2 = slot.shape
+    d = d2 // 2
+    hq = q.shape[0]
+    g = hq // hkv
+
+    # --- implicit metadata: compare the strip-tail marker lanes
+    tail = strip[:, -MARKER_LANES:].astype(jnp.int32)
+    tail_u = (tail[:, 0] & 0xFFFF) | ((tail[:, 1] & 0xFFFF) << 16)
+    expected = marker_ref[0]
+    is_packed = jnp.all(tail_u == expected)
+
+    # --- decode both interpretations, select by marker
+    base = strip[:, :d2].astype(jnp.int32)          # (Hkv, D2)
+    v_u = jax.lax.bitcast_convert_type(slot, jnp.uint16).astype(jnp.int32)
+    lo = ((v_u & 0xFF) ^ 0x80) - 0x80
+    hi = (((v_u >> 8) & 0xFF) ^ 0x80) - 0x80
+    page_a_packed = (base[None] + lo).astype(jnp.int16)
+    page_b_packed = (base[None] + hi).astype(jnp.int16)
+    page_a = jnp.where(is_packed, page_a_packed, slot)
+    page_b = jnp.where(is_packed, page_b_packed, jnp.zeros_like(slot))
+
+    kv = jnp.stack([page_a, page_b])                # (2, page, Hkv, D2)
+    kvf = jax.lax.bitcast_convert_type(kv, jnp.bfloat16).astype(jnp.float32)
+    k = kvf[..., :d].reshape(2 * page, hkv, d)
+    v = kvf[..., d:].reshape(2 * page, hkv, d)
+
+    valid = valid_ref[0]                            # (2,) int32 per page
+    tok = jax.lax.broadcasted_iota(jnp.int32, (2, page), 1)
+    mask = (tok < valid[:, None]).reshape(2 * page)
+
+    kg = jnp.repeat(k, g, axis=1)                   # (T, Hq, D)
+    vg = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("hd,thd->ht", q, kg,
+                   preferred_element_type=jnp.float32)
+    s = s * (1.0 / (d ** 0.5))
+    s = jnp.where(mask[None, :], s, NEG_INF)
+
+    m_prev = m_s[:, 0]
+    l_prev = l_s[:, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+    acc_s[...] = acc_s[...] * alpha[:, None] + jnp.einsum(
+        "ht,thd->hd", p, vg, preferred_element_type=jnp.float32)
+    m_s[...] = m_new[:, None]
+    l_s[...] = l_new[:, None]
+
+    @pl.when(i == n - 1)
+    def _finalize():
+        out_ref[...] = acc_s[...] / jnp.maximum(l_s[...][:, 0:1], 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cram_decode_attention(q, slots, strips, markers, valid, *,
+                          interpret: bool = True):
+    """q (Hq, D); slots (n,page,Hkv,D2) i16; strips (n,Hkv,D2+2) i16;
+    markers (n,) int32 (expected pack markers); valid (n,2) int32 valid
+    tokens per logical page.  Returns (Hq, D) float32."""
+    n, page, hkv, d2 = slots.shape
+    hq, d = q.shape
+    return pl.pallas_call(
+        _kernel,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((hq, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, page, hkv, d2), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, hkv, d2 + MARKER_LANES), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1, 2), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((hq, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((hq, d), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((hq, 1), jnp.float32),
+            pltpu.VMEM((hq, 1), jnp.float32),
+            pltpu.VMEM((hq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, slots, strips, markers, valid)

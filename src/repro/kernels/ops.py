@@ -1,0 +1,148 @@
+"""Public jit'd wrappers around the CRAM-KV Pallas kernels.
+
+`build_cram_cache` packs logical KV pages pairwise into physical slots
+(raw when the pair doesn't fit), writing base strips + in-band markers.
+`decode_attention` runs the fused marker-check/unpack/flash-decode kernel,
+vmapped over batch.  Both default to interpret mode off-TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref as _ref
+from .bdi_pack import pack_pair
+from .cram_attention import cram_decode_attention
+from .ref import MARKER_LANES, marker_to_lanes, slot_markers
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _pack_all(pages, markers_i16, *, interpret=True):
+    """pages: (2n, page, Hkv, D2) int16 -> (slots, strips, packed_mask)."""
+    a, b = pages[0::2], pages[1::2]
+    packed, base, ok = jax.vmap(
+        lambda x, y: pack_pair(x, y, interpret=interpret))(a, b)
+    slots = jnp.where(ok[:, None, None, None], packed, a)
+    n, _, hkv, d2 = slots.shape
+    strips = jnp.zeros((n, hkv, d2 + MARKER_LANES), jnp.int16)
+    strips = strips.at[:, :, :d2].set(base)
+    # in-band marker only when actually packed; raw slots keep a zero tail
+    tail = jnp.broadcast_to(markers_i16[:, None, :], (n, hkv, MARKER_LANES))
+    strips = strips.at[:, :, d2:].set(
+        jnp.where(ok[:, None, None], tail, 0))
+    return slots, strips, ok
+
+
+def build_cram_cache(pages, *, key: int = 0x5EED, interpret=None):
+    """Pack logical pages (2n, page, Hkv, D2) int16 into a CRAM cache.
+
+    Returns dict(slots, strips, markers (int32), packed_mask, pages_valid):
+    for raw pairs, the odd page is left unpacked and must live in its own
+    slot — callers lay pages out so hot pairs are adjacent (the paper's
+    restricted mapping).  Here the second page of a non-fitting pair is
+    stored raw in the *next* slot, mirroring the uncompressed layout.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    n2, page, hkv, d2 = pages.shape
+    assert n2 % 2 == 0
+    markers = slot_markers(n2 // 2, key)
+    mk_lanes = jnp.asarray(marker_to_lanes(markers))
+    slots, strips, ok = _pack_all(pages, mk_lanes, interpret=interpret)
+    # raw layout for the non-fitting pairs: two slots, one page each
+    raw_b = pages[1::2]
+    slots_b = jnp.where(ok[:, None, None, None],
+                        jnp.zeros_like(raw_b), raw_b)
+    return {
+        "slots": slots,
+        "slots_overflow": slots_b,      # page B of unpacked pairs
+        "strips": strips,
+        "markers": jnp.asarray(markers.view(np.int32)),
+        "packed_mask": ok,
+    }
+
+
+def physical_view(cache, valid_per_page):
+    """Flatten the cache to the slot list the decode kernel walks.
+
+    Packed pair -> 1 slot holding 2 pages; raw pair -> 2 slots (A, B).
+    Returns (slots, strips, markers, valid (n,2)) covering every page.
+    """
+    slots = cache["slots"]
+    over = cache["slots_overflow"]
+    strips = cache["strips"]
+    markers = cache["markers"]
+    ok = cache["packed_mask"]
+    n, page, hkv, d2 = slots.shape
+    vp = valid_per_page.reshape(n, 2)
+    # slot stream: [slot_i, overflow_i] for every pair; overflow slots of
+    # packed pairs carry zero valid tokens (masked out).
+    all_slots = jnp.stack([slots, over], 1).reshape(2 * n, page, hkv, d2)
+    zstrip = jnp.zeros_like(strips)
+    all_strips = jnp.stack([strips, zstrip], 1).reshape(
+        2 * n, hkv, d2 + MARKER_LANES)
+    all_markers = jnp.stack([markers, markers], 1).reshape(2 * n)
+    v_packed = jnp.stack([vp[:, 0], vp[:, 1]], 1)          # in slot A
+    v_raw_a = jnp.stack([vp[:, 0], jnp.zeros_like(vp[:, 0])], 1)
+    v_raw_b = jnp.stack([vp[:, 1], jnp.zeros_like(vp[:, 1])], 1)
+    va = jnp.where(ok[:, None], v_packed, v_raw_a)
+    vb = jnp.where(ok[:, None], jnp.zeros_like(v_raw_b), v_raw_b)
+    valid = jnp.stack([va, vb], 1).reshape(2 * n, 2)
+    return all_slots, all_strips, all_markers, valid
+
+
+def decode_attention(q, cache, valid_per_page, *, interpret=None):
+    """q: (B, Hq, D) bf16; returns (B, Hq, D) float32."""
+    if interpret is None:
+        interpret = default_interpret()
+    slots, strips, markers, valid = physical_view(cache, valid_per_page)
+    fn = lambda qi: cram_decode_attention(
+        qi, slots, strips, markers, valid, interpret=interpret)
+    return jax.vmap(fn)(q)
+
+
+def decode_attention_ref(q, cache, valid_per_page):
+    """Oracle path (pure jnp) over the same physical cache view."""
+    slots, strips, markers, valid = physical_view(cache, valid_per_page)
+    valid_flat = valid.reshape(-1)
+    fn = lambda qi: _ref.cram_decode_attention_ref(
+        qi, slots, strips,
+        jnp.asarray(np.asarray(markers).view(np.uint32)), valid_flat)
+    return jax.vmap(fn)(q)
+
+
+def hbm_bytes_moved(cache, valid_per_page) -> dict:
+    """Bandwidth accounting: bytes a decode step DMAs with/without CRAM.
+
+    raw  : one slot per live page (uncompressed layout, no strips)
+    CRAM : packed pair -> ONE slot + strip serves both pages (the paper's
+           one-access-two-lines win); unpacked pair -> one slot + strip per
+           live page (the strip read is the in-band metadata overhead,
+           ~1/page of a slot).
+    """
+    slots = cache["slots"]
+    ok = np.asarray(cache["packed_mask"])
+    n, page, hkv, d2 = slots.shape
+    slot_bytes = page * hkv * d2 * 2
+    strip_bytes = hkv * (d2 + MARKER_LANES) * 2
+    v = np.asarray(valid_per_page).reshape(n, 2)
+    live = v > 0
+    raw = int(live.sum()) * slot_bytes
+    cram = 0
+    for i in range(n):
+        if not live[i].any():
+            continue
+        if ok[i]:
+            cram += slot_bytes + strip_bytes
+        else:
+            cram += int(live[i].sum()) * (slot_bytes + strip_bytes)
+    return {"raw_bytes": raw, "cram_bytes": cram,
+            "saving": 1.0 - cram / max(raw, 1)}

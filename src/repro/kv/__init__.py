@@ -1,0 +1,5 @@
+"""Paged KV cache with CRAM packing (serving substrate)."""
+
+from .cache import CRAMKVCache
+
+__all__ = ["CRAMKVCache"]

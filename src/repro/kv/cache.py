@@ -1,0 +1,145 @@
+"""CRAM-KV: paged serving cache with marker-packed page pairs.
+
+The serving-side embodiment of the paper (DESIGN.md §3): logical KV pages
+pack pairwise into physical slots when BDI-compressible (kernels/bdi_pack),
+interpretation is by in-band marker (kernels/cram_attention), a
+last-compressibility predictor (the LLP analog, indexed by page-pair)
+decides whether the overflow slot needs to be fetched at all, and a
+Dynamic-CRAM counter turns packing off when the data never compresses.
+
+Bandwidth accounting (per decode step):
+  raw        : one slot DMA per live page
+  CRAM       : one slot DMA per packed PAIR (2 pages), plus the strip;
+               unpacked pairs cost two slots; mispredicted pairs cost a
+               second access (the paper's LLP-miss re-probe)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.dynamic import COUNTER_INIT, COUNTER_MAX, ENABLE_THRESHOLD
+from ..kernels import ops as kops
+
+
+@dataclass
+class KVStats:
+    raw_bytes: int = 0
+    cram_bytes: int = 0
+    packed_pairs: int = 0
+    raw_pairs: int = 0
+    predictor_hits: int = 0
+    predictor_misses: int = 0
+    pack_attempts: int = 0
+    pack_skipped_dynamic: int = 0
+
+
+class CRAMKVCache:
+    """Single-sequence paged KV cache (batch = one cache per sequence)."""
+
+    def __init__(self, max_pages: int, page: int, n_kv: int, head_dim: int,
+                 *, policy: str = "dynamic", key: int = 0x5EED):
+        assert max_pages % 2 == 0
+        self.page, self.n_kv, self.d = page, n_kv, head_dim
+        self.d2 = 2 * head_dim
+        self.max_pages = max_pages
+        self.pages = np.zeros((max_pages, page, n_kv, self.d2), np.int16)
+        self.tokens = 0
+        self.policy = policy
+        self.key = key
+        self.counter = COUNTER_INIT
+        self.predictor = np.zeros(max_pages // 2, bool)  # last packability
+        self.stats = KVStats()
+        self._cache = None
+        self._dirty = True
+
+    # ----------------------------------------------------------- appends
+    def append(self, k, v):
+        """k/v: (T, n_kv, d) bf16 new tokens."""
+        k = np.asarray(jnp.asarray(k, jnp.bfloat16).view(jnp.int16))
+        v = np.asarray(jnp.asarray(v, jnp.bfloat16).view(jnp.int16))
+        T = k.shape[0]
+        kv = np.concatenate([k, v], axis=-1)          # (T, n_kv, d2)
+        for t in range(T):
+            p, o = divmod(self.tokens, self.page)
+            assert p < self.max_pages, "cache full"
+            self.pages[p, o] = kv[t]
+            self.tokens += 1
+        self._dirty = True
+
+    @property
+    def n_pages(self) -> int:
+        return (self.tokens + self.page - 1) // self.page
+
+    def valid_per_page(self) -> np.ndarray:
+        full, rem = divmod(self.tokens, self.page)
+        v = np.zeros(2 * ((self.n_pages + 1) // 2), np.int32)
+        v[:full] = self.page
+        if rem:
+            v[full] = rem
+        return v
+
+    # ------------------------------------------------------------- packing
+    def _compression_enabled(self) -> bool:
+        if self.policy == "off":
+            return False
+        if self.policy == "static":
+            return True
+        return self.counter >= ENABLE_THRESHOLD
+
+    def repack(self):
+        """(Re)build the physical view; called when pages changed."""
+        n = 2 * ((self.n_pages + 1) // 2)
+        pages = jnp.asarray(self.pages[:n])
+        self.stats.pack_attempts += n // 2
+        if self._compression_enabled():
+            cache = kops.build_cram_cache(pages, key=self.key)
+        else:
+            self.stats.pack_skipped_dynamic += n // 2
+            cache = kops.build_cram_cache(pages, key=self.key)
+            cache["packed_mask"] = jnp.zeros_like(cache["packed_mask"])
+            cache["slots"] = pages[0::2]
+            cache["slots_overflow"] = pages[1::2]
+            cache["strips"] = jnp.zeros_like(cache["strips"])
+        self._cache = cache
+        self._dirty = False
+
+        ok = np.asarray(cache["packed_mask"])
+        # predictor bookkeeping (LLP analog: last observed packability)
+        hits = int((self.predictor[: len(ok)] == ok).sum())
+        self.stats.predictor_hits += hits
+        self.stats.predictor_misses += len(ok) - hits
+        # dynamic counter: benefit = packed pairs (halved DMA), cost =
+        # pack work for pairs that failed
+        if self.policy == "dynamic":
+            self.counter = int(np.clip(
+                self.counter + int(ok.sum()) - int((~ok).sum()),
+                0, COUNTER_MAX))
+        self.predictor[: len(ok)] = ok
+        self.stats.packed_pairs += int(ok.sum())
+        self.stats.raw_pairs += int((~ok).sum())
+
+    # -------------------------------------------------------------- attend
+    def attend(self, q):
+        """q: (B, Hq, d) -> (B, Hq, d) float32 + bandwidth accounting."""
+        if self._dirty:
+            self.repack()
+        valid = jnp.asarray(self.valid_per_page())
+        out = kops.decode_attention(jnp.asarray(q), self._cache, valid)
+        bw = kops.hbm_bytes_moved(self._cache, valid)
+        self.stats.raw_bytes += bw["raw_bytes"]
+        self.stats.cram_bytes += bw["cram_bytes"]
+        return out
+
+    def attend_ref(self, q):
+        if self._dirty:
+            self.repack()
+        valid = jnp.asarray(self.valid_per_page())
+        return kops.decode_attention_ref(jnp.asarray(q), self._cache, valid)
+
+    def saving(self) -> float:
+        return 1.0 - self.stats.cram_bytes / max(self.stats.raw_bytes, 1)

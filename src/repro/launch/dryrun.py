@@ -1,0 +1,262 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count on first
+initialization, and the production meshes need 512 placeholder CPU devices.
+(Do NOT import this module from tests — run it as a script.)
+
+For each cell we AOT-compile the appropriate step function against
+ShapeDtypeStruct inputs (zero allocation), then record:
+  * memory_analysis()    — proves the cell fits per-device HBM
+  * cost_analysis()      — HLO FLOPs / bytes for the roofline terms
+  * collective operand bytes parsed from the optimized HLO
+into experiments/dryrun/<arch>__<shape>__<mesh>[__<variant>].json.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3_8b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--force]
+  python -m repro.launch.dryrun --arch ... --shape ... --variant opt_v1
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from .. import configs
+from ..models import SHAPES_BY_NAME, STANDARD_SHAPES, count_params, active_params
+from ..runtime.sharding import RuleSet, activation_sharding
+from .hlo_analysis import analyze_compiled
+from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS, make_production_mesh, mesh_chip_count
+from .steps import build_cell
+from .variants import apply_variant
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+# long_500k runs only for sub-quadratic (SSM/hybrid) archs; full-attention
+# archs skip it (noted in DESIGN.md §Arch-applicability).
+LONG_OK_FAMILIES = ("ssm", "hybrid")
+
+
+def _with_supers(cfg, k: int, seq_len: int):
+    """Config scaled to k super-blocks, fully unrolled, for cost probes.
+
+    Attention/xent chunk counts are capped for long sequences so the
+    unrolled probe HLO stays compilable; the matmul volume (FLOPs) is
+    chunking-invariant, bytes-accessed is mildly optimistic for the big
+    chunks (noted in EXPERIMENTS.md §Roofline).
+    """
+    from ..models.transformer import super_block_spec
+
+    kw = {"microbatches": 1, "unroll": True, "remat": False}
+    if seq_len > 8192:
+        kw.update(
+            attn_q_chunk=max(cfg.attn_q_chunk, seq_len // 8),
+            attn_k_chunk=max(cfg.attn_k_chunk, seq_len // 4),
+            xent_chunk=max(cfg.xent_chunk, 4096),
+            # SSD: cap unrolled chunk count at 32. The O(c^2) intra-chunk
+            # term inflates <= (seq/32)/ssm_chunk x, making SSM prefill
+            # compute terms upper bounds (EXPERIMENTS.md §Roofline note).
+            ssm_chunk=max(cfg.ssm_chunk, seq_len // 16),
+        )
+    if cfg.family == "encdec":
+        kw.update(n_layers=k, enc_layers=k, dec_layers=k)
+    else:
+        per = len([b for b in super_block_spec(cfg) if b != "shared"])
+        kw.update(n_layers=k * per)
+    return cfg.replace(**kw)
+
+
+def probe_costs(cfg, spec, mesh, rules, opts=None) -> dict:
+    """Extrapolate true per-step FLOPs/bytes/collective-bytes.
+
+    XLA cost_analysis counts a lax.scan body ONCE regardless of trip count,
+    so the full-config numbers under-report by ~n_layers (and microbatches).
+    Every per-step quantity is linear in the super-block count NS:
+    p(NS) = a + b*NS.  We lower NS=2 and NS=4 probes (microbatches=1),
+    solve for (a, b), and evaluate at the real NS.  Exact for everything
+    that scales with depth, including the ZeRO optimizer update.
+    """
+    from ..models.transformer import n_supers as _ns
+    from .steps import build_cell as _bc
+
+    def measure(k):
+        c = _with_supers(cfg, k, spec.seq_len)
+        fn, shapes, shards, _ = _bc(c, spec, mesh, rules,
+                                    fsdp=(opts or {}).get("fsdp", True))
+        donate = (2,) if (opts or {}).get("donate_cache") \
+            and spec.kind == "decode" else ()
+        with mesh, activation_sharding(mesh, rules):
+            compiled = jax.jit(fn, in_shardings=shards,
+                               donate_argnums=donate).lower(
+                *shapes).compile()
+        info = analyze_compiled(compiled)
+        coll = info.get("collectives", {}).get("bytes_by_type", {})
+        return (info.get("flops", 0.0), info.get("bytes_accessed", 0.0),
+                coll)
+
+    if cfg.family == "encdec":
+        ns_full = cfg.enc_layers
+    else:
+        ns_full = _ns(cfg)
+    f2, b2, c2 = measure(2)
+    f4, b4, c4 = measure(4)
+    lin = lambda p2, p4: p2 + (p4 - p2) / 2.0 * (ns_full - 2)
+    coll = {k: lin(c2.get(k, 0), c4.get(k, 0)) for k in set(c2) | set(c4)}
+    mb = max(1, cfg.microbatches) if spec.kind == "train" else 1
+    return {
+        "ns_full": ns_full,
+        "flops": lin(f2, f4),
+        "bytes_accessed": lin(b2, b4),
+        "collective_bytes_by_type": coll,
+        # mb>1 repeats the fwd/bwd FSDP gathers per microbatch
+        "collective_bytes_total": sum(coll.values()),
+        "collective_bytes_total_mb_scaled": sum(coll.values()) * mb,
+        "microbatches": mb,
+    }
+
+
+def cell_applicable(cfg, shape_name: str) -> bool:
+    if shape_name == "long_500k":
+        return cfg.family in LONG_OK_FAMILIES
+    return True
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             variant: str = "base", force: bool = False) -> dict:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    tag = f"{arch}__{shape_name}__{mesh_name}" + (
+        f"__{variant}" if variant != "base" else "")
+    out_path = OUT_DIR / f"{tag}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    cfg = configs.get(arch)
+    spec = SHAPES_BY_NAME[shape_name]
+    if not cell_applicable(cfg, shape_name):
+        rec = {"tag": tag, "skipped": True,
+               "reason": "full-attention arch: long_500k needs "
+                         "sub-quadratic attention (DESIGN.md)"}
+        OUT_DIR.mkdir(parents=True, exist_ok=True)
+        out_path.write_text(json.dumps(rec, indent=2))
+        return rec
+
+    cfg, rules, opts = apply_variant(cfg, spec, variant)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh_chip_count(mesh)
+    t0 = time.time()
+    rec = {
+        "tag": tag, "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "variant": variant, "chips": chips, "family": cfg.family,
+        "params": count_params(cfg), "active_params": active_params(cfg),
+        "seq_len": spec.seq_len, "global_batch": spec.global_batch,
+        "kind": spec.kind,
+    }
+    try:
+        fn, arg_shapes, in_shardings, out_shardings = build_cell(
+            cfg, spec, mesh, rules, fsdp=opts.get("fsdp", True))
+        donate = (2,) if opts.get("donate_cache") \
+            and spec.kind == "decode" else ()
+        with mesh, activation_sharding(mesh, rules):
+            lowered = jax.jit(fn, in_shardings=in_shardings,
+                              donate_argnums=donate).lower(
+                *arg_shapes)
+            t_lower = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time()
+        try:
+            print(compiled.memory_analysis())
+        except Exception:
+            pass
+        try:
+            print({k: v for k, v in (compiled.cost_analysis() or {}).items()
+                   if k in ("flops", "bytes accessed")})
+        except Exception:
+            pass
+        rec.update(analyze_compiled(compiled))
+        rec["lower_s"] = round(t_lower - t0, 2)
+        rec["compile_s"] = round(t_compile - t_lower, 2)
+        rec["ok"] = True
+        # scan bodies are cost-counted once: extrapolate true per-step costs
+        try:
+            if os.environ.get("REPRO_SKIP_PROBES"):
+                raise RuntimeError("probes disabled (REPRO_SKIP_PROBES)")
+            probe = probe_costs(cfg, spec, mesh, rules, opts)
+        except Exception as pe:  # compile proof stands; roofline is flagged
+            rec["probe_error"] = repr(pe)[:300]
+            probe = {
+                "flops": rec.get("flops", 0.0),
+                "bytes_accessed": rec.get("bytes_accessed", 0.0),
+                "collective_bytes_total_mb_scaled": rec.get(
+                    "collectives", {}).get("total_bytes", 0),
+                "collective_bytes_by_type": rec.get(
+                    "collectives", {}).get("bytes_by_type", {}),
+                "note": "probe failed: scan-undercounted fallback numbers",
+            }
+        rec["extrapolated"] = probe
+        flops = probe["flops"]
+        bytes_acc = probe["bytes_accessed"]
+        coll = probe["collective_bytes_total_mb_scaled"]
+        rec["roofline"] = {
+            "compute_s": flops / PEAK_FLOPS,
+            "memory_s": bytes_acc / HBM_BW,
+            "collective_s": coll / ICI_BW,
+        }
+        terms = rec["roofline"]
+        rec["roofline"]["dominant"] = max(
+            ("compute_s", "memory_s", "collective_s"),
+            key=lambda k: terms[k])
+    except Exception as e:
+        rec["ok"] = False
+        rec["error"] = repr(e)
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(rec, indent=2))
+    status = "OK" if rec.get("ok") else ("SKIP" if rec.get("skipped")
+                                         else "FAIL")
+    print(f"[{status}] {tag} lower={rec.get('lower_s')}s "
+          f"compile={rec.get('compile_s')}s "
+          f"dominant={rec.get('roofline', {}).get('dominant')}")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--variant", default="base")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    if args.all:
+        failures = 0
+        for arch in configs.ARCHS:
+            for spec in STANDARD_SHAPES:
+                for mp in meshes:
+                    rec = run_cell(arch, spec.name, mp, args.variant,
+                                   args.force)
+                    failures += 0 if rec.get("ok") or rec.get("skipped") \
+                        else 1
+        print(f"dry-run sweep complete; failures={failures}")
+        raise SystemExit(1 if failures else 0)
+
+    assert args.arch and args.shape, "--arch and --shape (or --all)"
+    for mp in meshes:
+        rec = run_cell(configs.canonical(args.arch), args.shape, mp,
+                       args.variant, args.force)
+        if not (rec.get("ok") or rec.get("skipped")):
+            print(rec.get("traceback", rec.get("error")))
+            raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""Extract roofline terms from a compiled XLA executable.
+
+collective_bytes is NOT in cost_analysis(): we parse the optimized HLO text
+and sum operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute (including the -start async variants).
+"""
+
+from __future__ import annotations
+
+import re
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f32": 4, "s32": 4, "u32": 4,
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\("
+)
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective data volume, parsed from the optimized HLO.
+
+    Post-optimization HLO prints operands without inline shapes, so we use
+    the RESULT shape: equal to the operand volume for all-reduce /
+    all-to-all / collective-permute, equal to the full gathered volume for
+    all-gather (what moves on the wire up to (g-1)/g), and multiplied by
+    the group size for reduce-scatter (result is the scattered slice).
+    Only op definitions (lines with '=') are counted; -done ops and loop
+    condition references don't match the opcode( pattern.
+    """
+    out = {c: 0 for c in COLLECTIVES}
+    counts = {c: 0 for c in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m or "=" not in line[: m.start()]:
+            continue
+        op = m.group(1)
+        result_part = line[: m.start()].split("=", 1)[1]
+        total = sum(shape_bytes(d, s)
+                    for d, s in _SHAPE_RE.findall(result_part))
+        if op == "reduce-scatter":
+            g = _GROUPS_RE.search(line)
+            if g:
+                total *= int(g.group(2))
+        out[op] += total
+        counts[op] += 1
+    return {
+        "bytes_by_type": out,
+        "counts_by_type": counts,
+        "total_bytes": sum(out.values()),
+        "total_ops": sum(counts.values()),
+    }
+
+
+def analyze_compiled(compiled) -> dict:
+    """cost_analysis + memory_analysis + collective bytes, best-effort."""
+    info: dict = {}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        info["cost_analysis"] = {
+            k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float)) and (
+                "flops" in k or "bytes" in k or "utilization" in k.lower())
+        }
+        info["flops"] = float(ca.get("flops", 0.0))
+        info["bytes_accessed"] = float(ca.get("bytes accessed", 0.0))
+    except Exception as e:  # pragma: no cover
+        info["cost_analysis_error"] = repr(e)
+    try:
+        ma = compiled.memory_analysis()
+        for attr in (
+            "argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "host_argument_size_in_bytes",
+        ):
+            if hasattr(ma, attr):
+                info.setdefault("memory_analysis", {})[attr] = int(
+                    getattr(ma, attr))
+    except Exception as e:  # pragma: no cover
+        info["memory_analysis_error"] = repr(e)
+    try:
+        text = compiled.as_text()
+        info["collectives"] = collective_bytes(text)
+        info["hlo_bytes"] = len(text)
+    except Exception as e:  # pragma: no cover
+        info["collectives_error"] = repr(e)
+    return info

@@ -1,0 +1,40 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (not module-level constants) so importing this module
+never touches jax device state — smoke tests and benchmarks see 1 CPU
+device; only dryrun.py (which sets XLA_FLAGS before any jax import) sees the
+512 placeholder devices.
+
+Target hardware: TPU v5e pods — 16x16 = 256 chips/pod, 2 pods = 512 chips.
+  peak bf16:      197 TFLOP/s per chip
+  HBM bandwidth:  819 GB/s per chip (16 GB capacity)
+  ICI:            ~50 GB/s per link
+"""
+
+from __future__ import annotations
+
+import jax
+
+PEAK_FLOPS = 197e12        # bf16, per chip
+HBM_BW = 819e9             # bytes/s per chip
+HBM_BYTES = 16 * 2**30     # per chip
+ICI_BW = 50e9              # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Tiny mesh over the real local devices (tests / CPU training)."""
+    n = len(jax.devices())
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def mesh_chip_count(mesh) -> int:
+    import numpy as np
+
+    return int(np.prod(list(mesh.shape.values())))

@@ -1,0 +1,104 @@
+"""Serving launcher: batched greedy decoding + CRAM-KV bandwidth accounting.
+
+Runs a reduced model end-to-end: prefill via teacher-forced forward, then
+step decoding with the dense cache, while mirroring one layer's KV stream
+through the CRAM-KV paged cache (kernels path) to report the compression /
+bandwidth profile of real decode traffic.
+
+  python -m repro.launch.serve --arch phi4_mini_3_8b --smoke \
+      --batch 4 --prompt-len 32 --gen 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import configs
+from ..kv import CRAMKVCache
+from ..models import build, smoke_config
+from .steps import make_serve_step
+from .train import PRESETS
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="phi4_mini_3_8b")
+    ap.add_argument("--preset", default=None)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--kv-policy", default="dynamic",
+                    choices=["dynamic", "static", "off"])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = (PRESETS[args.preset] if args.preset
+           else smoke_config(configs.get(configs.canonical(args.arch))))
+    model = build(cfg)
+    params, _ = model.init(jax.random.key(args.seed))
+    rng = np.random.default_rng(args.seed)
+    B, P, G = args.batch, args.prompt_len, args.gen
+    max_len = P + G
+    prompts = rng.integers(0, cfg.vocab, (B, P)).astype(np.int32)
+
+    serve_step = jax.jit(make_serve_step(model))
+    cache = model.init_cache(B, max_len)
+
+    # prefill: feed prompt tokens one by one (correct for every family)
+    tok = jnp.asarray(prompts[:, :1])
+    t0 = time.time()
+    for i in range(P - 1):
+        _, cache = serve_step(params, jnp.asarray(prompts[:, i:i + 1]),
+                              cache, jnp.int32(i))
+    generated = []
+    tok = jnp.asarray(prompts[:, -1:])
+    for i in range(P - 1, P + G - 1):
+        tok, cache = serve_step(params, tok, cache, jnp.int32(i))
+        generated.append(np.asarray(tok)[:, 0])
+    wall = time.time() - t0
+    gen = np.stack(generated, 1)
+
+    # CRAM-KV mirror of one attention layer's real KV traffic
+    page = 16
+    kv_stats = None
+    if cfg.family in ("dense", "moe", "vlm", "hybrid"):
+        hkv, hd = cfg.n_kv_heads, cfg.hd
+        kvc = CRAMKVCache(max_pages=2 * ((max_len // page) + 1), page=page,
+                          n_kv=hkv, head_dim=hd, policy=args.kv_policy)
+        # real K/V of layer 0 for sequence 0 via the model's own cache
+        spec_key = sorted(k for k in cache if k.startswith("b"))[0]
+        kcache = np.asarray(cache[spec_key]["attn"]["k"])[0, 0]  # (T,hkv,hd)
+        vcache = np.asarray(cache[spec_key]["attn"]["v"])[0, 0]
+        kvc.append(kcache[: P + G - 1], vcache[: P + G - 1])
+        q = jnp.asarray(rng.standard_normal((1, cfg.n_heads, hd)),
+                        jnp.float32)
+        out_k = kvc.attend(q)
+        out_r = kvc.attend_ref(q)
+        err = float(jnp.max(jnp.abs(out_k - out_r)))
+        kv_stats = {
+            "packed_pairs": kvc.stats.packed_pairs,
+            "raw_pairs": kvc.stats.raw_pairs,
+            "bandwidth_saving": round(kvc.saving(), 4),
+            "kernel_vs_oracle_err": err,
+            "policy": args.kv_policy,
+        }
+
+    out = {
+        "name": cfg.name, "batch": B, "prompt_len": P, "generated": G,
+        "tokens_per_s": round(B * G / wall, 1),
+        "sample": gen[0][:16].tolist(),
+        "cram_kv": kv_stats,
+    }
+    print(json.dumps(out, indent=2))
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Pure-JAX model zoo: dense/MoE/SSM/hybrid/enc-dec/VLM backbones."""
+
+from .common import ModelConfig, smoke_config
+from .zoo import (
+    Model,
+    SHAPES_BY_NAME,
+    STANDARD_SHAPES,
+    ShapeSpec,
+    active_params,
+    build,
+    cache_specs,
+    count_params,
+    input_specs,
+)
+
+__all__ = [
+    "Model", "ModelConfig", "ShapeSpec", "STANDARD_SHAPES", "SHAPES_BY_NAME",
+    "active_params", "build", "cache_specs", "count_params", "input_specs",
+    "smoke_config",
+]

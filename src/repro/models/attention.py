@@ -1,0 +1,215 @@
+"""Blockwise (flash-style) attention in pure JAX.
+
+Memory-bounded attention: scores are only ever materialized for one
+(q_chunk x k_chunk) block per step of a lax.scan, with an online-softmax
+running (max, denom, acc) state.  This is what lets prefill_32k and
+long-context shapes lower without a (B, H, S, S) buffer.
+
+GQA is computed natively (no KV head repetition): q is viewed as
+(B, S, n_kv, group, hd) against k/v (B, T, n_kv, hd).
+
+The baseline causal path iterates every (q,k) block pair and masks — the
+block-triangular schedule that skips fully-masked blocks is a §Perf
+optimization variant (see launch/dryrun.py --variant flags).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _block_attend(q, k, v, bias):
+    """One block: q (B,H,qc,D), k/v (B,kc,H,D), bias (qc,kc) or None.
+
+    Returns online-softmax pieces: m (B,H,qc), l (B,H,qc), o (B,H,qc,D).
+    """
+    s = jnp.einsum("bhqd,bkhd->bhqk", q, k).astype(jnp.float32)
+    if bias is not None:
+        s = s + bias
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bhqd", p.astype(v.dtype), v)
+    return m, l, o.astype(jnp.float32)
+
+
+def blockwise_attention(
+    q, k, v, *, causal: bool, q_offset=0, k_offset=0,
+    q_chunk: int = 512, k_chunk: int = 1024, kv_length=None,
+    unroll: bool = False,
+):
+    """q: (B,S,Hq,D), k/v: (B,T,Hkv,D) -> (B,S,Hq,D).
+
+    The q-head dimension is kept whole (TP shards it); KV heads are expanded
+    to q heads chunk-by-chunk inside the scan (a broadcast for the local
+    shard, never a materialized (B,T,Hq,D) buffer).  Each q-chunk body is
+    rematerialized in the backward pass, so peak memory stays
+    O(q_chunk x k_chunk) scores per step — flash-attention-style.
+
+    q_offset/k_offset: absolute position of the first q/k element (decode &
+    chunked prefill).  kv_length: optional valid KV prefix length (decode
+    against a preallocated cache).
+    """
+    B, S, Hq, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    assert Hq % Hkv == 0
+    G = Hq // Hkv
+    scale = 1.0 / (D ** 0.5)
+    q_chunk = min(q_chunk, S)
+    k_chunk = min(k_chunk, T)
+    assert S % q_chunk == 0 and T % k_chunk == 0, (S, q_chunk, T, k_chunk)
+    nq, nk = S // q_chunk, T // k_chunk
+
+    qb = (q * scale).reshape(B, nq, q_chunk, Hq, D)
+    qb = qb.transpose(1, 0, 3, 2, 4)              # (nq, B, Hq, qc, D)
+    kb = k.reshape(B, nk, k_chunk, Hkv, D).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nk, k_chunk, Hkv, D).transpose(1, 0, 2, 3, 4)
+
+    q_pos = jnp.arange(S).reshape(nq, q_chunk) + q_offset
+    k_pos = jnp.arange(T).reshape(nk, k_chunk) + k_offset
+
+    def per_qchunk(qc, qpos):
+        def kstep(carry, xs):
+            m, l, o = carry
+            kc, vc, kpos = xs                     # (B, kc, Hkv, D)
+            if G > 1:  # expand grouped KV to the (sharded) q heads
+                kc = jnp.repeat(kc, G, axis=2)
+                vc = jnp.repeat(vc, G, axis=2)
+            bias = jnp.zeros((q_chunk, k_chunk), jnp.float32)
+            if causal:
+                bias = jnp.where(
+                    qpos[:, None] >= kpos[None, :], 0.0, NEG_INF)
+            if kv_length is not None:
+                bias = bias + jnp.where(
+                    kpos[None, :] < kv_length, 0.0, NEG_INF)
+            bm, bl, bo = _block_attend(qc, kc, vc, bias)
+            m_new = jnp.maximum(m, bm)
+            alpha = jnp.exp(m - m_new)
+            beta = jnp.exp(bm - m_new)
+            l_new = l * alpha + bl * beta
+            o_new = o * alpha[..., None] + bo * beta[..., None]
+            return (m_new, l_new, o_new), None
+
+        m0 = jnp.full((B, Hq, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hq, q_chunk), jnp.float32)
+        o0 = jnp.zeros((B, Hq, q_chunk, D), jnp.float32)
+        if unroll:
+            carry = (m0, l0, o0)
+            for j in range(nk):
+                carry, _ = kstep(carry, (kb[j], vb[j], k_pos[j]))
+            m, l, o = carry
+        else:
+            (m, l, o), _ = jax.lax.scan(kstep, (m0, l0, o0),
+                                        (kb, vb, k_pos))
+        out = o / jnp.maximum(l, 1e-30)[..., None]
+        return out  # (B, Hq, qc, D)
+
+    if unroll:
+        outs = jnp.stack([per_qchunk(qb[i], q_pos[i]) for i in range(nq)])
+    else:
+        body = jax.checkpoint(per_qchunk)
+        outs = jax.lax.map(lambda xs: body(*xs), (qb, q_pos))
+    # (nq, B, Hq, qc, D) -> (B, S, Hq, D)
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(B, S, Hq, D)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, length, k_chunk: int = 2048,
+                     unroll: bool = False):
+    """Single-token decode: q (B,Hq,D) against cache (B,T,Hkv,D).
+
+    `length` is the number of valid cache positions (scalar or (B,)).
+    Works under pjit with the cache sharded along T (sequence parallel):
+    the reductions become cross-shard collectives automatically.
+    """
+    B, Hq, D = q.shape
+    out = blockwise_attention(
+        q[:, None], k_cache, v_cache, causal=False,
+        q_chunk=1, k_chunk=min(k_chunk, k_cache.shape[1]),
+        kv_length=length, unroll=unroll,
+    )
+    return out[:, 0]
+
+
+def attention_init(ini, cfg, prefix_axes=(), d_model=None):
+    """Projection weights for (GQA) self/cross attention."""
+    d = d_model or cfg.d_model
+    hd, Hq, Hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    ax = lambda *a: prefix_axes + a
+    p = {
+        "wq": ini.normal((d, Hq * hd), ax("embed", "heads")),
+        "wk": ini.normal((d, Hkv * hd), ax("embed", "kv_heads")),
+        "wv": ini.normal((d, Hkv * hd), ax("embed", "kv_heads")),
+        "wo": ini.normal((Hq * hd, d), ax("heads", "embed")),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = ini.ones((hd,), ax("head_dim"))
+        p["k_norm"] = ini.ones((hd,), ax("head_dim"))
+    return p
+
+
+def attention_apply(
+    p, cfg, x, *, kv_x=None, causal=True, positions=None, kv_positions=None,
+    rope=True, cache=None, cache_index=None,
+):
+    """GQA attention. x: (B,S,D).
+
+    kv_x: source for K/V (cross-attention) — defaults to x.
+    cache: optional dict {k: (B,T,Hkv,hd), v: ...} for decode; cache_index is
+      the write position (scalar int32). Returns (out, new_cache).
+    """
+    from .layers import apply_rope, rms_norm
+
+    B, S, _ = x.shape
+    hd, Hq, Hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    kv_src = x if kv_x is None else kv_x
+    Tkv = kv_src.shape[1]
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, S, Hq, hd)
+    k = (kv_src @ p["wk"].astype(x.dtype)).reshape(B, Tkv, Hkv, hd)
+    v = (kv_src @ p["wv"].astype(x.dtype)).reshape(B, Tkv, Hkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    if kv_positions is None:
+        # self-attention: K/V positions are the same tokens' positions
+        # (crucial at decode time, where S==1 but position==index)
+        kv_positions = positions if kv_x is None else \
+            jnp.arange(Tkv)[None, :]
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, kv_positions, cfg.rope_theta)
+
+    if cache is None and cfg.attn_gather:
+        # Megatron-SP: one explicit seq gather here; all blockwise chunks
+        # then slice locally (heads stay model-sharded)
+        from ..runtime.sharding import constrain
+
+        q = constrain(q, ("batch", None, "heads", None))
+        k = constrain(k, ("batch", None, "kv_heads", None))
+        v = constrain(v, ("batch", None, "kv_heads", None))
+
+    new_cache = None
+    if cache is not None:
+        # decode: append current K/V at cache_index, attend over the prefix
+        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, cache_index, 1)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, cache_index, 1)
+        new_cache = {"k": kc, "v": vc}
+        out = decode_attention(
+            q[:, 0], kc, vc, length=cache_index + S,
+            k_chunk=cfg.attn_k_chunk, unroll=cfg.unroll,
+        )[:, None]
+    else:
+        out = blockwise_attention(
+            q, k, v, causal=causal,
+            q_chunk=cfg.attn_q_chunk, k_chunk=cfg.attn_k_chunk,
+            unroll=cfg.unroll,
+        )
+    out = out.reshape(B, S, Hq * hd)
+    return out @ p["wo"].astype(x.dtype), new_cache

@@ -1,0 +1,207 @@
+"""Model configuration and parameter/axes utilities.
+
+Pure-JAX module system: parameters are nested dicts of arrays; every init
+function also produces a parallel tree of *logical axis names* per parameter
+dimension (e.g. ("layers", "embed", "heads")).  The runtime sharding rules
+(runtime/sharding.py) map logical axes onto mesh axes, falling back to
+replication when a dimension is not divisible by the mesh axis size.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"   # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int = 2
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_ff: int = 512
+    vocab: int = 1024
+    head_dim: int = 0       # 0 -> d_model // n_heads
+    mlp_act: str = "swiglu"  # swiglu | relu2 | gelu
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    tie_embeddings: bool = True
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 1
+    moe_every: int = 1          # a MoE MLP every k-th layer (1 = all layers)
+    shared_expert_ff: int = 0   # llama4-style always-on shared expert
+    capacity_factor: float = 1.25
+    # --- SSM (Mamba2 / SSD) ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_ngroups: int = 1
+    ssm_conv: int = 4
+    ssm_chunk: int = 128
+    # --- hybrid (zamba2): shared attention block every k ssm layers ---
+    attn_every: int = 0
+    # --- enc-dec (whisper) ---
+    enc_layers: int = 0
+    dec_layers: int = 0
+    # --- vlm ---
+    cross_attn_every: int = 0   # a cross-attn layer every k-th layer
+    n_image_tokens: int = 0
+    # --- numerics / training ---
+    dtype: Any = jnp.bfloat16        # activation / compute dtype
+    param_dtype: Any = jnp.float32   # parameter storage dtype
+    optimizer_dtype: Any = jnp.float32  # AdamW moment dtype (bf16 for 400B)
+    remat: bool = True
+    microbatches: int = 4    # grad-accumulation steps per train step
+    # unroll all internal lax.scan/map loops (cost-probe mode: XLA's
+    # cost_analysis counts a scan body once, so roofline probes lower an
+    # unrolled, depth-reduced copy and extrapolate — launch/dryrun.py)
+    unroll: bool = False
+    # Megatron-SP style: explicitly gather the sequence ONCE per attention
+    # (q/k/v constrained to seq-unsharded, heads-sharded) instead of letting
+    # SPMD re-gather per blockwise chunk.  §Perf iteration 2 (launch/
+    # variants.py "attn_gather"); big collective-term win on train cells.
+    attn_gather: bool = False
+    attn_q_chunk: int = 512
+    attn_k_chunk: int = 1024
+    xent_chunk: int = 512
+    max_seq: int = 4096
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for MODEL_FLOPS roofline terms)."""
+        from .zoo import count_params
+        return count_params(self)
+
+
+def smoke_config(cfg: ModelConfig) -> ModelConfig:
+    """Reduce any architecture config to CPU-smoke-test size, preserving the
+    family and every structural feature (GQA ratio, MoE, hybrid pattern...)."""
+    kw: dict[str, Any] = dict(
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=max(1, min(cfg.n_kv_heads, 4) if cfg.n_kv_heads else 4),
+        head_dim=32,
+        d_ff=256,
+        vocab=512,
+        dtype=jnp.float32,
+        param_dtype=jnp.float32,
+        remat=False,
+        attn_q_chunk=64,
+        attn_k_chunk=64,
+        xent_chunk=64,
+        max_seq=128,
+    )
+    if cfg.family == "moe":
+        layers = max(2, 2 * max(cfg.moe_every, 1))
+        kw.update(n_layers=layers, n_experts=min(cfg.n_experts, 8),
+                  top_k=min(cfg.top_k, 4), d_ff=64,
+                  shared_expert_ff=64 if cfg.shared_expert_ff else 0)
+    elif cfg.family == "ssm":
+        kw.update(n_layers=2, ssm_state=min(cfg.ssm_state, 32),
+                  ssm_headdim=32, ssm_chunk=32)
+    elif cfg.family == "hybrid":
+        kw.update(n_layers=2 * max(cfg.attn_every, 1),
+                  ssm_state=min(cfg.ssm_state, 32), ssm_headdim=32,
+                  ssm_chunk=32, attn_every=max(cfg.attn_every, 1))
+    elif cfg.family == "encdec":
+        kw.update(enc_layers=2, dec_layers=2, n_layers=2)
+    elif cfg.family == "vlm":
+        kw.update(n_layers=2 * max(cfg.cross_attn_every, 1),
+                  cross_attn_every=max(cfg.cross_attn_every, 1),
+                  n_image_tokens=16)
+    else:
+        kw.update(n_layers=2)
+    return cfg.replace(**kw)
+
+
+# --------------------------------------------------------------------------
+# Parameter tree construction: values + logical axes in parallel
+# --------------------------------------------------------------------------
+
+class Initializer:
+    """Collects (value, axes) pairs while building a parameter tree.
+
+    With abstract=True every method returns jax.ShapeDtypeStruct instead of
+    a real array: the whole parameter tree (and its logical axes) can be
+    constructed with zero allocation — this is what the multi-pod dry-run
+    lowers against.
+    """
+
+    def __init__(self, key, param_dtype=jnp.float32, abstract: bool = False):
+        self._key = key
+        self.param_dtype = param_dtype
+        self.abstract = abstract
+
+    def next_key(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def _make(self, shape, fill) -> Any:
+        if self.abstract:
+            return jax.ShapeDtypeStruct(tuple(shape), self.param_dtype)
+        return fill()
+
+    def normal(self, shape, axes, scale=None):
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+        val = self._make(shape, lambda: (
+            jax.random.normal(self.next_key(), shape, jnp.float32) * scale
+        ).astype(self.param_dtype))
+        return val, axes
+
+    def zeros(self, shape, axes):
+        return self._make(shape, lambda: jnp.zeros(shape, self.param_dtype)), axes
+
+    def ones(self, shape, axes):
+        return self._make(shape, lambda: jnp.ones(shape, self.param_dtype)), axes
+
+    def const(self, value, axes):
+        shape = jnp.shape(value)
+        return self._make(
+            shape, lambda: jnp.asarray(value, self.param_dtype)), axes
+
+
+def split_tree(tree):
+    """Split a tree of (value, axes) leaf pairs into (values, axes) trees."""
+    is_leaf = lambda x: isinstance(x, tuple) and len(x) == 2 and (
+        isinstance(x[1], tuple)
+        and all(a is None or isinstance(a, str) for a in x[1])
+    )
+    values = jax.tree.map(lambda x: x[0], tree, is_leaf=is_leaf)
+    axes = jax.tree.map(lambda x: x[1], tree, is_leaf=is_leaf)
+    return values, axes
+
+
+def tree_size(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating)
+        else x,
+        tree,
+    )

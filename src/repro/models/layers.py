@@ -1,0 +1,136 @@
+"""Shared layers: norms, RoPE, MLP variants, embedding, chunked cross-entropy."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * weight.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(dt)
+
+
+# ------------------------------------------------------------------ RoPE
+def rope_freqs(head_dim: int, theta: float = 10_000.0):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (...,S,hd/2)
+    angles = angles[..., None, :]                      # (..., S, 1, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, dim: int):
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, dim, 2, dtype=jnp.float32)
+                  * (-jnp.log(10000.0) / dim))
+    pe = jnp.zeros((seq, dim), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# ------------------------------------------------------------------ MLPs
+def mlp_apply(p: dict, x, act: str):
+    """SwiGLU (w1,w3,w2), squared-ReLU (w1,w2) or GELU (w1,w2)."""
+    if act == "swiglu":
+        h = jax.nn.silu(x @ p["w1"].astype(x.dtype)) * (
+            x @ p["w3"].astype(x.dtype))
+    elif act == "relu2":
+        h = jnp.square(jax.nn.relu(x @ p["w1"].astype(x.dtype)))
+    elif act == "gelu":
+        h = jax.nn.gelu(x @ p["w1"].astype(x.dtype))
+    else:
+        raise ValueError(f"unknown mlp_act {act!r}")
+    return h @ p["w2"].astype(x.dtype)
+
+
+def mlp_init(ini, d_model: int, d_ff: int, act: str, prefix_axes=()):
+    ax = lambda *a: prefix_axes + a
+    p = {
+        "w1": ini.normal((d_model, d_ff), ax("embed", "mlp")),
+        "w2": ini.normal((d_ff, d_model), ax("mlp", "embed")),
+    }
+    if act == "swiglu":
+        p["w3"] = ini.normal((d_model, d_ff), ax("embed", "mlp"))
+    return p
+
+
+# --------------------------------------------------- chunked cross-entropy
+def chunked_softmax_xent(h, embed, labels, chunk: int = 512,
+                         label_mask=None, unroll: bool = False):
+    """Cross-entropy with logits never materialized at full (B,S,V).
+
+    h: (B, S, D) final hidden states; embed: (V, D) tied output embedding;
+    labels: (B, S) int32.  Scans over sequence chunks, computing each chunk's
+    logits -> logsumexp -> NLL and discarding them.  Returns mean NLL.
+    """
+    B, S, D = h.shape
+    chunk = min(chunk, S)
+    n_chunks = S // chunk
+    rem = S - n_chunks * chunk
+    wt = embed.astype(h.dtype)
+
+    @jax.checkpoint
+    def one_chunk(hc, yc, mc):
+        # rematerialized in backward: the (B, c, V) logits block never
+        # survives the chunk — O(V * chunk) live memory, not O(V * S).
+        logits = (hc @ wt.T).astype(jnp.float32)          # (B, c, V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, yc[..., None].astype(jnp.int32), axis=-1)[..., 0]
+        nll = (lse - gold) * mc
+        return nll.sum(), mc.sum()
+
+    def body(carry, xs):
+        tot, cnt = carry
+        hc, yc, mc = xs
+        s, c = one_chunk(hc, yc, mc)
+        return (tot + s, cnt + c), None
+
+    if label_mask is None:
+        label_mask = jnp.ones_like(labels, jnp.float32)
+    hs = h[:, : n_chunks * chunk].reshape(B, n_chunks, chunk, D)
+    ys = labels[:, : n_chunks * chunk].reshape(B, n_chunks, chunk)
+    ms = label_mask[:, : n_chunks * chunk].reshape(B, n_chunks, chunk)
+    if unroll:
+        tot = cnt = jnp.zeros((), jnp.float32)
+        for i in range(n_chunks):
+            s, c = one_chunk(hs[:, i], ys[:, i], ms[:, i])
+            tot, cnt = tot + s, cnt + c
+    else:
+        (tot, cnt), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+            (hs.transpose(1, 0, 2, 3), ys.transpose(1, 0, 2),
+             ms.transpose(1, 0, 2)),
+        )
+    if rem:
+        s, c = one_chunk(h[:, -rem:], labels[:, -rem:], label_mask[:, -rem:])
+        tot, cnt = tot + s, cnt + c
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def logits_last(h_last, embed):
+    """(B, D) x (V, D) -> (B, V) logits for the decode step."""
+    return (h_last @ embed.astype(h_last.dtype).T).astype(jnp.float32)

@@ -1,0 +1,90 @@
+"""Mixture-of-Experts layer with capacity-based sort-free dispatch.
+
+Top-k routing -> argsort by expert -> scatter into a static (E, C, D)
+dispatch buffer -> batched expert matmuls -> weighted scatter-add combine.
+Expert weights carry the "experts" logical axis, sharded over the `model`
+mesh axis (expert parallelism); under pjit the dispatch scatter lowers to an
+all-to-all-like collective.
+
+Tokens beyond an expert's capacity C = ceil(T*k/E * capacity_factor) are
+dropped (their gate contribution is lost), the standard static-shape
+discipline for TPU MoE.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import mlp_apply, mlp_init
+
+
+def moe_init(ini, cfg, prefix_axes=()):
+    ax = lambda *a: prefix_axes + a
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    p = {
+        "router": ini.normal((d, e), ax("embed", "experts"), scale=0.02),
+        "w1": ini.normal((e, d, f), ax("experts", "embed", "mlp")),
+        "w2": ini.normal((e, f, d), ax("experts", "mlp", "embed")),
+    }
+    if cfg.mlp_act == "swiglu":
+        p["w3"] = ini.normal((e, d, f), ax("experts", "embed", "mlp"))
+    if cfg.shared_expert_ff:
+        p["shared"] = mlp_init(ini, d, cfg.shared_expert_ff, cfg.mlp_act,
+                               prefix_axes)
+    return p
+
+
+def moe_apply(p, cfg, x):
+    """x: (B, S, D) -> (y, aux_loss)."""
+    B, S, D = x.shape
+    T = B * S
+    E, k = cfg.n_experts, cfg.top_k
+    cap = int((T * k / E) * cfg.capacity_factor + 0.999)
+    cap = max(cap, 1)
+
+    xf = x.reshape(T, D)
+    logits = (xf @ p["router"].astype(x.dtype)).astype(jnp.float32)  # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, k)                            # (T,k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing auxiliary loss (Switch-style)
+    density = jnp.mean(
+        jax.nn.one_hot(eidx[:, 0], E, dtype=jnp.float32), axis=0)
+    mean_prob = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(density * mean_prob)
+
+    # sort-free capacity dispatch
+    flat_e = eidx.reshape(T * k)
+    order = jnp.argsort(flat_e, stable=True)            # (T*k,) sorted by e
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(flat_e, length=E)
+    offsets = jnp.cumsum(counts) - counts               # exclusive prefix
+    rank = jnp.arange(T * k) - offsets[sorted_e]        # slot within expert
+    keep = rank < cap
+    dest = sorted_e * cap + jnp.where(keep, rank, 0)
+
+    tok = order // k
+    buf = jnp.zeros((E * cap, D), x.dtype)
+    buf = buf.at[dest].add(jnp.where(keep[:, None], xf[tok], 0))
+    buf = buf.reshape(E, cap, D)
+
+    h1 = jnp.einsum("ecd,edf->ecf", buf, p["w1"].astype(x.dtype))
+    if cfg.mlp_act == "swiglu":
+        h = jax.nn.silu(h1) * jnp.einsum(
+            "ecd,edf->ecf", buf, p["w3"].astype(x.dtype))
+    elif cfg.mlp_act == "relu2":
+        h = jnp.square(jax.nn.relu(h1))
+    else:
+        h = jax.nn.gelu(h1)
+    out = jnp.einsum("ecf,efd->ecd", h, p["w2"].astype(x.dtype))
+    out = out.reshape(E * cap, D)
+
+    g_sorted = gates.reshape(T * k)[order]
+    contrib = out[dest] * (g_sorted * keep)[:, None].astype(x.dtype)
+    y = jnp.zeros((T, D), x.dtype).at[tok].add(contrib)
+
+    if cfg.shared_expert_ff:
+        y = y + mlp_apply(p["shared"], xf, cfg.mlp_act)
+    return y.reshape(B, S, D), aux

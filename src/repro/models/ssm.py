@@ -1,0 +1,168 @@
+"""Mamba2 (SSD — state-space duality) block, chunked-parallel + recurrent decode.
+
+Training/prefill uses the chunked SSD formulation (arXiv:2405.21060 §6):
+within a chunk of length c the output is a masked (c x c) matrix product
+(the "attention-like" dual form); across chunks a compact recurrent state
+h (H, N, P) is carried by a lax.scan.  Decode is the pure recurrence.
+
+State/compute dtype is float32 for stability; projections run in the model's
+compute dtype.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import rms_norm
+
+
+def ssm_init(ini, cfg, prefix_axes=()):
+    ax = lambda *a: prefix_axes + a
+    d, din = cfg.d_model, cfg.d_inner
+    H, N, G, K = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_ngroups, cfg.ssm_conv
+    return {
+        "wz": ini.normal((d, din), ax("embed", "mlp")),
+        "wx": ini.normal((d, din), ax("embed", "mlp")),
+        "wB": ini.normal((d, G * N), ax("embed", None)),
+        "wC": ini.normal((d, G * N), ax("embed", None)),
+        "wdt": ini.normal((d, H), ax("embed", None)),
+        "conv_x": ini.normal((K, din), ax(None, "mlp"), scale=0.5),
+        "conv_B": ini.normal((K, G * N), ax(None, None), scale=0.5),
+        "conv_C": ini.normal((K, G * N), ax(None, None), scale=0.5),
+        "A_log": ini.const(jnp.zeros(H), ax(None)),
+        "D": ini.ones((H,), ax(None)),
+        "dt_bias": ini.const(jnp.full(H, -2.0), ax(None)),
+        "norm": ini.ones((din,), ax("mlp")),
+        "out": ini.normal((din, d), ax("mlp", "embed")),
+    }
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv. x: (B,S,C), w: (K,C).
+
+    state: (B, K-1, C) trailing context (decode); returns (y, new_state).
+    """
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i].astype(x.dtype)
+            for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else xp[:, :0]
+    return y, new_state
+
+
+def _project(p, cfg, x):
+    z = x @ p["wz"].astype(x.dtype)
+    xin = x @ p["wx"].astype(x.dtype)
+    B_ = x @ p["wB"].astype(x.dtype)
+    C_ = x @ p["wC"].astype(x.dtype)
+    dt = (x @ p["wdt"].astype(x.dtype)).astype(jnp.float32)
+    dt = jax.nn.softplus(dt + p["dt_bias"].astype(jnp.float32))
+    return z, xin, B_, C_, dt
+
+
+def ssm_apply(p, cfg, x):
+    """Chunked SSD forward. x: (B,S,D) -> (B,S,D)."""
+    Bb, S, _ = x.shape
+    H, N, G, P = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_ngroups, cfg.ssm_headdim
+    c = min(cfg.ssm_chunk, S)
+    assert S % c == 0, (S, c)
+    nc = S // c
+    hpg = H // G
+
+    z, xin, B_, C_, dt = _project(p, cfg, x)
+    xin, _ = _causal_conv(xin, p["conv_x"])
+    B_, _ = _causal_conv(B_, p["conv_B"])
+    C_, _ = _causal_conv(C_, p["conv_C"])
+    xin, B_, C_ = jax.nn.silu(xin), jax.nn.silu(B_), jax.nn.silu(C_)
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))            # (H,)
+    xh = xin.reshape(Bb, nc, c, H, P).astype(jnp.float32)
+    Bh = B_.reshape(Bb, nc, c, G, N).astype(jnp.float32)
+    Ch = C_.reshape(Bb, nc, c, G, N).astype(jnp.float32)
+    dts = dt.reshape(Bb, nc, c, H)
+    a = dts * A                                              # (B,nc,c,H)
+    cum = jnp.cumsum(a, axis=2)                              # within-chunk
+
+    def chunk_step(h, xs):
+        xc, Bc, Cc, ac, cumc, dtc = xs                       # per chunk
+        # intra-chunk: w[i,j] = (C_i . B_j) * exp(cum_i - cum_j) * dt_j, i>=j
+        CB = jnp.einsum("bign,bjgn->bijg", Cc, Bc)           # (B,c,c,G)
+        CB = jnp.repeat(CB, hpg, axis=-1)                    # (B,c,c,H)
+        decay = jnp.exp(
+            cumc[:, :, None, :] - cumc[:, None, :, :])       # (B,c,c,H)
+        mask = jnp.tril(jnp.ones((c, c), bool))
+        w = jnp.where(mask[None, :, :, None], CB * decay, 0.0)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", w * dtc[:, None, :, :], xc)
+        # inter-chunk: contribution of carried state
+        state_decay = jnp.exp(cumc)                          # (B,c,H)
+        Ch_heads = jnp.repeat(Cc, hpg, axis=2).reshape(Bb, c, H, N)
+        y_inter = jnp.einsum("bchn,bhnp->bchp", Ch_heads, h) \
+            * state_decay[..., None]
+        # state update: h' = exp(sum a) h + sum_j exp(cum_last - cum_j) dt_j B_j x_j
+        tail = jnp.exp(cumc[:, -1:, :] - cumc)               # (B,c,H)
+        Bh_heads = jnp.repeat(Bc, hpg, axis=2).reshape(Bb, c, H, N)
+        dstate = jnp.einsum(
+            "bchn,bchp->bhnp", Bh_heads * (tail * dtc)[..., None], xc)
+        h_new = h * jnp.exp(cumc[:, -1, :])[..., None, None] + dstate
+        return h_new, y_intra + y_inter
+
+    h0 = jnp.zeros((Bb, H, N, P), jnp.float32)
+    xs_all = (xh.transpose(1, 0, 2, 3, 4), Bh.transpose(1, 0, 2, 3, 4),
+              Ch.transpose(1, 0, 2, 3, 4), a.transpose(1, 0, 2, 3),
+              cum.transpose(1, 0, 2, 3), dts.transpose(1, 0, 2, 3))
+    if cfg.unroll:
+        hcur, ys_list = h0, []
+        for i in range(nc):
+            hcur, yi = chunk_step(hcur, tuple(t[i] for t in xs_all))
+            ys_list.append(yi)
+        ys = jnp.stack(ys_list)
+    else:
+        _, ys = jax.lax.scan(chunk_step, h0, xs_all)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bb, S, H, P)
+    y = y + xh.reshape(Bb, S, H, P) * p["D"].astype(jnp.float32)[:, None]
+    y = y.reshape(Bb, S, cfg.d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    return y @ p["out"].astype(x.dtype)
+
+
+def ssm_init_cache(cfg, batch, dtype=jnp.float32):
+    H, N, P, K = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_headdim, cfg.ssm_conv
+    return {
+        "conv_x": jnp.zeros((batch, K - 1, cfg.d_inner), dtype),
+        "conv_B": jnp.zeros((batch, K - 1, cfg.ssm_ngroups * N), dtype),
+        "conv_C": jnp.zeros((batch, K - 1, cfg.ssm_ngroups * N), dtype),
+        "h": jnp.zeros((batch, H, N, P), jnp.float32),
+    }
+
+
+def ssm_decode_step(p, cfg, x, cache):
+    """Recurrent step. x: (B,1,D) -> (y (B,1,D), new_cache)."""
+    Bb = x.shape[0]
+    H, N, G, P = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_ngroups, cfg.ssm_headdim
+    hpg = H // G
+    z, xin, B_, C_, dt = _project(p, cfg, x)
+    xin, conv_x = _causal_conv(xin, p["conv_x"], cache["conv_x"])
+    B_, conv_B = _causal_conv(B_, p["conv_B"], cache["conv_B"])
+    C_, conv_C = _causal_conv(C_, p["conv_C"], cache["conv_C"])
+    xin, B_, C_ = jax.nn.silu(xin), jax.nn.silu(B_), jax.nn.silu(C_)
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dt1 = dt[:, 0]                                          # (B,H)
+    a = jnp.exp(dt1 * A)                                    # (B,H)
+    xh = xin.reshape(Bb, H, P).astype(jnp.float32)
+    Bh = jnp.repeat(B_.reshape(Bb, G, N), hpg, axis=1)      # (B,H,N)
+    Ch = jnp.repeat(C_.reshape(Bb, G, N), hpg, axis=1)
+    h = cache["h"] * a[..., None, None] + jnp.einsum(
+        "bhn,bhp->bhnp", Bh * dt1[..., None], xh)
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, h)
+    y = y + xh * p["D"].astype(jnp.float32)[:, None]
+    y = y.reshape(Bb, 1, cfg.d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    out = y @ p["out"].astype(x.dtype)
+    new_cache = {"conv_x": conv_x, "conv_B": conv_B, "conv_C": conv_C, "h": h}
+    return out, new_cache

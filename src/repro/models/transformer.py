@@ -1,0 +1,296 @@
+"""Decoder-only LM covering the dense / moe / ssm / hybrid / vlm families.
+
+The layer stack is organized as `n_supers` repetitions of a *super-block*
+(a short list of block kinds), scanned with jax.lax.scan so compile time and
+HLO size are O(1) in depth:
+
+  dense   : ["dense"]                        x n_layers
+  moe     : ["dense"]*(moe_every-1)+["moe"]  x n_layers/moe_every
+  ssm     : ["ssm"]                          x n_layers
+  hybrid  : ["ssm"]*attn_every + ["shared"]  x n_layers/attn_every
+            ("shared" = zamba2-style transformer block whose parameters are
+             shared across all invocations; each invocation has its own KV
+             cache at decode time)
+  vlm     : ["dense"]*(cross_every-1)+["cross"] x n_layers/cross_every
+            ("cross" = cross-attention to stub image embeddings + MLP)
+
+Decode caches mirror the stacked structure: every cached tensor has a
+leading (n_supers, ...) dimension and the decode step scans over it in
+lockstep with the parameters.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..runtime.sharding import constrain
+from .attention import attention_apply, attention_init
+from .common import Initializer, ModelConfig, split_tree
+from .layers import chunked_softmax_xent, logits_last, mlp_apply, mlp_init, rms_norm
+from .moe import moe_apply, moe_init
+from .ssm import ssm_apply, ssm_decode_step, ssm_init, ssm_init_cache
+
+
+class _Stacked:
+    """Initializer proxy that prepends a ('layers', n) leading dimension."""
+
+    def __init__(self, ini: Initializer, n: int):
+        self._ini, self._n = ini, n
+
+    def normal(self, shape, axes, scale=None):
+        return self._ini.normal((self._n,) + tuple(shape),
+                                ("layers",) + tuple(axes), scale)
+
+    def zeros(self, shape, axes):
+        return self._ini.zeros((self._n,) + tuple(shape),
+                               ("layers",) + tuple(axes))
+
+    def ones(self, shape, axes):
+        return self._ini.ones((self._n,) + tuple(shape),
+                              ("layers",) + tuple(axes))
+
+    def const(self, value, axes):
+        v = jnp.asarray(value)
+        shape = (self._n,) + v.shape
+        if self._ini.abstract:
+            val = jax.ShapeDtypeStruct(shape, self._ini.param_dtype)
+        else:
+            val = jnp.broadcast_to(v, shape).astype(self._ini.param_dtype)
+        return val, ("layers",) + tuple(axes)
+
+
+def super_block_spec(cfg: ModelConfig) -> list[str]:
+    fam = cfg.family
+    if fam == "dense":
+        return ["dense"]
+    if fam == "moe":
+        k = max(cfg.moe_every, 1)
+        return ["dense"] * (k - 1) + ["moe"]
+    if fam == "ssm":
+        return ["ssm"]
+    if fam == "hybrid":
+        return ["ssm"] * max(cfg.attn_every, 1) + ["shared"]
+    if fam == "vlm":
+        k = max(cfg.cross_attn_every, 1)
+        return ["dense"] * (k - 1) + ["cross"]
+    raise ValueError(f"unknown family {fam!r}")
+
+
+def n_supers(cfg: ModelConfig) -> int:
+    spec = super_block_spec(cfg)
+    per = len([k for k in spec if k != "shared"])
+    assert cfg.n_layers % per == 0, (cfg.n_layers, spec)
+    return cfg.n_layers // per
+
+
+def _block_init(ini, cfg, kind: str) -> dict:
+    if kind == "dense":
+        return {
+            "ln1": ini.ones((cfg.d_model,), ("embed",)),
+            "attn": attention_init(ini, cfg),
+            "ln2": ini.ones((cfg.d_model,), ("embed",)),
+            "mlp": mlp_init(ini, cfg.d_model, cfg.d_ff, cfg.mlp_act),
+        }
+    if kind == "moe":
+        return {
+            "ln1": ini.ones((cfg.d_model,), ("embed",)),
+            "attn": attention_init(ini, cfg),
+            "ln2": ini.ones((cfg.d_model,), ("embed",)),
+            "moe": moe_init(ini, cfg),
+        }
+    if kind == "ssm":
+        return {
+            "ln1": ini.ones((cfg.d_model,), ("embed",)),
+            "ssm": ssm_init(ini, cfg),
+        }
+    if kind == "cross":
+        return {
+            "ln1": ini.ones((cfg.d_model,), ("embed",)),
+            "xattn": attention_init(ini, cfg),
+            "gate": ini.zeros((), ()),
+            "ln2": ini.ones((cfg.d_model,), ("embed",)),
+            "mlp": mlp_init(ini, cfg.d_model, cfg.d_ff, cfg.mlp_act),
+        }
+    raise ValueError(kind)
+
+
+def init_lm(cfg: ModelConfig, key, abstract: bool = False):
+    """Returns (params, logical_axes) trees."""
+    ini = Initializer(key, cfg.param_dtype, abstract=abstract)
+    spec = super_block_spec(cfg)
+    ns = n_supers(cfg)
+    sini = _Stacked(ini, ns)
+    tree = {
+        "embed": ini.normal((cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                            scale=0.02),
+        "final_ln": ini.ones((cfg.d_model,), ("embed",)),
+        "blocks": {
+            f"b{i}": _block_init(sini, cfg, kind)
+            for i, kind in enumerate(spec) if kind != "shared"
+        },
+    }
+    if "shared" in spec:
+        tree["shared"] = _block_init(ini, cfg, "dense")
+    return split_tree(tree)
+
+
+# ----------------------------------------------------------------- forward
+def _apply_block(p, cfg, kind, x, *, image_embeds=None, positions=None,
+                 cache=None, cache_index=None):
+    """One block; returns (x, aux_loss, new_cache)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = None
+    if kind in ("dense", "moe"):
+        h, kv = attention_apply(
+            p["attn"], cfg, rms_norm(x, p["ln1"]), positions=positions,
+            cache=None if cache is None else cache["attn"],
+            cache_index=cache_index,
+        )
+        x = x + h
+        h2 = rms_norm(x, p["ln2"])
+        if kind == "moe":
+            y, aux = moe_apply(p["moe"], cfg, h2)
+        else:
+            y = mlp_apply(p["mlp"], h2, cfg.mlp_act)
+        x = x + y
+        new_cache = None if cache is None else {"attn": kv}
+    elif kind == "ssm":
+        if cache is None:
+            x = x + ssm_apply(p["ssm"], cfg, rms_norm(x, p["ln1"]))
+        else:
+            y, sc = ssm_decode_step(p["ssm"], cfg, rms_norm(x, p["ln1"]),
+                                    cache["ssm"])
+            x = x + y
+            new_cache = {"ssm": sc}
+    elif kind == "cross":
+        h, _ = attention_apply(
+            p["xattn"], cfg, rms_norm(x, p["ln1"]), kv_x=image_embeds,
+            causal=False, rope=False,
+        )
+        x = x + jnp.tanh(p["gate"]).astype(x.dtype) * h
+        x = x + mlp_apply(p["mlp"], rms_norm(x, p["ln2"]), cfg.mlp_act)
+        new_cache = None if cache is None else {}
+    else:
+        raise ValueError(kind)
+    return x, aux, new_cache
+
+
+def lm_forward(params, cfg: ModelConfig, tokens, image_embeds=None):
+    """tokens (B,S) -> hidden states (B,S,D) + aux loss."""
+    spec = super_block_spec(cfg)
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    x = constrain(x, ("batch", "seq", "embed"))
+    positions = jnp.arange(tokens.shape[1])[None, :]
+
+    def super_body(carry, block_params):
+        x, aux = carry
+        for i, kind in enumerate(spec):
+            if kind == "shared":
+                x, a, _ = _apply_block(params["shared"], cfg, "dense", x,
+                                       positions=positions,
+                                       image_embeds=image_embeds)
+            else:
+                x, a, _ = _apply_block(block_params[f"b{i}"], cfg, kind, x,
+                                       positions=positions,
+                                       image_embeds=image_embeds)
+            aux = aux + a
+        x = constrain(x, ("batch", "seq", "embed"))
+        return (x, aux), None
+
+    body = jax.checkpoint(super_body) if cfg.remat else super_body
+    carry = (x, jnp.zeros((), jnp.float32))
+    if cfg.unroll:
+        ns = n_supers(cfg)
+        for i in range(ns):
+            bp = jax.tree.map(lambda t: t[i], params["blocks"])
+            carry, _ = body(carry, bp)
+        x, aux = carry
+    else:
+        (x, aux), _ = jax.lax.scan(body, carry, params["blocks"])
+    x = rms_norm(x, params["final_ln"])
+    return x, aux
+
+
+def lm_loss(params, cfg: ModelConfig, batch):
+    """batch: {tokens (B,S), labels (B,S), [image_embeds]} -> scalar loss."""
+    h, aux = lm_forward(params, cfg, batch["tokens"],
+                        image_embeds=batch.get("image_embeds"))
+    nll = chunked_softmax_xent(h, params["embed"], batch["labels"],
+                               chunk=cfg.xent_chunk, unroll=cfg.unroll)
+    return nll + 0.01 * aux
+
+
+# ------------------------------------------------------------------ decode
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               image_embeds=None):
+    """Stacked decode cache: every leaf has a leading (n_supers,) dim."""
+    spec = super_block_spec(cfg)
+    ns = n_supers(cfg)
+    hd, Hkv = cfg.hd, cfg.n_kv_heads
+
+    def kv(b):
+        return {
+            "k": jnp.zeros((ns, b, max_len, Hkv, hd), cfg.dtype),
+            "v": jnp.zeros((ns, b, max_len, Hkv, hd), cfg.dtype),
+        }
+
+    cache = {}
+    for i, kind in enumerate(spec):
+        if kind in ("dense", "moe"):
+            cache[f"b{i}"] = {"attn": kv(batch)}
+        elif kind == "ssm":
+            c = ssm_init_cache(cfg, batch)
+            cache[f"b{i}"] = {
+                "ssm": jax.tree.map(
+                    lambda x: jnp.broadcast_to(
+                        x[None], (ns,) + x.shape).astype(x.dtype), c)
+            }
+        elif kind == "shared":
+            cache[f"b{i}"] = {"attn": kv(batch)}
+        elif kind == "cross":
+            cache[f"b{i}"] = {}
+    return cache
+
+
+def lm_decode_step(params, cfg: ModelConfig, token, cache, index,
+                   image_embeds=None):
+    """token (B,1) int32; index: scalar int32 current position.
+
+    Returns (logits (B,V), new_cache).
+    """
+    spec = super_block_spec(cfg)
+    x = params["embed"].astype(cfg.dtype)[token]
+    positions = jnp.full((1, 1), index, jnp.int32)
+
+    def super_body(x, xs):
+        block_params, block_cache = xs
+        new_cache = {}
+        for i, kind in enumerate(spec):
+            if kind == "shared":
+                x, _, nc = _apply_block(
+                    params["shared"], cfg, "dense", x, positions=positions,
+                    cache=block_cache[f"b{i}"], cache_index=index)
+            else:
+                x, _, nc = _apply_block(
+                    block_params.get(f"b{i}", {}), cfg, kind, x,
+                    positions=positions, image_embeds=image_embeds,
+                    cache=block_cache[f"b{i}"], cache_index=index)
+            new_cache[f"b{i}"] = nc if nc is not None else {}
+        return x, new_cache
+
+    if cfg.unroll:
+        ns = n_supers(cfg)
+        caches = []
+        for i in range(ns):
+            bp = jax.tree.map(lambda t: t[i], params["blocks"])
+            bc = jax.tree.map(lambda t: t[i], cache)
+            x, nc = super_body(x, (bp, bc))
+            caches.append(nc)
+        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+    else:
+        x, new_cache = jax.lax.scan(super_body, x,
+                                    (params["blocks"], cache))
+    x = rms_norm(x, params["final_ln"])
+    logits = logits_last(x[:, 0], params["embed"])
+    return logits, new_cache

@@ -1,0 +1,171 @@
+"""Unified model interface + analytic parameter counting.
+
+`build(cfg)` returns a Model with a uniform API regardless of family:
+  init(key) -> (params, axes)
+  loss(params, batch) -> scalar
+  init_cache(batch, max_len) -> decode cache pytree
+  decode_step(params, token, cache, index, **kw) -> (logits, cache)
+  input_specs(shape) -> ShapeDtypeStruct pytrees for the dry-run
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig
+from . import transformer as tf
+from . import whisper as wh
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "decode"
+
+
+STANDARD_SHAPES = (
+    ShapeSpec("train_4k", 4_096, 256, "train"),
+    ShapeSpec("prefill_32k", 32_768, 32, "prefill"),  # forward-only
+    ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    ShapeSpec("long_500k", 524_288, 1, "decode"),
+)
+SHAPES_BY_NAME = {s.name: s for s in STANDARD_SHAPES}
+
+
+@dataclass(frozen=True)
+class Model:
+    config: ModelConfig
+    init: Callable          # key -> (params, axes)
+    loss: Callable          # (params, batch) -> scalar
+    forward: Callable       # (params, batch) -> hidden states
+    init_cache: Callable    # (batch, max_len) -> decode cache
+    decode_step: Callable   # (params, token, cache, index) -> (logits, cache)
+
+    def abstract_params(self):
+        """(ShapeDtypeStruct params, logical axes) with ZERO allocation.
+
+        Uses the Initializer's abstract mode — this is what the dry-run
+        lowers 123B/400B-parameter models against on a CPU container.
+        """
+        if self.config.family == "encdec":
+            return wh.init_whisper(self.config, None, abstract=True)
+        return tf.init_lm(self.config, None, abstract=True)
+
+
+def build(cfg: ModelConfig) -> Model:
+    if cfg.family == "encdec":
+        init = lambda key: wh.init_whisper(cfg, key)
+        loss = lambda p, batch: wh.whisper_loss(p, cfg, batch)
+        fwd = lambda p, batch: wh.decode_train(
+            p, cfg, batch["tokens"], wh.encode(p, cfg, batch["frames"]))
+        icache = lambda batch, max_len, **kw: wh.whisper_init_cache(
+            cfg, batch, max_len, **kw)
+        dstep = lambda p, tok, cache, idx, **kw: wh.whisper_decode_step(
+            p, cfg, tok, cache, idx)
+    else:
+        init = lambda key: tf.init_lm(cfg, key)
+        loss = lambda p, batch: tf.lm_loss(p, cfg, batch)
+        fwd = lambda p, batch: tf.lm_forward(
+            p, cfg, batch["tokens"],
+            image_embeds=batch.get("image_embeds"))[0]
+        icache = lambda batch, max_len, **kw: tf.init_cache(
+            cfg, batch, max_len, **kw)
+        dstep = lambda p, tok, cache, idx, **kw: tf.lm_decode_step(
+            p, cfg, tok, cache, idx, **kw)
+
+    return Model(config=cfg, init=init, loss=loss, forward=fwd,
+                 init_cache=icache, decode_step=dstep)
+
+
+# ----------------------------------------------------------- input specs
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if shape.kind == "train":
+            batch["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+        if cfg.family == "encdec":
+            # decoder teacher-forced over S (DESIGN.md arch notes)
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (B, S, cfg.d_model), cfg.dtype)
+        if cfg.family == "vlm":
+            batch["image_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_image_tokens, cfg.d_model), cfg.dtype)
+        return batch
+    # decode: one new token against a seq_len cache
+    spec = {
+        "token": jax.ShapeDtypeStruct((B, 1), i32),
+        "index": jax.ShapeDtypeStruct((), i32),
+    }
+    if cfg.family == "vlm":
+        spec["image_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_image_tokens, cfg.d_model), cfg.dtype)
+    return spec
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec):
+    m = build(cfg)
+    return jax.eval_shape(
+        lambda: m.init_cache(shape.global_batch, shape.seq_len))
+
+
+# --------------------------------------------------------- param counting
+def count_params(cfg: ModelConfig) -> int:
+    d, f, v, hd = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.hd
+    Hq, Hkv = cfg.n_heads, cfg.n_kv_heads
+    attn = d * Hq * hd * 2 + d * Hkv * hd * 2
+    mlp = d * f * (3 if cfg.mlp_act == "swiglu" else 2)
+    if cfg.family == "encdec":
+        enc = cfg.enc_layers * (attn + mlp)
+        dec = cfg.dec_layers * (2 * attn + mlp)
+        return v * d + enc + dec
+    if cfg.family == "ssm":
+        din, H = cfg.d_inner, cfg.ssm_heads
+        N, G = cfg.ssm_state, cfg.ssm_ngroups
+        per = d * din * 2 + 2 * d * G * N + d * H + din * d
+        return v * d + cfg.n_layers * per
+    if cfg.family == "hybrid":
+        din, H = cfg.d_inner, cfg.ssm_heads
+        N, G = cfg.ssm_state, cfg.ssm_ngroups
+        per = d * din * 2 + 2 * d * G * N + d * H + din * d
+        shared = attn + mlp
+        return v * d + cfg.n_layers * per + shared
+    if cfg.family == "moe":
+        e_mlp = cfg.n_experts * mlp + d * cfg.n_experts
+        sh = (cfg.shared_expert_ff * d
+              * (3 if cfg.mlp_act == "swiglu" else 2))
+        k = max(cfg.moe_every, 1)
+        n_moe = cfg.n_layers // k
+        n_dense = cfg.n_layers - n_moe
+        return (v * d + cfg.n_layers * attn + n_dense * mlp
+                + n_moe * (e_mlp + sh))
+    per = attn + mlp
+    if cfg.family == "vlm":
+        k = max(cfg.cross_attn_every, 1)
+        n_cross = cfg.n_layers // k
+        return v * d + cfg.n_layers * per + n_cross * attn  # + cross extras
+    return v * d + cfg.n_layers * per
+
+
+def active_params(cfg: ModelConfig) -> int:
+    """Active parameters per token (MoE: routed top-k + shared only)."""
+    if cfg.family != "moe":
+        return count_params(cfg)
+    d, f = cfg.d_model, cfg.d_ff
+    mlp = d * f * (3 if cfg.mlp_act == "swiglu" else 2)
+    attn = (cfg.d_model * cfg.n_heads * cfg.hd * 2
+            + cfg.d_model * cfg.n_kv_heads * cfg.hd * 2)
+    sh = cfg.shared_expert_ff * d * (3 if cfg.mlp_act == "swiglu" else 2)
+    k_every = max(cfg.moe_every, 1)
+    n_moe = cfg.n_layers // k_every
+    n_dense = cfg.n_layers - n_moe
+    return (cfg.vocab * d + cfg.n_layers * attn + n_dense * mlp
+            + n_moe * (cfg.top_k * mlp + sh + d * cfg.n_experts))

@@ -1,0 +1,5 @@
+"""Optimizers and gradient-compression utilities."""
+
+from .adamw import TrainState, adamw_init, adamw_update, make_train_step
+
+__all__ = ["TrainState", "adamw_init", "adamw_update", "make_train_step"]

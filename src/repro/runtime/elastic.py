@@ -1,0 +1,39 @@
+"""Elastic re-meshing: rebuild the mesh after host loss and re-shard state.
+
+Checkpoints store full logical tensors (checkpoint/ckpt.py), so restore
+onto ANY mesh is just device_put with the new shardings — the core of
+elastic scaling.  `shrink_mesh` drops failed devices and finds the largest
+(data, model) grid that still divides the model axis requirement;
+`reshard_tree` moves a (restored) host tree onto the new mesh.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from .sharding import RuleSet, tree_shardings
+
+
+def shrink_mesh(failed: set[int] | int, *, model_axis: int | None = None,
+                devices=None) -> Mesh:
+    """Largest usable (data, model) mesh over the surviving devices."""
+    devices = list(devices if devices is not None else jax.devices())
+    if isinstance(failed, int):
+        failed = set(range(failed))
+    alive = [d for i, d in enumerate(devices) if i not in failed]
+    n = len(alive)
+    assert n >= 1, "no devices survive"
+    model = model_axis or 1
+    while model > 1 and n % model:
+        model //= 2
+    data = n // model
+    grid = np.asarray(alive[: data * model]).reshape(data, model)
+    return Mesh(grid, ("data", "model"))
+
+
+def reshard_tree(tree, axes_tree, mesh: Mesh, rules: RuleSet | None = None):
+    shardings = tree_shardings(axes_tree, jax.eval_shape(lambda: tree),
+                               mesh, rules)
+    return jax.device_put(tree, shardings)

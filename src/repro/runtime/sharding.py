@@ -1,0 +1,161 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style, with fallbacks).
+
+Parameters and activations are annotated with *logical* axis names
+("vocab", "heads", "mlp", "experts", "batch", "seq", ...).  A RuleSet maps
+each logical name to a mesh axis (or tuple of axes).  `spec_for` checks
+divisibility: a dimension that cannot be evenly sharded falls back to
+replication (e.g. 8 KV heads on a 16-way model axis), never to an error —
+this is what lets one rule set serve every architecture in the pool.
+
+An active-mesh context (set by the launch layer) makes
+`constrain(x, logical_axes)` apply jax.lax.with_sharding_constraint; outside
+the context it is a no-op so model code runs unsharded on CPU tests.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# default logical -> mesh-axis rules (single- and multi-pod)
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "seq": ("model",),         # Megatron-SP: activations shard sequence;
+                               # XLA gathers around attention only
+    # KV caches shard sequence over data AND model (SP decode): with GQA
+    # kv_heads often < model-axis size (replicated fallback), the sequence
+    # dim is what keeps 400B-class decode caches inside 16GB/chip
+    "kv_seq": ("data", "model"),
+    "vocab": ("model",),
+    "embed": (),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (),
+    "mlp": ("model",),
+    "experts": ("model",),
+    "layers": (),
+    "frames": (),
+    "image": (),
+}
+
+
+@dataclass(frozen=True)
+class RuleSet:
+    rules: tuple = tuple(sorted(DEFAULT_RULES.items()))
+
+    def as_dict(self) -> dict:
+        return dict(self.rules)
+
+    def override(self, **kw) -> "RuleSet":
+        d = self.as_dict()
+        for k, v in kw.items():
+            d[k] = tuple(v) if not isinstance(v, str) else (v,)
+        return RuleSet(tuple(sorted(d.items())))
+
+
+def spec_for(logical_axes, shape, mesh: Mesh,
+             rules: RuleSet | None = None) -> P:
+    """PartitionSpec for one array, with divisibility fallbacks."""
+    rules_d = (rules or RuleSet()).as_dict()
+    used: set[str] = set()
+    out = []
+    for dim, name in zip(shape, logical_axes):
+        assigned = None
+        if name is not None:
+            for axis in rules_d.get(name, ()):
+                if axis in mesh.shape and axis not in used:
+                    size = mesh.shape[axis]
+                    if dim % size == 0 and dim >= size:
+                        # allow composite assignment (e.g. batch over
+                        # pod+data) by accumulating axes for this dim
+                        if assigned is None:
+                            assigned = []
+                        assigned.append(axis)
+                        used.add(axis)
+                        dim //= size
+        out.append(tuple(assigned) if assigned else None)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def tree_specs(axes_tree, shape_tree, mesh, rules=None):
+    return jax.tree.map(
+        lambda ax, shp: spec_for(ax, shp.shape, mesh, rules),
+        axes_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x),
+    )
+
+
+def tree_shardings(axes_tree, shape_tree, mesh, rules=None):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree_specs(axes_tree, shape_tree, mesh, rules),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def zero_spec(spec: P, shape, mesh: Mesh, axis: str = "data") -> P:
+    """ZeRO-1: additionally shard the largest replicated dim over `axis`.
+
+    Applied to optimizer moments (and optionally master weights): every data
+    shard owns a slice, XLA inserts reduce-scatter/all-gather around the
+    update.
+    """
+    if axis not in mesh.shape:
+        return spec
+    size = mesh.shape[axis]
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    used = {a for e in entries if e for a in
+            ((e,) if isinstance(e, str) else e)}
+    if axis in used:
+        return spec
+    best, best_dim = -1, -1
+    for i, (dim, e) in enumerate(zip(shape, entries)):
+        if e is None and dim % size == 0 and dim >= size and dim > best:
+            best, best_dim = dim, i
+    if best_dim < 0:
+        return spec
+    entries[best_dim] = axis
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def zero_shardings(axes_tree, shape_tree, mesh, rules=None, axis="data"):
+    specs = tree_specs(axes_tree, shape_tree, mesh, rules)
+    return jax.tree.map(
+        lambda s, shp: NamedSharding(mesh, zero_spec(s, shp.shape, mesh, axis)),
+        specs, shape_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ------------------------------------------------------- activation context
+_ctx = threading.local()
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, rules: RuleSet | None = None):
+    prev = getattr(_ctx, "state", None)
+    _ctx.state = (mesh, rules or RuleSet())
+    try:
+        yield
+    finally:
+        _ctx.state = prev
+
+
+def constrain(x, logical_axes):
+    """Apply with_sharding_constraint if a mesh context is active."""
+    state = getattr(_ctx, "state", None)
+    if state is None:
+        return x
+    mesh, rules = state
+    spec = spec_for(logical_axes, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

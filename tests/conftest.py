@@ -1,0 +1,16 @@
+import os
+
+# Tests must see the single real CPU device (the 512-device override is
+# exclusively for launch/dryrun.py runs).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from hypothesis import HealthCheck, settings
+
+settings.register_profile(
+    "ci",
+    max_examples=25,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+    derandomize=True,
+)
+settings.load_profile("ci")

@@ -1,0 +1,90 @@
+"""Per-architecture smoke tests (assignment deliverable f).
+
+Every assigned arch instantiates a REDUCED same-family config and runs one
+forward/train step + one decode step on CPU, asserting shapes and finiteness.
+The FULL configs are exercised only via the dry-run (ShapeDtypeStruct)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get, get_smoke
+from repro.models import build, count_params
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.key(0)
+
+
+def _batch(cfg, key, B=2, S=64):
+    ks = jax.random.split(key, 4)
+    batch = {
+        "tokens": jax.random.randint(ks[0], (B, S), 0, cfg.vocab),
+        "labels": jax.random.randint(ks[1], (B, S), 0, cfg.vocab),
+    }
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(ks[2], (B, S, cfg.d_model),
+                                            cfg.dtype)
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jax.random.normal(
+            ks[3], (B, cfg.n_image_tokens, cfg.d_model), cfg.dtype)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch, key):
+    cfg = get_smoke(arch)
+    model = build(cfg)
+    params, axes = model.init(key)
+    # axes tree mirrors the param tree
+    assert jax.tree.structure(params) == jax.tree.structure(
+        axes, is_leaf=lambda x: isinstance(x, tuple))
+    batch = _batch(cfg, key)
+    loss, grads = jax.jit(jax.value_and_grad(model.loss))(params, batch)
+    assert np.isfinite(float(loss))
+    gnorm = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_step(arch, key):
+    cfg = get_smoke(arch)
+    model = build(cfg)
+    params, _ = model.init(key)
+    B = 2
+    cache = model.init_cache(B, 32)
+    kw = {}
+    if cfg.family == "vlm":
+        kw["image_embeds"] = jax.random.normal(
+            key, (B, cfg.n_image_tokens, cfg.d_model), cfg.dtype)
+    tok = jax.random.randint(key, (B, 1), 0, cfg.vocab)
+    step = jax.jit(lambda p, t, c, i: model.decode_step(p, t, c, i, **kw))
+    logits, cache = step(params, tok, cache, jnp.int32(0))
+    assert logits.shape == (B, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+    logits2, _ = step(params, tok, cache, jnp.int32(1))
+    assert np.isfinite(np.asarray(logits2)).all()
+
+
+@pytest.mark.parametrize("arch,expected_b", [
+    ("phi4_mini_3_8b", 3.8), ("mistral_large_123b", 122.0),
+    ("qwen3_8b", 7.6), ("nemotron_4_15b", 14.0),
+    ("mamba2_130m", 0.13), ("zamba2_2_7b", 2.3),
+    ("llama4_maverick_400b_a17b", 397.0), ("olmoe_1b_7b", 6.8),
+    ("llama_3_2_vision_90b", 90.0), ("whisper_base", 0.07),
+])
+def test_full_config_param_counts(arch, expected_b):
+    n = count_params(get(arch)) / 1e9
+    assert abs(n - expected_b) / expected_b < 0.12, (arch, n, expected_b)
+
+
+def test_family_features_present():
+    assert get("qwen3_8b").qk_norm
+    assert get("nemotron_4_15b").mlp_act == "relu2"
+    assert get("olmoe_1b_7b").top_k == 8
+    assert get("llama4_maverick_400b_a17b").shared_expert_ff > 0
+    assert get("zamba2_2_7b").attn_every == 6
+    assert get("llama_3_2_vision_90b").cross_attn_every == 5
+    assert get("mamba2_130m").ssm_state == 128

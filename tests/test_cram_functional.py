@@ -1,0 +1,145 @@
+"""The correctness contract of the CRAM hardware: read-your-writes, under
+arbitrary access interleavings, with compression/relocation/markers/LIT all
+active.  Plus the paper's corner cases: marker collisions, LIT overflow
+(both options), dynamic policy, and the bandwidth stats."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CRAMSystem
+from repro.core.marker import MarkerSpec
+
+
+def _data_strategy():
+    return st.sampled_from(["zeros", "rep", "delta", "random"])
+
+
+def _make(kind, rng):
+    if kind == "zeros":
+        return np.zeros(64, np.uint8)
+    if kind == "rep":
+        return np.tile(rng.integers(0, 256, 8).astype(np.uint8), 8)
+    if kind == "delta":
+        base = rng.integers(0, 2**30, dtype=np.int64)
+        return (base + rng.integers(-50, 50, 16)).astype("<i4").view(
+            np.uint8).copy()
+    return rng.integers(0, 256, 64).astype(np.uint8)
+
+
+@settings(max_examples=8)
+@given(st.integers(0, 2**32 - 1),
+       st.sampled_from(["static", "dynamic", "uncompressed"]))
+def test_read_your_writes(seed, policy):
+    rng = np.random.default_rng(seed)
+    sysm = CRAMSystem(n_lines=256, llc_sets=8, llc_ways=2, policy=policy)
+    ref = {}
+    for _ in range(600):
+        addr = int(rng.integers(0, 256))
+        if rng.random() < 0.5:
+            data = _make(_data_strategy().example() if False else
+                         ["zeros", "rep", "delta", "random"][
+                             int(rng.integers(0, 4))], rng)
+            sysm.access(addr, is_write=True, data=data)
+            ref[addr] = data.copy()
+        else:
+            got = sysm.access(addr)
+            want = ref.get(addr, np.zeros(64, np.uint8))
+            assert np.array_equal(got, want), (addr, policy)
+    sysm.flush()
+    for addr, want in ref.items():
+        assert np.array_equal(sysm.access(addr), want)
+
+
+def test_compression_actually_happens():
+    sysm = CRAMSystem(n_lines=64, llc_sets=2, llc_ways=1, policy="static")
+    z = np.zeros(64, np.uint8)
+    for addr in range(32):
+        sysm.access(addr, is_write=True, data=z)
+    sysm.flush()
+    # zero lines pack 4:1; re-reading lane 0 of a group yields 3 prefetches
+    before = sysm.stats.prefetch_installed
+    sysm.access(0)
+    assert sysm.stats.prefetch_installed - before == 3
+    assert sysm.stats.wb_dirty > 0
+    assert sysm.stats.il_writes > 0  # packing vacated slots
+
+
+def test_marker_collision_via_forced_write():
+    sysm = CRAMSystem(n_lines=64, llc_sets=4, llc_ways=2, policy="static")
+    # craft a line that collides with the marker of its own slot
+    addr = 5
+    line = np.random.default_rng(0).integers(0, 256, 64).astype(np.uint8)
+    line[-4:] = np.frombuffer(sysm.spec.marker2(addr), np.uint8)
+    sysm.access(addr, is_write=True, data=line)
+    sysm.flush()
+    assert addr in sysm.lit.entries  # stored inverted, tracked by LIT
+    got = sysm.access(addr)
+    assert np.array_equal(got, line)
+    # overwriting with a non-colliding value clears the LIT entry
+    plain = np.zeros(64, np.uint8)
+    sysm.access(addr, is_write=True, data=plain)
+    sysm.flush()
+    assert addr not in sysm.lit.entries
+
+
+def test_lit_overflow_memory_mapped():
+    sysm = CRAMSystem(n_lines=256, llc_sets=8, llc_ways=2,
+                      policy="uncompressed", lit_capacity=2,
+                      lit_overflow="memory_mapped")
+    rng = np.random.default_rng(1)
+    addrs = [9, 13, 17, 21, 25]
+    lines = {}
+    for a in addrs:  # force five concurrent collisions
+        line = rng.integers(0, 256, 64).astype(np.uint8)
+        line[-4:] = np.frombuffer(sysm.spec.marker4(a), np.uint8)
+        sysm.access(a, is_write=True, data=line)
+        lines[a] = line
+    sysm.flush()
+    assert sysm.lit.overflowed
+    for a in addrs:
+        assert np.array_equal(sysm.access(a), lines[a])
+    assert sysm.lit.extra_accesses > 0  # memory-mapped lookups cost b/w
+
+
+def test_lit_overflow_regenerates_markers():
+    sysm = CRAMSystem(n_lines=128, llc_sets=8, llc_ways=2,
+                      policy="uncompressed", lit_capacity=1,
+                      lit_overflow="regenerate")
+    rng = np.random.default_rng(2)
+    gen0 = sysm.spec.generation
+    lines = {}
+    for a in (3, 7, 11):
+        line = rng.integers(0, 256, 64).astype(np.uint8)
+        line[-4:] = np.frombuffer(sysm.spec.marker2(a), np.uint8)
+        sysm.access(a, is_write=True, data=line)
+        lines[a] = line
+        sysm.flush()
+    assert sysm.spec.generation > gen0
+    for a, want in lines.items():
+        assert np.array_equal(sysm.access(a), want)
+
+
+def test_uncompressed_policy_never_compresses():
+    sysm = CRAMSystem(n_lines=64, llc_sets=2, llc_ways=1,
+                      policy="uncompressed")
+    z = np.zeros(64, np.uint8)
+    for addr in range(32):
+        sysm.access(addr, is_write=True, data=z)
+    sysm.flush()
+    assert sysm.stats.wb_clean == 0
+    assert sysm.stats.il_writes == 0
+    assert sysm.stats.prefetch_installed == 0
+
+
+def test_llp_predicts_page_coherent_compressibility():
+    sysm = CRAMSystem(n_lines=1024, llc_sets=8, llc_ways=2, policy="static")
+    z = np.zeros(64, np.uint8)
+    # one pass to establish compressed layout
+    for addr in range(512):
+        sysm.access(addr, is_write=True, data=z)
+    sysm.flush()
+    sysm.llp.predictions = sysm.llp.correct = 0
+    for addr in range(512):
+        sysm.access(addr)
+    assert sysm.llp.accuracy > 0.9  # paper: ~98% on coherent pages

@@ -1,0 +1,30 @@
+"""End-to-end launcher tests: train loop with fault injection + serving."""
+
+import json
+
+import pytest
+
+
+def test_train_with_fault_and_resume(tmp_path):
+    from repro.launch.train import main as train_main
+
+    out = train_main([
+        "--preset", "lm2m", "--steps", "14", "--batch", "2",
+        "--ckpt-every", "5", "--ckpt-dir", str(tmp_path / "ckpt"),
+        "--inject-fault", "8", "--seed", "3",
+    ])
+    assert out["steps"] == 14
+    assert out["restarts"] == 1
+    # resumed run must have continued past the fault
+    assert (tmp_path / "ckpt").exists()
+
+
+def test_serve_generates_and_mirrors_cram_kv():
+    from repro.launch.serve import main as serve_main
+
+    out = serve_main(["--preset", "lm2m", "--batch", "2",
+                      "--prompt-len", "12", "--gen", "6"])
+    assert len(out["sample"]) >= 6
+    kv = out["cram_kv"]
+    assert kv is not None
+    assert kv["kernel_vs_oracle_err"] < 1e-3

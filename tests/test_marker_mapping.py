@@ -1,0 +1,127 @@
+"""Marker/implicit-metadata and restricted-mapping properties."""
+
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core import mapping
+from repro.core.evict_logic import (
+    EvictPlan,
+    build_evict_table,
+    evict_plan,
+    evict_table_index,
+)
+from repro.core.marker import (
+    LineStatus,
+    MarkerSpec,
+    classify_line,
+    invert_line,
+    needs_inversion,
+)
+
+
+def test_marker_classification_basic():
+    spec = MarkerSpec()
+    rng = np.random.default_rng(0)
+    line = rng.integers(0, 256, 64).astype(np.uint8)
+    # random line: astronomically unlikely to match any marker
+    assert classify_line(line, 5, spec) in (
+        LineStatus.UNCOMP, LineStatus.MAYBE_INVERTED)
+    # a line ending with marker2 classifies as COMP2
+    line2 = line.copy()
+    line2[-4:] = np.frombuffer(spec.marker2(5), np.uint8)
+    assert classify_line(line2, 5, spec) == LineStatus.COMP2
+    line4 = line.copy()
+    line4[-4:] = np.frombuffer(spec.marker4(5), np.uint8)
+    assert classify_line(line4, 5, spec) == LineStatus.COMP4
+    il = np.frombuffer(spec.marker_il(5), np.uint8)
+    assert classify_line(il, 5, spec) == LineStatus.INVALID
+    # markers are per-slot: slot 6 must not see slot 5's marker
+    assert classify_line(line2, 6, spec) in (
+        LineStatus.UNCOMP, LineStatus.MAYBE_INVERTED)
+
+
+def test_inversion_handles_collisions():
+    spec = MarkerSpec()
+    rng = np.random.default_rng(1)
+    line = rng.integers(0, 256, 64).astype(np.uint8)
+    line[-4:] = np.frombuffer(spec.marker2(9), np.uint8)  # force collision
+    assert needs_inversion(line, 9, spec)
+    inv = invert_line(line)
+    # inverted form no longer matches any marker as compressed
+    assert classify_line(inv, 9, spec) == LineStatus.MAYBE_INVERTED
+    assert np.array_equal(invert_line(inv), line)
+
+
+def test_marker_regeneration_changes_values():
+    spec = MarkerSpec()
+    before = spec.marker2(3), spec.marker_il(7)
+    spec.regenerate()
+    assert spec.marker2(3) != before[0]
+    assert spec.marker_il(7) != before[1]
+
+
+def test_mapping_tables_consistent():
+    # lane 0 never moves; every lane's candidates match the LOC column
+    for lane in range(4):
+        locs = {int(mapping.LOC[s][lane]) for s in range(5)}
+        assert locs == set(mapping.CANDIDATES[lane])
+    assert set(mapping.CANDIDATES[0]) == {0}
+    # avg candidate count is 2 (paper: "on average two locations")
+    counts = [len(mapping.CANDIDATES[l]) for l in range(4)]
+    assert sum(counts) / 4 == 2.0
+    # vacated slots + occupied slots partition the group
+    for s in range(5):
+        for slot in range(4):
+            lanes = int(mapping.LANES_IN_SLOT[s][slot])
+            assert bool(lanes) == bool(mapping.OCCUPIED[s][slot])
+
+
+@given(st.integers(0, 4), st.booleans(), st.booleans(), st.booleans(),
+       st.integers(0, 15), st.integers(0, 15), st.booleans())
+def test_evict_plan_invariants(prior, fab, fcd, fq, valid, dirty, enabled):
+    plan = evict_plan(prior, fab, fcd, fq, valid, dirty, enabled)
+    dirty &= valid
+    # every dirty lane is covered by some write
+    written_lanes = {l for w in plan.writes for l in w[1]}
+    for lane in range(4):
+        if dirty & (1 << lane):
+            assert lane in written_lanes
+    # packed writes only contain valid lanes and only pack fitting units
+    for slot, lanes, packed, _ in plan.writes:
+        for l in lanes:
+            assert valid & (1 << l)
+        if packed:
+            assert enabled
+            assert len(lanes) in (2, 4)
+    # disabled compression never creates packed slots
+    if not enabled:
+        assert all(not w[2] for w in plan.writes)
+    # IL writes only on slots that previously held data
+    prior_slots = {int(mapping.LOC[prior][l]) for l in range(4)
+                   if valid & (1 << l)}
+    assert set(plan.il_slots) <= prior_slots
+    # clean drop: nothing happens without dirty data unless enabled packing
+    if dirty == 0 and not enabled:
+        assert not plan.writes and not plan.il_slots
+        assert plan.new_state == prior
+
+
+@given(st.integers(0, 4), st.integers(0, 1), st.integers(0, 1),
+       st.integers(0, 1), st.integers(0, 15), st.integers(0, 15),
+       st.integers(0, 1))
+def test_evict_table_matches_function(prior, fab, fcd, fq, valid, dirty,
+                                      enabled):
+    table = build_evict_table()
+    idx = int(evict_table_index(enabled, prior, fab, fcd, fq, valid, dirty))
+    plan = evict_plan(prior, bool(fab), bool(fcd), bool(fq), valid, dirty,
+                      bool(enabled))
+    assert table["wb_dirty"][idx] == plan.wb_dirty
+    assert table["wb_clean"][idx] == plan.wb_clean
+    assert table["il"][idx] == plan.il_count
+    assert table["new_state"][idx] == plan.new_state
+
+
+def test_probe_chain():
+    assert mapping.probe_chain(1, 0) == [0, 1]
+    assert mapping.probe_chain(3, 3) == [3, 2, 0]
+    assert mapping.probe_chain(3, 0) == [0, 3, 2]

@@ -1,0 +1,79 @@
+"""Fast-simulator invariants + cross-checks against scheme semantics."""
+
+import numpy as np
+import pytest
+
+from repro.core.memsim import SCHEMES, SimConfig, simulate
+from repro.core.traces import build_workload
+
+CFG = SimConfig()
+
+
+@pytest.fixture(scope="module")
+def wl():
+    return build_workload("libq", n_events=40_000, seed=1)
+
+
+def _run(wl, scheme):
+    _, addrs, wr, pa, pc, pq, f = wl
+    return simulate(scheme, addrs, wr, pa, pc, pq, CFG)
+
+
+def test_baseline_has_no_compression_traffic(wl):
+    r = _run(wl, "baseline")
+    s = r.stats
+    assert s["wb_clean"] == 0 and s["il_writes"] == 0
+    assert s["meta_reads"] == 0 and s["pf_installed"] == 0
+    assert s["read_probes"] == s["demand_reads"]
+
+
+def test_ideal_dominates_all_schemes(wl):
+    accesses = {sch: _run(wl, sch).accesses
+                for sch in ("baseline", "ideal", "explicit", "cram")}
+    assert accesses["ideal"] <= accesses["baseline"]
+    assert accesses["ideal"] <= accesses["cram"]
+    assert accesses["ideal"] <= accesses["explicit"]
+
+
+def test_cram_beats_explicit_on_metadata(wl):
+    cram = _run(wl, "cram")
+    expl = _run(wl, "explicit")
+    assert cram.stats["meta_reads"] == 0
+    assert expl.stats["meta_reads"] > 0
+    # the two compression schemes do the same data-side work
+    assert cram.stats["wb_clean"] == expl.stats["wb_clean"]
+    assert cram.stats["il_writes"] == expl.stats["il_writes"]
+
+
+def test_llp_high_accuracy_on_page_coherent_data(wl):
+    r = _run(wl, "cram")
+    assert r.llp_accuracy > 0.95
+
+
+def test_determinism(wl):
+    a = _run(wl, "dynamic").stats
+    b = _run(wl, "dynamic").stats
+    assert a == b
+
+
+def test_dynamic_bounded_by_static_cost():
+    """On hostile (incompressible, no-reuse) traffic the dynamic scheme
+    must stay close to baseline while static pays the compression tax."""
+    wl = build_workload("pr_twi", n_events=60_000, seed=3)
+    base = _run(wl, "baseline").accesses
+    cram = _run(wl, "cram").accesses
+    dyn = _run(wl, "dynamic").accesses
+    assert cram >= base  # static compression hurts here
+    assert dyn <= cram   # the gate can only help
+    # (full mitigation needs longer traces for the counter to settle; the
+    #  300k-event benchmark suite shows dyn ~= base on GAP workloads)
+
+
+def test_prefetch_hits_only_when_compression_on(wl):
+    assert _run(wl, "cram").stats["pf_used"] > 0
+    assert _run(wl, "baseline").stats["pf_used"] == 0
+
+
+def test_nextline_costs_bandwidth(wl):
+    nl = _run(wl, "nextline")
+    assert nl.stats["pf_extra_access"] == nl.stats["llc_misses"]

@@ -1,0 +1,75 @@
+"""Sharding-rule engine: divisibility fallbacks, ZeRO spec, cache axes."""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.runtime.sharding import RuleSet, spec_for, zero_spec
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    d = np.asarray(jax.devices())  # 1 CPU device: mesh math still applies
+    return Mesh(d.reshape(1, 1), ("data", "model"))
+
+
+def fake_mesh(shape=(16, 16), axes=("data", "model")):
+    class _M:  # duck-typed mesh: spec_for only reads .shape
+        pass
+
+    m = _M()
+    m.shape = dict(zip(axes, shape))
+    return m
+
+
+def test_divisible_dims_shard():
+    m = fake_mesh()
+    spec = spec_for(("vocab", "embed"), (200064, 3072), m)
+    assert spec == P(("model",))
+
+
+def test_indivisible_dims_replicate():
+    m = fake_mesh()
+    # 8 kv heads cannot shard 16 ways -> replicated
+    spec = spec_for(("embed", "kv_heads"), (4096, 1024), m)
+    assert spec == P(None, ("model",)) or spec == P(None, "model") \
+        or spec[1] is not None  # 1024 divisible: sharded
+    spec2 = spec_for((None, "kv_heads"), (4, 8), m)
+    assert len(spec2) == 0 or spec2[-1] is None
+
+
+def test_batch_spans_pod_and_data():
+    m = fake_mesh((2, 16, 16), ("pod", "data", "model"))
+    spec = spec_for(("batch", "seq"), (256, 4096), m)
+    assert tuple(spec[0]) == ("pod", "data")
+    assert spec[1] in (("model",), "model")  # Megatron-SP default seq rule
+
+
+def test_rule_override():
+    m = fake_mesh()
+    rules = RuleSet().override(seq=())
+    spec = spec_for(("batch", "seq"), (256, 4096), m, rules)
+    assert len(spec) == 1  # seq entry trimmed (replicated)
+
+
+def test_zero_spec_adds_data_axis():
+    m = fake_mesh()
+    base = spec_for(("vocab", "embed"), (32768, 12288), m)
+    z = zero_spec(base, (32768, 12288), m, "data")
+    assert z == P(("model",), "data")
+    # does not double-assign an axis already used
+    z2 = zero_spec(P("data"), (32,), m, "data")
+    assert z2 == P("data")
+    # respects divisibility
+    z3 = zero_spec(P(), (7, 3), m, "data")
+    assert z3 == P()
+
+
+def test_constrain_noop_outside_context():
+    import jax.numpy as jnp
+
+    from repro.runtime.sharding import constrain
+
+    x = jnp.ones((4, 4))
+    assert constrain(x, ("batch", None)) is x
