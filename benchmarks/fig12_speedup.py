@@ -5,6 +5,9 @@ Validated claims:
   * explicit metadata erodes/ inverts the benefit (Fig. 7)
   * implicit+LLP (cram) recovers it (Fig. 12)
   * Dynamic-CRAM keeps the win AND avoids every slowdown (Fig. 16/18)
+
+All numbers come from the one batched suite sweep (memsim_suite) through
+the shared aggregation helpers in sweep_report.py.
 """
 
 from __future__ import annotations
@@ -13,7 +16,8 @@ import json
 import time
 from pathlib import Path
 
-from .memsim_suite import geomean, suite_of, suite_results
+from .memsim_suite import suite_results
+from .sweep_report import speedup_aggregates
 
 OUT = Path(__file__).resolve().parents[1] / "experiments" / "memsim"
 
@@ -22,36 +26,24 @@ def run() -> list[tuple]:
     t0 = time.time()
     res = suite_results()
     dt = (time.time() - t0) * 1e6
+    agg = speedup_aggregates(res["workloads"])
+    n = max(len(res["workloads"]), 1)
     rows = []
-    by_scheme: dict[str, list] = {}
-    by_suite: dict[tuple, list] = {}
-    worst: dict[str, float] = {}
-    best: dict[str, float] = {}
-    for wl, r in res["workloads"].items():
-        for sch, d in r["schemes"].items():
-            if sch == "baseline":
-                continue
-            s = d["speedup"]
-            by_scheme.setdefault(sch, []).append(s)
-            by_suite.setdefault((suite_of(wl), sch), []).append(s)
-            worst[sch] = min(worst.get(sch, 9.9), s)
-            best[sch] = max(best.get(sch, 0.0), s)
-    for sch, xs in sorted(by_scheme.items()):
-        rows.append((f"fig16/geomean_{sch}", dt / max(len(xs), 1),
-                     f"{geomean(xs):.4f}"))
-        rows.append((f"fig18/worst_{sch}", 0.0, f"{worst[sch]:.4f}"))
-        rows.append((f"fig18/best_{sch}", 0.0, f"{best[sch]:.4f}"))
-    for (suite, sch), xs in sorted(by_suite.items()):
-        if sch in ("dynamic", "cram", "ideal", "explicit"):
-            rows.append((f"fig12/{suite}_{sch}", 0.0,
-                         f"{geomean(xs):.4f}"))
-    # paper-claim checks
-    dyn = by_scheme.get("dynamic", [1.0])
+    for sch, g in agg["geomean"].items():
+        rows.append((f"fig16/geomean_{sch}", dt / n, f"{g:.4f}"))
+        rows.append((f"fig18/worst_{sch}", 0.0, f"{agg['worst'][sch]:.4f}"))
+        rows.append((f"fig18/best_{sch}", 0.0, f"{agg['best'][sch]:.4f}"))
+    for suite, per in agg["by_suite"].items():
+        for sch, g in per.items():
+            if sch in ("dynamic", "cram", "ideal", "explicit"):
+                rows.append((f"fig12/{suite}_{sch}", 0.0, f"{g:.4f}"))
+    # paper-claim checks (same aggregates as the fig16/18 rows)
     rows.append(("claims/dynamic_no_slowdown", 0.0,
-                 f"worst={min(dyn):.4f} (paper: >=1.0 for all)"))
+                 f"worst={agg['worst']['dynamic']:.4f}"
+                 " (paper: >=1.0 for all)"))
     rows.append(("claims/dynamic_vs_ideal", 0.0,
-                 f"{geomean(dyn):.4f} vs {geomean(by_scheme['ideal']):.4f}"
-                 " (paper: 1.06 vs 1.09)"))
+                 f"{agg['geomean']['dynamic']:.4f} vs "
+                 f"{agg['geomean']['ideal']:.4f} (paper: 1.06 vs 1.09)"))
     # persist the per-workload s-curve for EXPERIMENTS.md
     (OUT / "speedups.json").write_text(json.dumps({
         wl: {sch: d["speedup"] for sch, d in r["schemes"].items()}

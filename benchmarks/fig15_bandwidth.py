@@ -1,25 +1,26 @@
 """Figs. 8/15: bandwidth breakdown (data / metadata / mispredict /
-clean-writeback+invalidate), normalized to the uncompressed baseline."""
+clean-writeback+invalidate), normalized to the uncompressed baseline.
+
+Breakdowns are computed once by sweep_report.bandwidth_breakdowns from the
+batched suite sweep; this module only formats them as CSV rows.
+"""
 
 from __future__ import annotations
 
 from .memsim_suite import suite_results
+from .sweep_report import bandwidth_breakdowns
 
 
 def run() -> list[tuple]:
     res = suite_results()
+    bw = bandwidth_breakdowns(res["workloads"])
     rows = []
-    for wl, r in sorted(res["workloads"].items()):
-        base = r["baseline_accesses"]
-        for sch in ("explicit", "cram"):
-            b = r["schemes"][sch]["breakdown"]
-            norm = {k: v / base for k, v in b.items()}
-            fig = "fig8" if sch == "explicit" else "fig15"
+    for sch, fig in (("explicit", "fig8"), ("cram", "fig15")):
+        for wl, b in bw[sch].items():
             rows.append((
                 f"{fig}/{wl}", 0.0,
                 "data=%.2f meta=%.2f mispred=%.3f wbclean+inv=%.2f" % (
-                    norm["data_reads"] + norm["wb_dirty"],
-                    norm["metadata"], norm["mispredict_extra"],
-                    norm["wb_clean+invalidate"]),
+                    b["data"], b["metadata"], b["mispredict"],
+                    b["wbclean+inv"]),
             ))
     return rows

@@ -45,6 +45,15 @@ def _corpus(n_lines_each: int = 4096, seed: int = 0) -> dict:
     return {k: v[: n_bytes] for k, v in out.items()}
 
 
+def pair_fit_stats(sizes) -> tuple[float, float]:
+    """P(adjacent line pair compresses to <=64B, <=60B) — the Fig. 4
+    statistic, shared with the run.py compress sweep."""
+    sizes = np.asarray(sizes)
+    n = sizes.shape[0] - sizes.shape[0] % 2
+    pair = sizes[0:n:2] + sizes[1:n:2]
+    return float((pair <= 64).mean()), float((pair <= PAYLOAD_BUDGET).mean())
+
+
 def run() -> list[tuple]:
     t0 = time.time()
     per_source = {}
@@ -52,15 +61,10 @@ def run() -> list[tuple]:
     for name, raw in _corpus().items():
         lines = raw.reshape(-1, 64)
         sizes = np.asarray(compressed_sizes(lines))
-        pair = sizes[0::2] + sizes[1::2]
-        p64 = float((pair <= 64).mean())
-        p60 = float((pair <= PAYLOAD_BUDGET).mean())
-        per_source[name] = (p64, p60)
+        per_source[name] = pair_fit_stats(sizes)
         all_sizes.append(sizes)
     sizes = np.concatenate(all_sizes)
-    pair = sizes[0::2] + sizes[1::2]
-    p64 = float((pair <= 64).mean())
-    p60 = float((pair <= PAYLOAD_BUDGET).mean())
+    p64, p60 = pair_fit_stats(sizes)
     dt = (time.time() - t0) * 1e6 / len(sizes)
     rows = [("fig4/pair_fits_64B", dt, f"{p64:.3f} (paper 0.38)"),
             ("fig4/pair_fits_60B", dt, f"{p60:.3f} (paper 0.36)"),

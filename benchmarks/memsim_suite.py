@@ -1,7 +1,10 @@
-"""Shared runner: simulate the full 27-workload suite once, cache results.
+"""Shared runner: one batched sweep covers the full 27-workload suite.
 
 Every figure-level benchmark (fig 3/7/12/14/15/16/18, tables IV/V) reads
-from this cache, so `python -m benchmarks.run` costs one suite pass.
+from this cache.  The suite is no longer a per-(scheme, workload) Python
+loop: repro.core.batchsim stacks all traces and runs every scheme ×
+workload pair inside a single jitted lax.scan dispatch, so a cold
+`python benchmarks/run.py` costs one compilation + one device program.
 """
 
 from __future__ import annotations
@@ -11,26 +14,34 @@ import os
 import time
 from pathlib import Path
 
-from repro.core.memsim import SCHEMES, SimConfig, run_workload
-from repro.core.traces import all_workload_names
+from repro.core.batchsim import sweep_workloads
+from repro.core.memsim import SCHEMES
 
 CACHE = Path(__file__).resolve().parents[1] / "experiments" / "memsim"
 N_EVENTS = int(os.environ.get("REPRO_BENCH_EVENTS", 300_000))
 
 
-def suite_results(force: bool = False) -> dict:
+def suite_results(force: bool = False, n_events: int | None = None,
+                  workloads=None, schemes=SCHEMES) -> dict:
+    """Batched suite sweep, cached on disk per event count."""
+    n_events = N_EVENTS if n_events is None else n_events
     CACHE.mkdir(parents=True, exist_ok=True)
-    path = CACHE / f"suite_{N_EVENTS}.json"
-    if path.exists() and not force:
+    path = CACHE / f"suite_{n_events}.json"
+    default_suite = workloads is None and tuple(schemes) == SCHEMES
+    if path.exists() and not force and default_suite:
         return json.loads(path.read_text())
-    out = {"n_events": N_EVENTS, "workloads": {}, "wall_s": {}}
-    for name in all_workload_names():
-        t0 = time.time()
-        out["workloads"][name] = run_workload(
-            name, schemes=SCHEMES, n_events=N_EVENTS)
-        out["wall_s"][name] = round(time.time() - t0, 2)
-        print(f"  memsim {name}: {out['wall_s'][name]}s", flush=True)
-    path.write_text(json.dumps(out))
+    t0 = time.time()
+    results = sweep_workloads(
+        names=workloads, schemes=schemes, n_events=n_events)
+    out = {
+        "n_events": n_events,
+        "workloads": results,
+        "sweep_wall_s": round(time.time() - t0, 2),
+    }
+    print(f"  memsim batched sweep ({len(results)} workloads x "
+          f"{len(schemes)} schemes): {out['sweep_wall_s']}s", flush=True)
+    if default_suite:
+        path.write_text(json.dumps(out))
     return out
 
 

@@ -1,16 +1,62 @@
-"""Benchmark driver: one module per paper table/figure + system benches.
+"""Benchmark driver: batched sweep CLI + legacy per-module tables.
 
-Prints ``name,us_per_call,derived`` CSV (one row per measured quantity) and
-mirrors everything to experiments/bench_results.json.
+Sweep mode (the fast path — ONE batched jitted dispatch per section):
+
+    python benchmarks/run.py --sweep all            # memsim + compress scan
+    python benchmarks/run.py --sweep memsim         # Fig. 12/15/16/18, Table V
+    python benchmarks/run.py --sweep compress       # Pallas image scan (Fig. 4)
+
+Sweep flags:
+    --events N        trace length per workload   (default $REPRO_BENCH_EVENTS
+                      or 300000)
+    --workloads a,b   comma-separated workload subset (default: full suite)
+    --schemes x,y     comma-separated scheme subset   (default: all six)
+    --out PATH        report path (default experiments/sweep_report.json)
+    --force           ignore the on-disk suite cache
+
+The consolidated JSON report written by --sweep has this schema:
+
+    {
+      "config":   {"sweep"; plus "n_events", "schemes", "workloads"
+                   when a memsim sweep ran — compress ignores those flags},
+      "memsim":   {                     # present for --sweep memsim/all
+        "n_events", "sweep_wall_s",
+        "speedups":        {workload: {scheme: speedup}},
+        "fig12_by_suite":  {suite: {scheme: geomean speedup}},
+        "fig16_geomean":   {scheme: geomean speedup},
+        "fig18_worst":     {scheme: min speedup},
+        "fig18_best":      {scheme: max speedup},
+        "fig8_explicit_bandwidth":  {workload: normalized breakdown},
+        "fig15_cram_bandwidth":     {workload: normalized breakdown},
+        "table5_prefetch_pct":      {"<suite>_<scheme>": percent},
+        "workloads":       {workload: full memsim.run_workload summary}
+      },
+      "compress": {                     # present for --sweep compress/all
+        "per_source": {source: {"pair_fits_64B", "pair_fits_60B",
+                                 "mean_size", "status_counts"}},
+        "overall":    {...same keys...},
+        "lines_scanned", "wall_s"
+      }
+    }
+
+Legacy mode (unchanged CSV): `python benchmarks/run.py [module ...]` runs
+the per-figure modules and prints ``name,us_per_call,derived`` rows,
+mirroring everything to experiments/bench_results.json.
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import sys
 import time
 import traceback
 from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parents[1]
+for _p in (str(_ROOT), str(_ROOT / "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
 MODULES = [
     "fig4_compressibility",
@@ -26,8 +72,85 @@ MODULES = [
 ]
 
 
-def main() -> None:
-    only = sys.argv[1:] or None
+def _sweep_memsim(args) -> dict:
+    from benchmarks.memsim_suite import suite_results
+    from benchmarks.sweep_report import build_report
+    from repro.core.memsim import SCHEMES
+
+    schemes = tuple(args.schemes.split(",")) if args.schemes else SCHEMES
+    workloads = args.workloads.split(",") if args.workloads else None
+    suite = suite_results(force=args.force, n_events=args.events,
+                          workloads=workloads, schemes=schemes)
+    return build_report(suite)
+
+
+def _sweep_compress(args) -> dict:
+    """One-pass Pallas compressibility scan over the Fig. 4 corpus."""
+    import numpy as np
+
+    from benchmarks.fig4_compressibility import _corpus, pair_fit_stats
+    from repro.kernels.compress_scan import compress_scan
+
+    t0 = time.time()
+    corpus = _corpus()
+    names, images = zip(*sorted(corpus.items()))
+    lines = np.concatenate([v.reshape(-1, 64) for v in images])
+    out = compress_scan(lines)          # single kernel dispatch, whole image
+
+    def stats(sizes, status):
+        p64, p60 = pair_fit_stats(sizes)
+        uniq, cnt = np.unique(status, return_counts=True)
+        return {
+            "pair_fits_64B": p64,
+            "pair_fits_60B": p60,
+            "mean_size": float(sizes.mean()),
+            "status_counts": {int(u): int(c) for u, c in zip(uniq, cnt)},
+        }
+
+    per_source, ofs = {}, 0
+    for name, img in zip(names, images):
+        n = img.size // 64
+        per_source[name] = stats(out["sizes"][ofs:ofs + n],
+                                 out["status"][ofs:ofs + n])
+        ofs += n
+    return {
+        "per_source": per_source,
+        "overall": stats(out["sizes"], out["status"]),
+        "lines_scanned": int(lines.shape[0]),
+        "wall_s": round(time.time() - t0, 2),
+    }
+
+
+def run_sweep(args) -> None:
+    # --events/--workloads/--schemes only shape the memsim section; the
+    # compress scan always covers the fixed Fig. 4 corpus, so record the
+    # flags under "config" only when a memsim sweep ran with them.
+    report: dict = {"config": {"sweep": args.sweep}}
+    if args.sweep in ("memsim", "all"):
+        report["config"].update(
+            n_events=args.events,
+            schemes=args.schemes or "all",
+            workloads=args.workloads or "all",
+        )
+        report["memsim"] = _sweep_memsim(args)
+        g = report["memsim"]["fig16_geomean"]
+        print("memsim geomean speedups:",
+              " ".join(f"{s}={v:.4f}" for s, v in g.items()))
+        print("table5:", {k: round(v, 1) for k, v in
+                          report["memsim"]["table5_prefetch_pct"].items()})
+    if args.sweep in ("compress", "all"):
+        report["compress"] = _sweep_compress(args)
+        o = report["compress"]["overall"]
+        print(f"compress scan: {report['compress']['lines_scanned']} lines, "
+              f"p64={o['pair_fits_64B']:.3f} p60={o['pair_fits_60B']:.3f}")
+    out_path = Path(args.out) if args.out else (
+        _ROOT / "experiments" / "sweep_report.json")
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(report, indent=1))
+    print(f"report -> {out_path}")
+
+
+def run_legacy(only) -> None:
     all_rows = []
     print("name,us_per_call,derived")
     for mod_name in MODULES:
@@ -46,9 +169,42 @@ def main() -> None:
                              "derived": str(derived)})
         print(f"# {mod_name} done in {time.time()-t0:.1f}s",
               file=sys.stderr)
-    out = Path(__file__).resolve().parents[1] / "experiments"
+    out = _ROOT / "experiments"
     out.mkdir(exist_ok=True)
     (out / "bench_results.json").write_text(json.dumps(all_rows, indent=1))
+
+
+def main() -> None:
+    import os
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("modules", nargs="*",
+                    help="legacy mode: per-figure modules to run")
+    ap.add_argument("--sweep", choices=("all", "memsim", "compress"),
+                    help="batched sweep mode; emits one JSON report")
+    ap.add_argument("--events", type=int, default=None,
+                    help="trace length per workload (sweep mode only; "
+                         "legacy mode reads $REPRO_BENCH_EVENTS)")
+    ap.add_argument("--workloads", help="comma-separated workload names")
+    ap.add_argument("--schemes", help="comma-separated scheme names")
+    ap.add_argument("--out", help="sweep report output path")
+    ap.add_argument("--force", action="store_true",
+                    help="ignore the on-disk suite cache")
+    args = ap.parse_args()
+    if args.sweep:
+        if args.events is None:
+            args.events = int(os.environ.get("REPRO_BENCH_EVENTS", 300_000))
+        run_sweep(args)
+    else:
+        given = [f for f, v in (("--events", args.events),
+                                ("--workloads", args.workloads),
+                                ("--schemes", args.schemes),
+                                ("--out", args.out),
+                                ("--force", args.force or None)) if v]
+        if given:
+            ap.error(f"{', '.join(given)} require(s) --sweep; legacy mode "
+                     "is configured via $REPRO_BENCH_EVENTS")
+        run_legacy(args.modules or None)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,97 @@
+"""Shared aggregations from a suite sweep to paper figure/table numbers.
+
+One place owns the figure math: fig12_speedup.py, fig15_bandwidth.py and
+table5_prefetch.py derive their CSV rows from these helpers, and
+`run.py --sweep` emits them together as one consolidated JSON report.
+
+All helpers take the `{workload: summary}` mapping produced by
+repro.core.batchsim.sweep_workloads (== memsim.run_workload per entry).
+"""
+
+from __future__ import annotations
+
+from .memsim_suite import geomean, suite_of
+
+
+def speedup_aggregates(workloads: dict) -> dict:
+    """Fig. 12/16/18 aggregates: per-scheme geomean / worst / best and
+    per-(suite, scheme) geomeans."""
+    by_scheme: dict[str, list] = {}
+    by_suite: dict[str, dict[str, list]] = {}
+    for wl, r in workloads.items():
+        for sch, d in r["schemes"].items():
+            if sch == "baseline":
+                continue
+            s = d["speedup"]
+            by_scheme.setdefault(sch, []).append(s)
+            by_suite.setdefault(suite_of(wl), {}).setdefault(sch, []).append(s)
+    return {
+        "geomean": {sch: geomean(xs) for sch, xs in sorted(by_scheme.items())},
+        "worst": {sch: min(xs) for sch, xs in sorted(by_scheme.items())},
+        "best": {sch: max(xs) for sch, xs in sorted(by_scheme.items())},
+        "by_suite": {
+            suite: {sch: geomean(xs) for sch, xs in sorted(per.items())}
+            for suite, per in sorted(by_suite.items())
+        },
+    }
+
+
+def bandwidth_breakdowns(workloads: dict,
+                         schemes=("explicit", "cram")) -> dict:
+    """Fig. 8/15 per-workload bandwidth breakdowns normalized to baseline."""
+    out: dict[str, dict] = {sch: {} for sch in schemes}
+    for wl, r in sorted(workloads.items()):
+        base = r["baseline_accesses"]
+        for sch in schemes:
+            if sch not in r["schemes"]:
+                continue
+            b = r["schemes"][sch]["breakdown"]
+            norm = {k: v / base for k, v in b.items()}
+            out[sch][wl] = {
+                "data": norm["data_reads"] + norm["wb_dirty"],
+                "metadata": norm["metadata"],
+                "mispredict": norm["mispredict_extra"],
+                "wbclean+inv": norm["wb_clean+invalidate"],
+                "total": r["schemes"][sch]["accesses"] / base,
+            }
+    return out
+
+
+def prefetch_table(workloads: dict) -> dict:
+    """Table V: next-line prefetch vs Dynamic-CRAM gain per suite (in %)."""
+    per: dict[tuple, list] = {}
+    for wl, r in workloads.items():
+        s = suite_of(wl)
+        for sch in ("nextline", "dynamic"):
+            if sch not in r["schemes"]:
+                continue
+            sp = r["schemes"][sch]["speedup"]
+            per.setdefault((sch, s), []).append(sp)
+            per.setdefault((sch, "ALL"), []).append(sp)
+    return {
+        f"{suite}_{sch}": (geomean(xs) - 1) * 100
+        for (sch, suite), xs in sorted(per.items())
+    }
+
+
+def build_report(suite: dict) -> dict:
+    """The consolidated sweep report (schema documented in run.py)."""
+    workloads = suite["workloads"]
+    agg = speedup_aggregates(workloads)
+    bw = bandwidth_breakdowns(workloads)
+    return {
+        "n_events": suite["n_events"],
+        "sweep_wall_s": suite.get("sweep_wall_s"),
+        "speedups": {
+            wl: {sch: d["speedup"] for sch, d in r["schemes"].items()}
+            for wl, r in workloads.items()
+        },
+        "fig12_by_suite": agg["by_suite"],
+        "fig16_geomean": agg["geomean"],
+        "fig18_worst": agg["worst"],
+        "fig18_best": agg["best"],
+        "fig8_explicit_bandwidth": bw.get("explicit", {}),
+        "fig15_cram_bandwidth": bw.get("cram", {}),
+        "table5_prefetch_pct": prefetch_table(workloads),
+        "workloads": workloads,
+    }

@@ -3,28 +3,18 @@
 Paper: prefetch -5.7% SPEC / -21.1% GAP / -9.7% ALL vs CRAM +8.5/+0.0/+5.5.
 The mechanism difference: prefetch pays an extra access per miss; CRAM's
 neighbor lines ride along for free.
+
+Numbers come from sweep_report.prefetch_table over the batched suite sweep.
 """
 
 from __future__ import annotations
 
-from .memsim_suite import geomean, suite_of, suite_results
+from .memsim_suite import suite_results
+from .sweep_report import prefetch_table
 
 
 def run() -> list[tuple]:
     res = suite_results()
-    per = {}
-    for wl, r in res["workloads"].items():
-        s = suite_of(wl)
-        per.setdefault(("nextline", s), []).append(
-            r["schemes"]["nextline"]["speedup"])
-        per.setdefault(("dynamic", s), []).append(
-            r["schemes"]["dynamic"]["speedup"])
-        per.setdefault(("nextline", "ALL"), []).append(
-            r["schemes"]["nextline"]["speedup"])
-        per.setdefault(("dynamic", "ALL"), []).append(
-            r["schemes"]["dynamic"]["speedup"])
-    rows = []
-    for (sch, s), xs in sorted(per.items()):
-        rows.append((f"table5/{s}_{sch}", 0.0,
-                     f"{(geomean(xs) - 1) * 100:+.1f}%"))
-    return rows
+    table = prefetch_table(res["workloads"])
+    return [(f"table5/{key}", 0.0, f"{pct:+.1f}%")
+            for key, pct in table.items()]

@@ -1,26 +1,47 @@
-"""Walk one workload through every memory-compression scheme of the paper
+"""Walk workloads through every memory-compression scheme of the paper
 and print the Fig. 16-style comparison.
 
-  PYTHONPATH=src python examples/memsim_demo.py [workload] [n_events]
+  PYTHONPATH=src python examples/memsim_demo.py [workloads] [n_events]
+
+`workloads` is a comma-separated list (default "libq").  All runs go
+through the batched engine (repro.core.batchsim.sweep_workloads), which
+simulates every scheme × workload pair in ONE jitted lax.scan dispatch —
+the same engine behind the full-suite sweep CLI (the scalar per-workload
+path remains available as repro.core.memsim.run_workload):
+
+  python benchmarks/run.py --sweep all [--events N] [--workloads a,b]
+                           [--schemes x,y] [--out PATH] [--force]
+
+That CLI writes one consolidated JSON report (experiments/sweep_report.json
+by default) with a "memsim" section (per-workload summaries plus the
+Fig. 12/15/16/18 and Table V aggregates keyed fig12_by_suite,
+fig15_cram_bandwidth, fig16_geomean, fig18_worst/best, table5_prefetch_pct)
+and a "compress" section (one-pass Pallas compressibility scan: pair-fit
+probabilities, mean sizes, marker status counts).  The full schema is in
+benchmarks/run.py's module docstring.
 """
 
 import sys
 
-from repro.core.memsim import SCHEMES, run_workload
+from repro.core.batchsim import sweep_workloads
+from repro.core.memsim import SCHEMES
 
-wl = sys.argv[1] if len(sys.argv) > 1 else "libq"
+wls = (sys.argv[1] if len(sys.argv) > 1 else "libq").split(",")
 n = int(sys.argv[2]) if len(sys.argv) > 2 else 150_000
 
-print(f"workload {wl}, {n} events  (f = memory-bound fraction)")
-res = run_workload(wl, schemes=SCHEMES, n_events=n)
-print(f"f = {res['f']:.2f}, baseline accesses = {res['baseline_accesses']}")
-hdr = f"{'scheme':<10} {'speedup':>8} {'accesses':>9} {'LLP':>6} {'metaHR':>7}"
-print(hdr + "\n" + "-" * len(hdr))
-for sch in SCHEMES:
-    d = res["schemes"][sch]
-    print(f"{sch:<10} {d['speedup']:>8.3f} {d['accesses']:>9} "
-          f"{d['llp_accuracy']:>6.3f} {d['meta_hit_rate']:>7.3f}")
-b = res["schemes"]["cram"]["breakdown"]
+print(f"workloads {wls}, {n} events  (f = memory-bound fraction)")
+results = sweep_workloads(names=wls, schemes=SCHEMES, n_events=n)
+for wl, res in results.items():
+    print(f"\n== {wl}: f = {res['f']:.2f}, "
+          f"baseline accesses = {res['baseline_accesses']}")
+    hdr = (f"{'scheme':<10} {'speedup':>8} {'accesses':>9} "
+           f"{'LLP':>6} {'metaHR':>7}")
+    print(hdr + "\n" + "-" * len(hdr))
+    for sch in SCHEMES:
+        d = res["schemes"][sch]
+        print(f"{sch:<10} {d['speedup']:>8.3f} {d['accesses']:>9} "
+              f"{d['llp_accuracy']:>6.3f} {d['meta_hit_rate']:>7.3f}")
+b = results[wls[0]]["schemes"]["cram"]["breakdown"]
 print("\nCRAM bandwidth breakdown:", b)
 print("\nThe paper's story: 'explicit' pays metadata bandwidth, 'cram' "
       "(implicit markers + LLP) removes it,\n'dynamic' disables "

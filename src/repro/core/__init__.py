@@ -11,11 +11,12 @@ Layers:
 
 from . import bdi, compress, dynamic, evict_logic, fpc, lit, llc, llp, mapping
 from . import marker
+from .batchsim import sweep, sweep_workloads
 from .cram import CRAMStats, CRAMSystem
 from .memsim import SCHEMES, SimConfig, run_workload, simulate, speedup
 
 __all__ = [
     "bdi", "compress", "dynamic", "evict_logic", "fpc", "lit", "llc", "llp",
     "mapping", "marker", "CRAMSystem", "CRAMStats", "SCHEMES", "SimConfig",
-    "run_workload", "simulate", "speedup",
+    "run_workload", "simulate", "speedup", "sweep", "sweep_workloads",
 ]

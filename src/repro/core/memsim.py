@@ -328,6 +328,22 @@ def _jit_sim(scheme: str, cfg: SimConfig):
     return jax.jit(run)
 
 
+def summarize_stats(scheme: str, stats_vec) -> SimResult:
+    """Fold a raw N_STATS vector into a SimResult (shared with batchsim)."""
+    stats = dict(zip(_STAT_NAMES, (int(x) for x in np.asarray(stats_vec))))
+    accesses = (
+        stats["read_probes"] + stats["wb_dirty"] + stats["wb_clean"]
+        + stats["il_writes"] + stats["meta_reads"] + stats["meta_wb"]
+        + stats["pf_extra_access"]
+    )
+    llp_acc = (
+        stats["pred_hit"] / stats["pred_total"] if stats["pred_total"] else 1.0
+    )
+    meta_tot = stats["meta_hits"] + stats["meta_reads"]
+    meta_hr = stats["meta_hits"] / meta_tot if meta_tot else 1.0
+    return SimResult(scheme, stats, accesses, llp_acc, meta_hr)
+
+
 def simulate(scheme: str, addrs, is_write, pair_ab, pair_cd, quad,
              cfg: SimConfig = SimConfig()) -> SimResult:
     import jax.numpy as jnp
@@ -342,23 +358,30 @@ def simulate(scheme: str, addrs, is_write, pair_ab, pair_cd, quad,
             jnp.asarray(quad),
         )
     )
-    stats = dict(zip(_STAT_NAMES, (int(x) for x in stats_vec)))
-    accesses = (
-        stats["read_probes"] + stats["wb_dirty"] + stats["wb_clean"]
-        + stats["il_writes"] + stats["meta_reads"] + stats["meta_wb"]
-        + stats["pf_extra_access"]
-    )
-    llp_acc = (
-        stats["pred_hit"] / stats["pred_total"] if stats["pred_total"] else 1.0
-    )
-    meta_tot = stats["meta_hits"] + stats["meta_reads"]
-    meta_hr = stats["meta_hits"] / meta_tot if meta_tot else 1.0
-    return SimResult(scheme, stats, accesses, llp_acc, meta_hr)
+    return summarize_stats(scheme, stats_vec)
 
 
 def speedup(baseline_accesses: int, scheme_accesses: int, f: float) -> float:
     ratio = scheme_accesses / max(baseline_accesses, 1)
     return 1.0 / ((1.0 - f) + f * ratio)
+
+
+def summarize_workload(name: str, f: float, results: dict[str, SimResult],
+                       baseline_accesses: int) -> dict:
+    """Per-workload summary dict (shared between the scalar and batched
+    drivers so their reports are field-for-field comparable)."""
+    summary = {
+        sch: {
+            "accesses": r.accesses,
+            "speedup": speedup(baseline_accesses, r.accesses, f),
+            "llp_accuracy": r.llp_accuracy,
+            "meta_hit_rate": r.meta_hit_rate,
+            "breakdown": r.bandwidth_breakdown(),
+        }
+        for sch, r in results.items()
+    }
+    return {"workload": name, "f": f,
+            "baseline_accesses": baseline_accesses, "schemes": summary}
 
 
 def run_workload(name: str, schemes=SCHEMES, n_events: int = 200_000,
@@ -375,15 +398,4 @@ def run_workload(name: str, schemes=SCHEMES, n_events: int = 200_000,
             base = res.accesses
     if base is None:
         base = simulate("baseline", addrs, is_write, pab, pcd, pq, cfg).accesses
-    summary = {
-        sch: {
-            "accesses": r.accesses,
-            "speedup": speedup(base, r.accesses, f),
-            "llp_accuracy": r.llp_accuracy,
-            "meta_hit_rate": r.meta_hit_rate,
-            "breakdown": r.bandwidth_breakdown(),
-        }
-        for sch, r in out.items()
-    }
-    return {"workload": name, "f": f, "baseline_accesses": base,
-            "schemes": summary}
+    return summarize_workload(name, f, out, base)

@@ -1,3 +1,11 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the CRAM compute hot-spots (+ pure-jnp oracles).
+
+  compress_scan.py  one-pass image compressibility + marker classification
+  bdi_pack.py       CRAM-KV 2:1 pair packing / unpacking
+  cram_attention.py fused marker-check/unpack/flash-decode attention
+  ops.py            public jit'd wrappers over the KV kernels
+  ref.py            pure-jnp oracles (the allclose/equality targets)
+
+All kernels default to interpret mode off-TPU, so the package is fully
+exercised on CPU; numpy reference paths stay the bit-true source of truth.
+"""

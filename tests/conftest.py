@@ -4,13 +4,28 @@ import os
 # exclusively for launch/dryrun.py runs).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
-from hypothesis import HealthCheck, settings
-
-settings.register_profile(
-    "ci",
-    max_examples=25,
-    deadline=None,
-    suppress_health_check=[HealthCheck.too_slow],
-    derandomize=True,
-)
-settings.load_profile("ci")
+# `hypothesis` is an optional dev dependency (declared in pyproject.toml).
+# When it is absent, skip collecting the property-based test modules instead
+# of erroring out of the whole suite: the deterministic tier-1 tests must be
+# runnable from a clean checkout with only jax+numpy+pytest.
+try:
+    from hypothesis import HealthCheck, settings
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+    collect_ignore = [
+        "test_codecs.py",
+        "test_cram_functional.py",
+        "test_kernels.py",
+        "test_marker_mapping.py",
+        "test_substrates.py",
+    ]
+else:
+    HAVE_HYPOTHESIS = True
+    settings.register_profile(
+        "ci",
+        max_examples=25,
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow],
+        derandomize=True,
+    )
+    settings.load_profile("ci")

@@ -1,0 +1,83 @@
+"""Batched sweep engine vs the scalar per-workload simulator: exact parity.
+
+The batched engine's contract is bit-identical stats (batchsim's step is the
+flag-gated twin of memsim's per-scheme specialized steps), so these tests
+use array_equal / exact float equality, not allclose.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.batchsim import scheme_flags, sweep, sweep_workloads
+from repro.core.memsim import (
+    N_STATS,
+    SCHEMES,
+    SimConfig,
+    _STAT_NAMES,
+    run_workload,
+    simulate,
+)
+from repro.core.traces import build_workload
+
+CFG = SimConfig()
+N_EVENTS = 12_000
+# one compressible SPEC workload, one hostile GAP workload, one mix: covers
+# the compression win, the dynamic-disable path, and interleaved traces
+NAMES = ("libq", "pr_twi", "mix3")
+
+
+@pytest.fixture(scope="module")
+def wls():
+    return {n: build_workload(n, N_EVENTS, seed=1) for n in NAMES}
+
+
+@pytest.fixture(scope="module")
+def batched(wls):
+    ws = [wls[n] for n in NAMES]
+    return sweep(
+        SCHEMES,
+        np.stack([w[1] for w in ws]),
+        np.stack([w[2] for w in ws]),
+        np.stack([w[3] for w in ws]),
+        np.stack([w[4] for w in ws]),
+        np.stack([w[5] for w in ws]),
+        CFG,
+    )
+
+
+def test_sweep_shape(batched):
+    assert batched.shape == (len(SCHEMES), len(NAMES), N_STATS)
+    assert batched.dtype == np.int32
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_stats_exactly_match_scalar_path(batched, wls, scheme):
+    si = SCHEMES.index(scheme)
+    for wi, name in enumerate(NAMES):
+        _, addrs, wr, pab, pcd, pq, _ = wls[name]
+        ref = simulate(scheme, addrs, wr, pab, pcd, pq, CFG)
+        ref_vec = np.asarray([ref.stats[k] for k in _STAT_NAMES], np.int32)
+        assert np.array_equal(batched[si, wi], ref_vec), (
+            f"{scheme}/{name}: batched {batched[si, wi]} != scalar {ref_vec}")
+
+
+def test_sweep_workloads_matches_run_workload():
+    got = sweep_workloads(names=["libq"], n_events=N_EVENTS, seed=1, cfg=CFG)
+    ref = run_workload("libq", n_events=N_EVENTS, seed=1, cfg=CFG)
+    assert got["libq"] == ref  # same summary dict, exact floats included
+
+
+def test_scheme_subset_includes_baseline_normalization():
+    got = sweep_workloads(names=["libq"], schemes=("cram",),
+                          n_events=N_EVENTS, seed=1, cfg=CFG)["libq"]
+    assert set(got["schemes"]) == {"cram"}
+    assert got["baseline_accesses"] > 0
+    assert got["schemes"]["cram"]["speedup"] > 0
+
+
+def test_scheme_flags_table():
+    f = scheme_flags(SCHEMES)
+    assert f.shape == (len(SCHEMES), 6)
+    # baseline has no behaviour flags; dynamic is a compressed+llp scheme
+    assert not f[SCHEMES.index("baseline")].any()
+    assert f[SCHEMES.index("dynamic")][0] and f[SCHEMES.index("dynamic")][5]

@@ -1,0 +1,121 @@
+"""Pallas compressibility-scan kernel vs the bit-true numpy references.
+
+Sizes must equal core/compress.compressed_sizes exactly (that module stays
+the reference codec); marker classification must equal the uint32 numpy
+reference, including on adversarial marker-colliding lines.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.compress import compressed_sizes
+from repro.core.marker import LineStatus
+from repro.kernels.compress_scan import (
+    classify_image_ref,
+    compress_scan,
+    device_il_words,
+    device_markers,
+)
+
+
+def _corpus(n: int, seed: int = 0) -> np.ndarray:
+    """Random + structured lines exercising every FPC/BDI mode family."""
+    rng = np.random.default_rng(seed)
+    lines = rng.integers(0, 256, (n, 64)).astype(np.uint8)
+    lines[0::7] = 0                                            # M_ZEROS
+    lines[1::7] = np.tile(rng.integers(0, 256, 8).astype(np.uint8), 8)
+    base = rng.integers(0, 2**31, dtype=np.int64)              # M_REP8
+    k = len(lines[2::5])
+    lines[2::5] = (base + rng.integers(-100, 100, (k, 8))).astype(
+        "<i8").view(np.uint8).reshape(k, 64)                   # B8D1/D2
+    k = len(lines[3::5])
+    lines[3::5] = rng.integers(-7, 8, (k, 16)).astype(
+        "<i4").view(np.uint8).reshape(k, 64)                   # FPC SE4
+    k = len(lines[4::5])
+    lines[4::5] = (1000 + rng.integers(-120, 120, (k, 32))).astype(
+        "<i2").view(np.uint8).reshape(k, 64)                   # B2D1 / SE16
+    return lines
+
+
+def test_sizes_match_reference_exactly():
+    lines = _corpus(1024)
+    out = compress_scan(lines, interpret=True)
+    ref = np.asarray(compressed_sizes(lines))
+    assert np.array_equal(out["sizes"], ref)
+    assert out["sizes"].min() >= 1 and out["sizes"].max() <= 65
+
+
+def test_sizes_match_on_non_block_multiple():
+    lines = _corpus(301, seed=3)  # exercises the padding path
+    out = compress_scan(lines, interpret=True, block=128)
+    assert np.array_equal(out["sizes"], np.asarray(compressed_sizes(lines)))
+    assert out["sizes"].shape == (301,)
+
+
+def test_status_matches_reference_on_random_lines():
+    lines = _corpus(512, seed=1)
+    out = compress_scan(lines, interpret=True)
+    assert np.array_equal(out["status"], classify_image_ref(lines))
+    # random data essentially never collides with a 32-bit marker
+    assert (out["status"] == int(LineStatus.UNCOMP)).mean() > 0.99
+
+
+def test_status_on_adversarial_marker_collisions():
+    """Lines crafted to collide with their slot's marker family must be
+    classified exactly as the implicit-metadata rules dictate."""
+    n = 64
+    rng = np.random.default_rng(2)
+    lines = rng.integers(0, 256, (n, 64)).astype(np.uint8)
+    m2, m4 = device_markers(np.arange(n))
+    il = device_il_words(np.arange(n))
+    lines[0, -4:] = np.frombuffer(m2[0].tobytes(), np.uint8)
+    lines[1, -4:] = np.frombuffer(m4[1].tobytes(), np.uint8)
+    lines[2] = il[2].astype("<u4").view(np.uint8)
+    lines[3, -4:] = np.frombuffer((~m2[3]).tobytes(), np.uint8)
+    lines[4, -4:] = np.frombuffer((~m4[4]).tobytes(), np.uint8)
+    lines[5] = (~il[5]).astype("<u4").view(np.uint8)
+    out = compress_scan(lines, interpret=True)
+    assert out["status"][0] == int(LineStatus.COMP2)
+    assert out["status"][1] == int(LineStatus.COMP4)
+    assert out["status"][2] == int(LineStatus.INVALID)
+    assert out["status"][3] == int(LineStatus.MAYBE_INVERTED)
+    assert out["status"][4] == int(LineStatus.MAYBE_INVERTED)
+    assert out["status"][5] == int(LineStatus.MAYBE_INVERTED)
+    assert np.array_equal(out["status"], classify_image_ref(lines))
+
+
+def test_marker_collision_does_not_change_size():
+    """Marker collision affects *classification* (the LIT/inversion path),
+    never the codec's size accounting."""
+    n = 32
+    rng = np.random.default_rng(4)
+    lines = rng.integers(0, 256, (n, 64)).astype(np.uint8)
+    m2, _ = device_markers(np.arange(n))
+    collided = lines.copy()
+    collided[:, -4:] = np.stack(
+        [np.frombuffer(m.tobytes(), np.uint8) for m in m2])
+    out = compress_scan(collided, interpret=True)
+    assert np.array_equal(out["sizes"],
+                          np.asarray(compressed_sizes(collided)))
+
+
+def test_fpc_bdi_components_bound_hybrid():
+    lines = _corpus(512, seed=5)
+    out = compress_scan(lines, interpret=True)
+    hybrid = np.minimum(np.minimum(out["fpc"], out["bdi"]), 64) + 1
+    assert np.array_equal(out["sizes"], hybrid)
+
+
+@pytest.mark.parametrize("key", [0x5EED, 0, 0xDEADBEEF])
+def test_marker_key_regeneration(key):
+    """Same protocol as marker.MarkerSpec.regenerate: a new key gives a new
+    marker family, so prior collisions disappear."""
+    n = 16
+    lines = np.zeros((n, 64), np.uint8)
+    m2, _ = device_markers(np.arange(n), key)
+    lines[:, -4:] = np.stack(
+        [np.frombuffer(m.tobytes(), np.uint8) for m in m2])
+    got = compress_scan(lines, key=key, interpret=True)["status"]
+    assert (got == int(LineStatus.COMP2)).all()
+    other = compress_scan(lines, key=key + 1, interpret=True)["status"]
+    assert (other == int(LineStatus.COMP2)).mean() < 0.1
