@@ -5,6 +5,11 @@ from this cache.  The suite is no longer a per-(scheme, workload) Python
 loop: repro.core.batchsim stacks all traces and runs every scheme ×
 workload pair inside a single jitted lax.scan dispatch, so a cold
 `python benchmarks/run.py` costs one compilation + one device program.
+
+The default scheme set is the six paper schemes plus the registry extras
+(`cram-nollp` and the `cram@lct*` LCT-size config axis) — all riding in
+the same single dispatch, since schemes and configs are just rows of the
+engine's (flags, params) matrices.
 """
 
 from __future__ import annotations
@@ -16,18 +21,27 @@ from pathlib import Path
 
 from repro.core.batchsim import sweep_workloads
 from repro.core.memsim import SCHEMES
+from repro.core.schemes import LCT_SENSITIVITY
 
 CACHE = Path(__file__).resolve().parents[1] / "experiments" / "memsim"
 N_EVENTS = int(os.environ.get("REPRO_BENCH_EVENTS", 300_000))
 
+# registry extras riding in the same dispatch as the six base schemes
+EXTRA_SCHEMES = ("cram-nollp",) + LCT_SENSITIVITY
+DEFAULT_SCHEMES = SCHEMES + EXTRA_SCHEMES
+
 
 def suite_results(force: bool = False, n_events: int | None = None,
-                  workloads=None, schemes=SCHEMES) -> dict:
-    """Batched suite sweep, cached on disk per event count."""
+                  workloads=None, schemes=DEFAULT_SCHEMES) -> dict:
+    """Batched suite sweep, cached on disk per event count.
+
+    The cache file is versioned (v2: deterministic trace seeding + registry
+    extras); stale v1 caches are simply never read again.
+    """
     n_events = N_EVENTS if n_events is None else n_events
     CACHE.mkdir(parents=True, exist_ok=True)
-    path = CACHE / f"suite_{n_events}.json"
-    default_suite = workloads is None and tuple(schemes) == SCHEMES
+    path = CACHE / f"suite_v2_{n_events}.json"
+    default_suite = workloads is None and tuple(schemes) == DEFAULT_SCHEMES
     if path.exists() and not force and default_suite:
         return json.loads(path.read_text())
     t0 = time.time()
@@ -35,6 +49,7 @@ def suite_results(force: bool = False, n_events: int | None = None,
         names=workloads, schemes=schemes, n_events=n_events)
     out = {
         "n_events": n_events,
+        "schemes": list(schemes),
         "workloads": results,
         "sweep_wall_s": round(time.time() - t0, 2),
     }

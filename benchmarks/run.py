@@ -10,7 +10,8 @@ Sweep flags:
     --events N        trace length per workload   (default $REPRO_BENCH_EVENTS
                       or 300000)
     --workloads a,b   comma-separated workload subset (default: full suite)
-    --schemes x,y     comma-separated scheme subset   (default: all six)
+    --schemes x,y     comma-separated scheme subset   (default: the six paper
+                      schemes + registry extras: cram-nollp, cram@lct64/128/256)
     --out PATH        report path (default experiments/sweep_report.json)
     --force           ignore the on-disk suite cache
 
@@ -29,6 +30,9 @@ The consolidated JSON report written by --sweep has this schema:
         "fig8_explicit_bandwidth":  {workload: normalized breakdown},
         "fig15_cram_bandwidth":     {workload: normalized breakdown},
         "table5_prefetch_pct":      {"<suite>_<scheme>": percent},
+        "llp_value":       {cram / cram-nollp geomeans + llp_gain_pct},
+        "lct_sensitivity": {lct_size: {geomean_speedup,
+                            mean_one_access_rate}}  # cram@lct* config axis
         "workloads":       {workload: full memsim.run_workload summary}
       },
       "compress": {                     # present for --sweep compress/all
@@ -73,11 +77,12 @@ MODULES = [
 
 
 def _sweep_memsim(args) -> dict:
-    from benchmarks.memsim_suite import suite_results
+    from benchmarks.memsim_suite import DEFAULT_SCHEMES, suite_results
     from benchmarks.sweep_report import build_report
-    from repro.core.memsim import SCHEMES
 
-    schemes = tuple(args.schemes.split(",")) if args.schemes else SCHEMES
+    # default: six paper schemes + registry extras (cram-nollp ablation and
+    # the cram@lct* config axis) — all rows of ONE batched dispatch
+    schemes = tuple(args.schemes.split(",")) if args.schemes else DEFAULT_SCHEMES
     workloads = args.workloads.split(",") if args.workloads else None
     suite = suite_results(force=args.force, n_events=args.events,
                           workloads=workloads, schemes=schemes)
@@ -138,6 +143,15 @@ def run_sweep(args) -> None:
               " ".join(f"{s}={v:.4f}" for s, v in g.items()))
         print("table5:", {k: round(v, 1) for k, v in
                           report["memsim"]["table5_prefetch_pct"].items()})
+        lct = report["memsim"]["lct_sensitivity"]
+        if lct:
+            print("lct sensitivity:",
+                  " ".join(f"{n}={d['geomean_speedup']:.4f}"
+                           for n, d in lct.items()))
+        llp = report["memsim"]["llp_value"]
+        if "llp_gain_pct" in llp:
+            print(f"llp value: +{llp['llp_gain_pct']:.2f}% geomean "
+                  "(cram vs cram-nollp)")
     if args.sweep in ("compress", "all"):
         report["compress"] = _sweep_compress(args)
         o = report["compress"]["overall"]

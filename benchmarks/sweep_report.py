@@ -6,21 +6,45 @@ table5_prefetch.py derive their CSV rows from these helpers, and
 
 All helpers take the `{workload: summary}` mapping produced by
 repro.core.batchsim.sweep_workloads (== memsim.run_workload per entry).
+The suite may carry registry extras beyond the six paper schemes
+(cram-nollp, the cram@lct* config axis); the Fig. 12/16/18 aggregates
+stay restricted to the paper schemes, while the extras feed the
+dedicated llp_value / lct_sensitivity sections.
 """
 
 from __future__ import annotations
 
+import dataclasses
+
+from repro.core import schemes as schemes_registry
+from repro.core.memsim import SCHEMES as BASE_SCHEMES
+
 from .memsim_suite import geomean, suite_of
 
 
-def speedup_aggregates(workloads: dict) -> dict:
+def _lct_point(sch_name: str) -> "int | None":
+    """The LCT size of `sch_name` if it is cram-modulo-LCT-size (the
+    registry is the source of truth; cram itself is the full-size point),
+    else None."""
+    try:
+        sch = schemes_registry.get(sch_name)
+    except KeyError:
+        return None
+    cram = schemes_registry.get("cram")
+    as_cram = dataclasses.replace(sch, name=cram.name, lct_size=cram.lct_size,
+                                  description=cram.description)
+    return sch.lct_size if as_cram == cram else None
+
+
+def speedup_aggregates(workloads: dict, include=None) -> dict:
     """Fig. 12/16/18 aggregates: per-scheme geomean / worst / best and
-    per-(suite, scheme) geomeans."""
+    per-(suite, scheme) geomeans.  `include` restricts the scheme set
+    (None = every scheme present)."""
     by_scheme: dict[str, list] = {}
     by_suite: dict[str, dict[str, list]] = {}
     for wl, r in workloads.items():
         for sch, d in r["schemes"].items():
-            if sch == "baseline":
+            if sch == "baseline" or (include is not None and sch not in include):
                 continue
             s = d["speedup"]
             by_scheme.setdefault(sch, []).append(s)
@@ -74,10 +98,50 @@ def prefetch_table(workloads: dict) -> dict:
     }
 
 
+def llp_value_table(workloads: dict) -> dict:
+    """LLP predictor value: cram (learned LCT) vs cram-nollp (LCT frozen at
+    level 0).  The gap is the bandwidth the predictor earns."""
+    out: dict = {}
+    for sch in ("cram", "cram-nollp"):
+        sp = [r["schemes"][sch]["speedup"] for r in workloads.values()
+              if sch in r["schemes"]]
+        acc = [r["schemes"][sch]["llp_accuracy"] for r in workloads.values()
+               if sch in r["schemes"]]
+        if sp:
+            out[sch] = {"geomean_speedup": geomean(sp),
+                        "mean_one_access_rate": sum(acc) / len(acc)}
+    if "cram" in out and "cram-nollp" in out:
+        out["llp_gain_pct"] = (
+            out["cram"]["geomean_speedup"]
+            / out["cram-nollp"]["geomean_speedup"] - 1) * 100
+    return out
+
+
+def lct_sensitivity_table(workloads: dict) -> dict:
+    """Fig. 14-style LCT-size sensitivity from the cram@lct* config axis
+    (cram itself is the full 512-entry point)."""
+    sizes: dict[int, str] = {}
+    for r in workloads.values():
+        for sch in r["schemes"]:
+            point = _lct_point(sch)
+            if point is not None:
+                sizes[point] = sch
+    out = {}
+    for size, sch in sorted(sizes.items()):
+        sp = [r["schemes"][sch]["speedup"] for r in workloads.values()
+              if sch in r["schemes"]]
+        acc = [r["schemes"][sch]["llp_accuracy"] for r in workloads.values()
+               if sch in r["schemes"]]
+        if sp:
+            out[str(size)] = {"geomean_speedup": geomean(sp),
+                              "mean_one_access_rate": sum(acc) / len(acc)}
+    return out
+
+
 def build_report(suite: dict) -> dict:
     """The consolidated sweep report (schema documented in run.py)."""
     workloads = suite["workloads"]
-    agg = speedup_aggregates(workloads)
+    agg = speedup_aggregates(workloads, include=BASE_SCHEMES)
     bw = bandwidth_breakdowns(workloads)
     return {
         "n_events": suite["n_events"],
@@ -93,5 +157,7 @@ def build_report(suite: dict) -> dict:
         "fig8_explicit_bandwidth": bw.get("explicit", {}),
         "fig15_cram_bandwidth": bw.get("cram", {}),
         "table5_prefetch_pct": prefetch_table(workloads),
+        "llp_value": llp_value_table(workloads),
+        "lct_sensitivity": lct_sensitivity_table(workloads),
         "workloads": workloads,
     }

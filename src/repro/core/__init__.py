@@ -6,17 +6,43 @@ Layers:
     lit (inversion table), llp (line-location predictor), dynamic (cost/benefit
     counter), evict_logic (layout transitions)
   * models: cram (exact functional compressed memory), llc (group LLC),
-    memsim (fast trace-driven bandwidth simulator), traces (workload suite)
+    engine (the one trace-sim step/state/stats definition), schemes
+    (declarative scheme registry), memsim (scalar front-end), batchsim
+    (batched scheme × config × workload sweep), traces (workload suite)
 """
 
-from . import bdi, compress, dynamic, evict_logic, fpc, lit, llc, llp, mapping
-from . import marker
+from . import bdi, compress, dynamic, engine, evict_logic, fpc, lit, llc, llp
+from . import mapping, marker, schemes
 from .batchsim import sweep, sweep_workloads
 from .cram import CRAMStats, CRAMSystem
+from .engine import N_STATS, STAT_NAMES  # single definition, engine-owned
+from .engine import (
+    ST_DEMAND_READS,
+    ST_IL_WRITES,
+    ST_LLC_HITS,
+    ST_LLC_MISSES,
+    ST_META_HITS,
+    ST_META_READS,
+    ST_META_WB,
+    ST_PF_EXTRA_ACCESS,
+    ST_PF_INSTALLED,
+    ST_PF_USED,
+    ST_PRED_HIT,
+    ST_PRED_TOTAL,
+    ST_READ_PROBES,
+    ST_WB_CLEAN,
+    ST_WB_DIRTY,
+)
 from .memsim import SCHEMES, SimConfig, run_workload, simulate, speedup
+from .schemes import Scheme
 
 __all__ = [
-    "bdi", "compress", "dynamic", "evict_logic", "fpc", "lit", "llc", "llp",
-    "mapping", "marker", "CRAMSystem", "CRAMStats", "SCHEMES", "SimConfig",
-    "run_workload", "simulate", "speedup", "sweep", "sweep_workloads",
+    "bdi", "compress", "dynamic", "engine", "evict_logic", "fpc", "lit",
+    "llc", "llp", "mapping", "marker", "schemes", "CRAMSystem", "CRAMStats",
+    "Scheme", "SCHEMES", "SimConfig", "run_workload", "simulate", "speedup",
+    "sweep", "sweep_workloads", "N_STATS", "STAT_NAMES",
+    "ST_READ_PROBES", "ST_DEMAND_READS", "ST_WB_DIRTY", "ST_WB_CLEAN",
+    "ST_IL_WRITES", "ST_META_READS", "ST_META_WB", "ST_META_HITS",
+    "ST_PF_INSTALLED", "ST_PF_USED", "ST_PRED_TOTAL", "ST_PRED_HIT",
+    "ST_LLC_HITS", "ST_LLC_MISSES", "ST_PF_EXTRA_ACCESS",
 ]

@@ -1,19 +1,24 @@
-"""Batched multi-workload × multi-scheme trace simulator (one lax.scan).
+"""Batched multi-workload × multi-scheme sweep — the engine's vmapped side.
 
-The scalar simulator (memsim.py) specializes one jitted scan per scheme and
-walks one workload at a time, so the 27-workload × 6-scheme benchmark sweep
-pays six compilations and 162 sequential dispatches of a 300k-step scan.
-This module turns the *scheme* into a data axis: a single step function,
-parameterized by a small per-scheme flag vector, performs the same integer
-arithmetic as every specialized step in memsim, and is vmapped over schemes
-and again over workloads.  The whole sweep is then ONE jitted `lax.scan`
-over time with a (schemes × workloads) batch at every step.
+The step function lives in `core.engine` (shared verbatim with the scalar
+simulator in memsim.py); this module owns the batched dispatch:
 
-Exactness contract: for each scheme the flag-gated step is arithmetically
-identical to memsim._jit_sim's specialized step — every stat counter is
-produced by the same sequence of int32 ops, only selected by traced flags
-instead of Python conditionals.  tests/test_batchsim.py asserts the final
-stats vectors match the scalar path exactly, per (scheme, workload).
+  * **scheme axis** — engine (flags, params) rows stacked to (S, N_FLAGS)
+    / (S, N_PARAMS) and vmapped.  Because params are traced data, config
+    ablations (LCT size, sampling threshold, counter init — see
+    schemes.variant) ride in the same dispatch as behaviour variants:
+    a Fig. 14-style LCT-size sensitivity sweep is just more rows.
+  * **workload axis** — traces stacked to (W, T) and vmapped; optionally
+    sharded across devices with `shard_map` (clean single-device
+    fallback when only one device is present or W doesn't divide).
+  * **time axis** — `chunk_size` splits the scan into a Python loop of
+    jitted chunk dispatches with a donated carry (bounded compile/live
+    memory for very long traces; donation is a no-op on CPU).
+
+Exactness contract: all execution modes produce bit-identical int32 stats
+to the scalar path — lax.scan is sequential whether run whole or chunked,
+and sharding only partitions the already-independent workload axis.
+tests/test_batchsim.py and tests/test_engine.py assert this exactly.
 
 Entry points:
   sweep(...)            — raw (S, W, N_STATS) stats from stacked traces
@@ -27,323 +32,131 @@ import functools
 
 import numpy as np
 
-from .dynamic import (
-    COUNTER_INIT,
-    COUNTER_MAX,
-    ENABLE_THRESHOLD,
-    is_sampled_set,
-)
-from .evict_logic import build_evict_table, evict_table_index
-from .llp import LCT_ENTRIES, LINES_PER_PAGE, _HASH_MULT
-from .mapping import LANE_LEVEL, LANES_IN_SLOT, LOC
-from .memsim import (
-    N_STATS,
-    SCHEMES,
-    ST_DEMAND_READS,
-    ST_IL_WRITES,
-    ST_LLC_HITS,
-    ST_LLC_MISSES,
-    ST_META_HITS,
-    ST_META_READS,
-    ST_META_WB,
-    ST_PF_EXTRA_ACCESS,
-    ST_PF_INSTALLED,
-    ST_PF_USED,
-    ST_PRED_HIT,
-    ST_PRED_TOTAL,
-    ST_READ_PROBES,
-    ST_WB_CLEAN,
-    ST_WB_DIRTY,
-    SimConfig,
-    _probe_count_table,
-    summarize_stats,
-    summarize_workload,
-)
-
-# per-scheme behaviour flags (int32 vector fed to the traced step)
-(
-    FLAG_COMP,       # compressed layout transitions + ganged fills
-    FLAG_LLP,        # implicit metadata: LLP probe chain + LCT updates
-    FLAG_META,       # explicit metadata cache traffic
-    FLAG_NEXTLINE,   # next-line prefetch on miss
-    FLAG_IDEAL,      # compression benefits with zero maintenance cost
-    FLAG_DYNAMIC,    # set-sampled cost/benefit gate
-    N_FLAGS,
-) = range(7)
-
-_SCHEME_FLAGS = {
-    "baseline": (0, 0, 0, 0, 0, 0),
-    "nextline": (0, 0, 0, 1, 0, 0),
-    "ideal":    (1, 0, 0, 0, 1, 0),
-    "explicit": (1, 0, 1, 0, 0, 0),
-    "cram":     (1, 1, 0, 0, 0, 0),
-    "dynamic":  (1, 1, 0, 0, 0, 1),
-}
+from . import schemes as schemes_registry
+from .engine import N_STATS, SimConfig, build_engine  # noqa: F401
+from .memsim import SCHEMES, summarize_stats, summarize_workload
 
 
 def scheme_flags(schemes) -> np.ndarray:
-    """(S, N_FLAGS) int32 flag matrix for the requested schemes."""
-    unknown = [s for s in schemes if s not in _SCHEME_FLAGS]
-    if unknown:
-        raise KeyError(
-            f"unknown scheme(s) {unknown!r}; valid: {sorted(_SCHEME_FLAGS)}")
-    return np.asarray([_SCHEME_FLAGS[s] for s in schemes], dtype=np.int32)
+    """(S, N_FLAGS) int32 flag matrix (back-compat: schemes.flags_matrix)."""
+    return schemes_registry.flags_matrix(schemes)
+
+
+def _vmapped(run):
+    """vmap over workloads (axis after flags/params), then over schemes."""
+    import jax
+
+    run_w = jax.vmap(run, in_axes=(None, None, 0, 0, 0, 0, 0))
+    return jax.vmap(run_w, in_axes=(0, 0, None, None, None, None, None))
 
 
 @functools.lru_cache(maxsize=None)
 def _jit_sweep(cfg: SimConfig):
     import jax
-    import jax.numpy as jnp
-    from jax import lax
 
-    S, W = cfg.llc_sets, cfg.llc_ways
-    MS, MW, GPM = cfg.meta_sets, cfg.meta_ways, cfg.groups_per_meta
+    return jax.jit(_vmapped(build_engine(cfg).run_one))
 
-    EVT = {k: jnp.asarray(v) for k, v in
-           build_evict_table(cfg.compress_clean).items()}
-    PROBE = jnp.asarray(_probe_count_table())
-    LOC_J = jnp.asarray(LOC)
-    LIS_J = jnp.asarray(LANES_IN_SLOT)
-    LVL_J = jnp.asarray(LANE_LEVEL)
-    SAMPLED = jnp.asarray(
-        np.asarray([bool(is_sampled_set(i, S, rate=cfg.sample_rate))
-                    for i in range(S)])
+
+@functools.lru_cache(maxsize=None)
+def _jit_sweep_sharded(cfg: SimConfig, n_dev: int):
+    """The same batched program with the workload axis sharded over
+    `n_dev` devices via shard_map (no collectives: workloads are
+    independent, each device runs the full scheme axis on its shard)."""
+    import jax
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    mesh = Mesh(np.asarray(jax.devices()[:n_dev]), ("w",))
+    fn = shard_map(
+        _vmapped(build_engine(cfg).run_one), mesh=mesh,
+        in_specs=(P(), P(), P("w"), P("w"), P("w"), P("w"), P("w")),
+        out_specs=P(None, "w"),
     )
+    return jax.jit(fn)
 
-    def popcount4(x):
-        return ((x >> 0) & 1) + ((x >> 1) & 1) + ((x >> 2) & 1) + ((x >> 3) & 1)
 
-    def meta_probe(mstate, mline, make_dirty):
-        """One metadata-cache access; returns the would-be new state plus the
-        stat deltas, application gated by the caller (explicit scheme only)."""
-        mtag, mlru, mdirty, mclock = mstate
-        ms = mline % MS
-        row = mtag[ms]
-        match = row == mline + 1
-        hit = match.any()
-        empty = row == 0
-        vic = jnp.where(empty.any(), jnp.argmax(empty), jnp.argmin(mlru[ms]))
-        way = jnp.where(hit, jnp.argmax(match), vic)
-        vic_dirty = (~hit) & (row[way] != 0) & mdirty[ms, way]
-        mtag = mtag.at[ms, way].set(mline + 1)
-        mclock = mclock + 1
-        mlru = mlru.at[ms, way].set(mclock)
-        keep = jnp.where(hit, mdirty[ms, way], False)
-        mdirty = mdirty.at[ms, way].set(keep | make_dirty)
-        deltas = (
-            jnp.where(hit, 0, 1),            # meta_reads
-            jnp.where(vic_dirty, 1, 0),      # meta_wb
-            jnp.where(hit, 1, 0),            # meta_hits
-        )
-        return (mtag, mlru, mdirty, mclock), deltas
+@functools.lru_cache(maxsize=None)
+def _jit_sweep_chunked(cfg: SimConfig):
+    """(init, chunk) pair for the chunked batched path.  The chunk carry is
+    donated so long sweeps reuse the state buffers in place (no-op on CPU,
+    where XLA does not implement donation)."""
+    import jax
 
-    def _sel_state(apply, new, old):
-        return tuple(jnp.where(apply, n, o) for n, o in zip(new, old))
+    eng = build_engine(cfg)
+    chunk_w = jax.vmap(eng.run_chunk, in_axes=(0, None, None, 0, 0, 0, 0, 0))
+    chunk_sw = jax.vmap(chunk_w,
+                        in_axes=(0, 0, 0, None, None, None, None, None))
+    donate = () if jax.default_backend() == "cpu" else (0,)
+    init_s = jax.jit(jax.vmap(eng.init_state))
+    return init_s, jax.jit(chunk_sw, donate_argnums=donate)
 
-    def run_one(flags, addrs, is_write, pair_ab, pair_cd, quad):
-        f_comp = flags[FLAG_COMP] > 0
-        f_llp = flags[FLAG_LLP] > 0
-        f_meta = flags[FLAG_META] > 0
-        f_next = flags[FLAG_NEXTLINE] > 0
-        f_ideal = flags[FLAG_IDEAL] > 0
-        f_dyn = flags[FLAG_DYNAMIC] > 0
 
-        def step(carry, evn):
-            (tag, lru, valid, dirty, pf, mem_state, lct, mstate, counter,
-             clock, stats) = carry
-            addr, wr = evn
-            addr = addr.astype(jnp.int32)
-            g = addr >> 2
-            lane = addr & 3
-            lane_bit = (jnp.int32(1) << lane)
-            s = g % S
-            clock = clock + 1
+def _resolve_axis(schemes, cfg):
+    import jax.numpy as jnp
 
-            row_tag = tag[s]
-            match = row_tag == g + 1
-            tag_hit = match.any()
-            way = jnp.argmax(match)
-            v_here = jnp.where(tag_hit, valid[s, way], 0)
-            hit = tag_hit & ((v_here & lane_bit) != 0)
-            miss = ~hit
-            sampled = SAMPLED[s]
-            dyn_on = counter >= ENABLE_THRESHOLD
-
-            pf_bit = jnp.where(hit, (pf[s, way] & lane_bit) != 0, False)
-
-            # ----------------------------- fetch accounting (miss path)
-            st = mem_state[g].astype(jnp.int32)
-            pidx = (
-                (addr // LINES_PER_PAGE).astype(jnp.uint32)
-                * np.uint32(_HASH_MULT) % np.uint32(LCT_ENTRIES)
-            ).astype(jnp.int32)
-            pred_level = lct[pidx].astype(jnp.int32)
-            probes = jnp.where(
-                f_llp & (lane != 0), PROBE[st, lane, pred_level], jnp.int32(1)
-            )
-            true_slot = LOC_J[st, lane]
-            obt_next = lane_bit | jnp.where(lane < 3, lane_bit << 1, 0)
-            obtained = jnp.where(
-                f_comp, LIS_J[st, true_slot],
-                jnp.where(f_next, obt_next, lane_bit),
-            )
-
-            # victim: merge into existing way when the group tag is present
-            empty = row_tag == 0
-            vway = jnp.where(
-                tag_hit, way,
-                jnp.where(empty.any(), jnp.argmax(empty), jnp.argmin(lru[s])),
-            )
-            evicting = miss & (~tag_hit) & (row_tag[vway] != 0)
-            vg = row_tag[vway] - 1
-            vst = mem_state[vg].astype(jnp.int32)
-            v_valid = valid[s, vway]
-            v_dirty = dirty[s, vway]
-
-            ev_enabled = jnp.where(
-                f_dyn, (sampled | dyn_on).astype(jnp.int32),
-                f_comp.astype(jnp.int32),
-            )
-            eidx = evict_table_index(
-                ev_enabled, vst,
-                pair_ab[vg].astype(jnp.int32),
-                pair_cd[vg].astype(jnp.int32),
-                quad[vg].astype(jnp.int32),
-                v_valid, v_dirty,
-            )
-            wb_d = jnp.where(evicting, EVT["wb_dirty"][eidx], 0)
-            wb_c = jnp.where(evicting, EVT["wb_clean"][eidx], 0)
-            ilw = jnp.where(evicting, EVT["il"][eidx], 0)
-            ns = jnp.where(evicting, EVT["new_state"][eidx], vst)
-            # ideal: benefits without maintenance overheads
-            wb_c = jnp.where(f_ideal, 0, wb_c)
-            ilw = jnp.where(f_ideal, 0, ilw)
-
-            # ------------------------------------------------- stats
-            stats = stats.at[ST_LLC_HITS].add(jnp.where(hit, 1, 0))
-            stats = stats.at[ST_LLC_MISSES].add(jnp.where(miss, 1, 0))
-            stats = stats.at[ST_PF_USED].add(jnp.where(hit & pf_bit, 1, 0))
-            stats = stats.at[ST_DEMAND_READS].add(jnp.where(miss, 1, 0))
-            stats = stats.at[ST_READ_PROBES].add(jnp.where(miss, probes, 0))
-            stats = stats.at[ST_WB_DIRTY].add(wb_d)
-            stats = stats.at[ST_WB_CLEAN].add(wb_c)
-            stats = stats.at[ST_IL_WRITES].add(ilw)
-            need_pred = f_llp & miss & (lane > 0)
-            stats = stats.at[ST_PRED_TOTAL].add(jnp.where(need_pred, 1, 0))
-            stats = stats.at[ST_PRED_HIT].add(
-                jnp.where(need_pred & (probes == 1), 1, 0))
-            stats = stats.at[ST_PF_EXTRA_ACCESS].add(
-                jnp.where(f_next & miss, 1, 0))
-
-            # dynamic cost/benefit counter (gated; others keep COUNTER_INIT)
-            cost = jnp.where(evicting & sampled, wb_c + ilw, 0) + \
-                jnp.where(miss & sampled, probes - 1, 0)
-            benefit = jnp.where(hit & pf_bit & sampled, 1, 0)
-            counter = jnp.where(
-                f_dyn, jnp.clip(counter + benefit - cost, 0, COUNTER_MAX),
-                counter,
-            )
-
-            # explicit metadata cache (two gated probes, sequenced like the
-            # scalar path's lax.conds: demand miss first, then dirty update)
-            mline = g // GPM
-            m1, d1 = meta_probe(mstate, mline, False)
-            apply1 = f_meta & miss
-            mstate = _sel_state(apply1, m1, mstate)
-            stats = stats.at[ST_META_READS].add(jnp.where(apply1, d1[0], 0))
-            stats = stats.at[ST_META_WB].add(jnp.where(apply1, d1[1], 0))
-            stats = stats.at[ST_META_HITS].add(jnp.where(apply1, d1[2], 0))
-            vmline = vg // GPM
-            m2, d2 = meta_probe(mstate, vmline, True)
-            apply2 = f_meta & evicting & (ns != vst)
-            mstate = _sel_state(apply2, m2, mstate)
-            stats = stats.at[ST_META_READS].add(jnp.where(apply2, d2[0], 0))
-            stats = stats.at[ST_META_WB].add(jnp.where(apply2, d2[1], 0))
-            stats = stats.at[ST_META_HITS].add(jnp.where(apply2, d2[2], 0))
-
-            # LCT update (cram/dynamic only)
-            obs = LVL_J[st, lane].astype(lct.dtype)
-            lct = jnp.where(f_llp & miss, lct.at[pidx].set(obs), lct)
-
-            mem_state = mem_state.at[vg].set(
-                jnp.where(evicting, ns.astype(mem_state.dtype), mem_state[vg])
-            )
-
-            # ------------------- LLC array updates (hit & miss merged)
-            new_valid_miss = jnp.where(tag_hit, v_here | obtained, obtained)
-            prev_pf = jnp.where(tag_hit, pf[s, vway], 0)
-            fresh = obtained & ~jnp.where(tag_hit, v_here, 0) & ~lane_bit
-            new_pf_miss = (prev_pf | fresh) & ~lane_bit
-            stats = stats.at[ST_PF_INSTALLED].add(
-                jnp.where(miss, popcount4(fresh), 0))
-            wr_bit = jnp.where(wr, lane_bit, 0)
-            new_dirty_miss = jnp.where(tag_hit, dirty[s, vway], 0) | wr_bit
-
-            uway = jnp.where(hit, way, vway)
-            tag = tag.at[s, uway].set(jnp.where(hit, row_tag[way], g + 1))
-            lru = lru.at[s, uway].set(clock)
-            valid = valid.at[s, uway].set(
-                jnp.where(hit, v_here, new_valid_miss))
-            dirty = dirty.at[s, uway].set(
-                jnp.where(hit, dirty[s, way] | wr_bit, new_dirty_miss))
-            pf = pf.at[s, uway].set(
-                jnp.where(hit, pf[s, way] & ~lane_bit, new_pf_miss))
-
-            return (tag, lru, valid, dirty, pf, mem_state, lct, mstate,
-                    counter, clock, stats), None
-
-        state = (
-            jnp.zeros((S, W), jnp.int32),           # tag
-            jnp.zeros((S, W), jnp.int32),           # lru
-            jnp.zeros((S, W), jnp.int32),           # valid
-            jnp.zeros((S, W), jnp.int32),           # dirty
-            jnp.zeros((S, W), jnp.int32),           # pf
-            jnp.zeros((cfg.n_groups,), jnp.int8),   # mem_state (all S_U)
-            jnp.zeros((LCT_ENTRIES,), jnp.int8),    # lct
-            (
-                jnp.zeros((MS, MW), jnp.int32),
-                jnp.zeros((MS, MW), jnp.int32),
-                jnp.zeros((MS, MW), bool),
-                jnp.asarray(0, jnp.int32),
-            ),
-            jnp.asarray(COUNTER_INIT, jnp.int32),
-            jnp.asarray(0, jnp.int32),
-            jnp.zeros((N_STATS,), jnp.int32),
-        )
-        final, _ = lax.scan(step, state, (addrs, is_write))
-        return final[-1]
-
-    # inner vmap: workloads share the scheme flags; outer vmap: schemes share
-    # the stacked traces.  One jit, one dispatch, one compilation.
-    run_w = jax.vmap(run_one, in_axes=(None, 0, 0, 0, 0, 0))
-    run_sw = jax.vmap(run_w, in_axes=(0, None, None, None, None, None))
-    return jax.jit(run_sw)
+    resolved = [schemes_registry.resolve(s) for s in schemes]
+    return (resolved,
+            jnp.asarray(schemes_registry.flags_matrix(resolved)),
+            jnp.asarray(schemes_registry.params_matrix(resolved, cfg)))
 
 
 def sweep(schemes, addrs, is_write, pair_ab, pair_cd, quad,
-          cfg: SimConfig = SimConfig()) -> np.ndarray:
-    """Run every scheme × workload pair in one jitted dispatch.
+          cfg: SimConfig = SimConfig(), *, chunk_size: int | None = None,
+          shard: "bool | str" = "auto") -> np.ndarray:
+    """Run every scheme × workload pair in one batched dispatch.
 
+    schemes: registry names and/or schemes.Scheme records (the scheme AND
+    config axis — variants with different params batch together).
     addrs/is_write: (W, T); pair_ab/pair_cd/quad: (W, n_groups) bool.
+    chunk_size: optional time-chunked execution (Python loop of jitted
+    chunk dispatches with a donated carry).  Chunked execution is
+    single-device; combining it with shard=True raises.
+    shard: "auto" shards the workload axis over all local devices when
+    there are several and W divides evenly; True forces it (still falling
+    back cleanly when impossible); False keeps a single-device dispatch.
+
     Returns int32 stats of shape (len(schemes), W, N_STATS), laid out per
-    memsim's ST_* indices.
+    the engine's ST_* indices — bit-identical across execution modes.
     """
+    import jax
     import jax.numpy as jnp
 
-    fn = _jit_sweep(cfg)
-    out = fn(
-        jnp.asarray(scheme_flags(schemes)),
-        jnp.asarray(addrs, jnp.int32),
-        jnp.asarray(is_write),
-        jnp.asarray(pair_ab),
-        jnp.asarray(pair_cd),
-        jnp.asarray(quad),
-    )
-    return np.asarray(out)
+    _, flags, params = _resolve_axis(schemes, cfg)
+    a = jnp.asarray(addrs, jnp.int32)
+    w = jnp.asarray(is_write)
+    tail = (jnp.asarray(pair_ab), jnp.asarray(pair_cd), jnp.asarray(quad))
+
+    if chunk_size:
+        if shard is True:
+            raise ValueError(
+                "chunk_size and shard=True cannot be combined; chunked "
+                "execution runs the workload axis on one device")
+        init_s, chunk = _jit_sweep_chunked(cfg)
+        per_scheme = init_s(params)
+        n_w = a.shape[0]
+        carry = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(
+                x[:, None], (x.shape[0], n_w) + x.shape[1:]),
+            per_scheme)
+        for lo in range(0, a.shape[1], chunk_size):
+            hi = lo + chunk_size
+            carry = chunk(carry, flags, params, a[:, lo:hi], w[:, lo:hi],
+                          *tail)
+        return np.asarray(carry[-1])
+
+    n_dev = len(jax.devices())
+    want_shard = shard is True or (shard == "auto" and n_dev > 1)
+    if want_shard and n_dev > 1 and a.shape[0] % n_dev == 0:
+        fn = _jit_sweep_sharded(cfg, n_dev)
+    else:
+        fn = _jit_sweep(cfg)
+    return np.asarray(fn(flags, params, a, w, *tail))
 
 
 def sweep_workloads(names=None, schemes=SCHEMES, n_events: int = 200_000,
-                    seed: int = 0, cfg: SimConfig = SimConfig()) -> dict:
+                    seed: int = 0, cfg: SimConfig = SimConfig(), *,
+                    chunk_size: int | None = None,
+                    shard: "bool | str" = "auto") -> dict:
     """Batched replacement for {name: memsim.run_workload(name)} loops.
 
     Builds the named traces (identical generators/seeds to the scalar path),
@@ -354,9 +167,11 @@ def sweep_workloads(names=None, schemes=SCHEMES, n_events: int = 200_000,
     from .traces import all_workload_names, build_workload
 
     names = list(names) if names is not None else all_workload_names()
-    schemes = list(schemes)
+    requested = [schemes_registry.resolve(s) for s in schemes]
+    req_names = [s.name for s in requested]
     # a baseline run is required for speedup normalization
-    sim_schemes = schemes if "baseline" in schemes else ["baseline"] + schemes
+    sim_schemes = (requested if "baseline" in req_names
+                   else [schemes_registry.get("baseline"), *requested])
 
     metas, fs = [], []
     addrs, wrs, pabs, pcds, pqs = [], [], [], [], []
@@ -374,15 +189,16 @@ def sweep_workloads(names=None, schemes=SCHEMES, n_events: int = 200_000,
         sim_schemes,
         np.stack(addrs), np.stack(wrs),
         np.stack(pabs), np.stack(pcds), np.stack(pqs),
-        cfg,
+        cfg, chunk_size=chunk_size, shard=shard,
     )
 
     out = {}
-    base_row = sim_schemes.index("baseline")
+    sim_names = [s.name for s in sim_schemes]
+    base_row = sim_names.index("baseline")
     for wi, name in enumerate(names):
         results = {
             sch: summarize_stats(sch, stats[si, wi])
-            for si, sch in enumerate(sim_schemes) if sch in schemes
+            for si, sch in enumerate(sim_names) if sch in req_names
         }
         base = summarize_stats("baseline", stats[base_row, wi]).accesses
         out[name] = summarize_workload(name, fs[wi], results, base)

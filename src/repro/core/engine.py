@@ -1,0 +1,402 @@
+"""Single-source-of-truth trace-simulation engine (step, state, stats).
+
+Both simulator front-ends are thin adapters over this module:
+
+  * memsim.simulate  — the 1×1 instantiation: one scheme's (flags, params)
+    row closed over as constants, so XLA folds the behaviour gates into a
+    per-scheme specialized program (exactly what the old hand-written
+    per-scheme steps compiled to).
+  * batchsim.sweep   — the vmapped instantiation: the same step vmapped
+    over a scheme axis (flag/param rows as data) and a workload axis
+    (stacked traces), one jitted dispatch for the whole design space.
+
+A scheme is a point in a small design space, not a separate simulator:
+
+  flags  — int32 behaviour gates (compressed layout, LLP probing, explicit
+           metadata, next-line prefetch, ideal zero-cost, dynamic gate,
+           LCT updates), see FLAG_*;
+  params — int32 config values that the step *traces* (effective LCT size,
+           dynamic sampling threshold, counter init), see PARAM_*.  Because
+           params are data, config-axis sweeps (e.g. Fig. 14-style LCT-size
+           sensitivity) batch into the same dispatch as the scheme axis.
+
+The engine also exposes chunked execution: `run_chunk` advances the carry
+over one time slice of the trace, so callers can scan arbitrarily long
+traces as a Python loop of jitted chunk dispatches with a donated carry
+(bit-identical to one monolithic scan — lax.scan is sequential either way).
+
+Exactness contract: for the six paper schemes with default params every
+stat counter is produced by the same sequence of int32 ops as the
+pre-refactor simulators; tests/test_engine.py pins the golden stats.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import numpy as np
+
+from .dynamic import COUNTER_INIT, COUNTER_MAX, ENABLE_THRESHOLD
+from .evict_logic import build_evict_table, evict_table_index
+from .llp import LCT_ENTRIES, LINES_PER_PAGE, _HASH_MULT
+from .mapping import LANE_LEVEL, LANES_IN_SLOT, LOC, PRED_SLOT, probe_chain
+
+# stats vector layout (the one definition; memsim/batchsim re-export)
+(
+    ST_READ_PROBES,
+    ST_DEMAND_READS,
+    ST_WB_DIRTY,
+    ST_WB_CLEAN,
+    ST_IL_WRITES,
+    ST_META_READS,
+    ST_META_WB,
+    ST_META_HITS,
+    ST_PF_INSTALLED,
+    ST_PF_USED,
+    ST_PRED_TOTAL,
+    ST_PRED_HIT,
+    ST_LLC_HITS,
+    ST_LLC_MISSES,
+    ST_PF_EXTRA_ACCESS,
+    N_STATS,
+) = range(16)
+
+STAT_NAMES = (
+    "read_probes", "demand_reads", "wb_dirty", "wb_clean", "il_writes",
+    "meta_reads", "meta_wb", "meta_hits", "pf_installed", "pf_used",
+    "pred_total", "pred_hit", "llc_hits", "llc_misses", "pf_extra_access",
+)
+
+# per-scheme behaviour flags (int32 vector fed to the traced step)
+(
+    FLAG_COMP,       # compressed layout transitions + ganged fills
+    FLAG_LLP,        # implicit metadata: LLP probe chain on non-home lanes
+    FLAG_META,       # explicit metadata cache traffic
+    FLAG_NEXTLINE,   # next-line prefetch on miss
+    FLAG_IDEAL,      # compression benefits with zero maintenance cost
+    FLAG_DYNAMIC,    # set-sampled cost/benefit gate
+    FLAG_LCT_UPDATE,  # record observed levels into the LCT (off = the LLP
+                      # predicts a frozen level 0 — the cram-nollp ablation)
+    N_FLAGS,
+) = range(8)
+
+# per-scheme traced config parameters (the config axis)
+(
+    PARAM_LCT_SIZE,       # effective LCT entries (modulus; <= LCT_ENTRIES)
+    PARAM_SAMPLE_THRESH,  # dynamic sampling threshold in 1024ths of the sets
+    PARAM_COUNTER_INIT,   # dynamic cost/benefit counter start value
+    PARAM_META_SETS,      # effective metadata-cache sets (<= cfg.meta_sets)
+    N_PARAMS,
+) = range(5)
+
+
+def sample_threshold(rate: float) -> int:
+    """dynamic.is_sampled_set's per-1024 threshold as a traceable int."""
+    return max(1, int(rate * 1024))
+
+
+def default_params(cfg: "SimConfig") -> tuple[int, int, int, int]:
+    """The params row reproducing the pre-refactor fixed-config behaviour."""
+    return (LCT_ENTRIES, sample_threshold(cfg.sample_rate), COUNTER_INIT,
+            cfg.meta_sets)
+
+
+@dataclass(frozen=True)
+class SimConfig:
+    # The paper's 8MB LLC is scaled with the footprint cap (DESIGN.md §2.2):
+    # 128 sets x 8 ways x 4 lanes x 64B = 256KB against a <=64MB footprint
+    # preserves the footprint/LLC ratio of Table II workloads.
+    llc_sets: int = 128
+    llc_ways: int = 8
+    n_groups: int = 1 << 18       # matches traces.GROUPS_TOTAL
+    meta_sets: int = 64           # 32KB metadata cache: 64 sets x 8 ways x 64B
+    meta_ways: int = 8
+    groups_per_meta: int = 128    # ~170 groups per 64B metadata line; pow2
+    compress_clean: bool = True
+    sample_rate: float = 0.08     # scaled from the paper's 1% (trace-length)
+
+
+def _probe_count_table() -> np.ndarray:
+    """PROBE[state, lane, predicted_level] -> memory accesses to locate line."""
+    t = np.zeros((5, 4, 3), dtype=np.int32)
+    for st in range(5):
+        for lane in range(4):
+            for lvl in range(3):
+                pred = int(PRED_SLOT[lane][lvl]) if lane else 0
+                chain = probe_chain(lane, pred) if lane else [0]
+                t[st, lane, lvl] = chain.index(int(LOC[st][lane])) + 1
+    return t
+
+
+def _set_hash_table(n_sets: int) -> np.ndarray:
+    """(set * PHI) mod 1024 per LLC set; comparing against
+    PARAM_SAMPLE_THRESH reproduces dynamic.is_sampled_set bit-for-bit with
+    the sampling rate as traced data instead of a baked-in table."""
+    h = (np.arange(n_sets, dtype=np.uint64) * 0x9E3779B1) & 0xFFFFFFFF
+    return (h % 1024).astype(np.int32)
+
+
+@dataclass(frozen=True)
+class EngineParts:
+    """The three engine entry points for one SimConfig.
+
+    init_state(params)                       -> carry pytree
+    run_chunk(carry, flags, params, *trace)  -> carry  (scan one time slice)
+    run_one(flags, params, *trace)           -> (N_STATS,) int32 stats
+    """
+    init_state: callable
+    run_chunk: callable
+    run_one: callable
+
+
+@functools.lru_cache(maxsize=None)
+def build_engine(cfg: SimConfig) -> EngineParts:
+    import jax.numpy as jnp
+    from jax import lax
+
+    S, W = cfg.llc_sets, cfg.llc_ways
+    MS, MW, GPM = cfg.meta_sets, cfg.meta_ways, cfg.groups_per_meta
+
+    EVT = {k: jnp.asarray(v) for k, v in
+           build_evict_table(cfg.compress_clean).items()}
+    PROBE = jnp.asarray(_probe_count_table())
+    LOC_J = jnp.asarray(LOC)
+    LIS_J = jnp.asarray(LANES_IN_SLOT)
+    LVL_J = jnp.asarray(LANE_LEVEL)
+    SET_HASH = jnp.asarray(_set_hash_table(S))
+
+    def popcount4(x):
+        return ((x >> 0) & 1) + ((x >> 1) & 1) + ((x >> 2) & 1) + ((x >> 3) & 1)
+
+    def meta_probe(mstate, mline, make_dirty, meta_sets):
+        """One metadata-cache access; returns the would-be new state plus the
+        stat deltas, application gated by the caller (explicit scheme only).
+        `meta_sets` (traced, <= cfg.meta_sets) is the effective set count —
+        cache-size ablations index a subset of the allocated arrays."""
+        mtag, mlru, mdirty, mclock = mstate
+        ms = mline % meta_sets
+        row = mtag[ms]
+        match = row == mline + 1
+        hit = match.any()
+        empty = row == 0
+        vic = jnp.where(empty.any(), jnp.argmax(empty), jnp.argmin(mlru[ms]))
+        way = jnp.where(hit, jnp.argmax(match), vic)
+        vic_dirty = (~hit) & (row[way] != 0) & mdirty[ms, way]
+        mtag = mtag.at[ms, way].set(mline + 1)
+        mclock = mclock + 1
+        mlru = mlru.at[ms, way].set(mclock)
+        keep = jnp.where(hit, mdirty[ms, way], False)
+        mdirty = mdirty.at[ms, way].set(keep | make_dirty)
+        deltas = (
+            jnp.where(hit, 0, 1),            # meta_reads
+            jnp.where(vic_dirty, 1, 0),      # meta_wb
+            jnp.where(hit, 1, 0),            # meta_hits
+        )
+        return (mtag, mlru, mdirty, mclock), deltas
+
+    def _sel_state(apply, new, old):
+        return tuple(jnp.where(apply, n, o) for n, o in zip(new, old))
+
+    def init_state(params):
+        return (
+            jnp.zeros((S, W), jnp.int32),           # tag
+            jnp.zeros((S, W), jnp.int32),           # lru
+            jnp.zeros((S, W), jnp.int32),           # valid
+            jnp.zeros((S, W), jnp.int32),           # dirty
+            jnp.zeros((S, W), jnp.int32),           # pf
+            jnp.zeros((cfg.n_groups,), jnp.int8),   # mem_state (all S_U)
+            jnp.zeros((LCT_ENTRIES,), jnp.int8),    # lct
+            (
+                jnp.zeros((MS, MW), jnp.int32),
+                jnp.zeros((MS, MW), jnp.int32),
+                jnp.zeros((MS, MW), bool),
+                jnp.asarray(0, jnp.int32),
+            ),
+            params[PARAM_COUNTER_INIT].astype(jnp.int32),   # dyn counter
+            jnp.asarray(0, jnp.int32),              # clock
+            jnp.zeros((N_STATS,), jnp.int32),
+        )
+
+    def run_chunk(carry, flags, params, addrs, is_write,
+                  pair_ab, pair_cd, quad):
+        f_comp = flags[FLAG_COMP] > 0
+        f_llp = flags[FLAG_LLP] > 0
+        f_meta = flags[FLAG_META] > 0
+        f_next = flags[FLAG_NEXTLINE] > 0
+        f_ideal = flags[FLAG_IDEAL] > 0
+        f_dyn = flags[FLAG_DYNAMIC] > 0
+        f_lct = flags[FLAG_LCT_UPDATE] > 0
+        lct_size = params[PARAM_LCT_SIZE].astype(jnp.uint32)
+        sample_thresh = params[PARAM_SAMPLE_THRESH]
+        meta_sets = params[PARAM_META_SETS]
+
+        def step(carry, evn):
+            (tag, lru, valid, dirty, pf, mem_state, lct, mstate, counter,
+             clock, stats) = carry
+            addr, wr = evn
+            addr = addr.astype(jnp.int32)
+            g = addr >> 2
+            lane = addr & 3
+            lane_bit = (jnp.int32(1) << lane)
+            s = g % S
+            clock = clock + 1
+
+            row_tag = tag[s]
+            match = row_tag == g + 1
+            tag_hit = match.any()
+            way = jnp.argmax(match)
+            v_here = jnp.where(tag_hit, valid[s, way], 0)
+            hit = tag_hit & ((v_here & lane_bit) != 0)
+            miss = ~hit
+            sampled = SET_HASH[s] < sample_thresh
+            dyn_on = counter >= ENABLE_THRESHOLD
+
+            pf_bit = jnp.where(hit, (pf[s, way] & lane_bit) != 0, False)
+
+            # ----------------------------- fetch accounting (miss path)
+            st = mem_state[g].astype(jnp.int32)
+            pidx = (
+                (addr // LINES_PER_PAGE).astype(jnp.uint32)
+                * np.uint32(_HASH_MULT) % lct_size
+            ).astype(jnp.int32)
+            pred_level = lct[pidx].astype(jnp.int32)
+            probes = jnp.where(
+                f_llp & (lane != 0), PROBE[st, lane, pred_level], jnp.int32(1)
+            )
+            true_slot = LOC_J[st, lane]
+            obt_next = lane_bit | jnp.where(lane < 3, lane_bit << 1, 0)
+            obtained = jnp.where(
+                f_comp, LIS_J[st, true_slot],
+                jnp.where(f_next, obt_next, lane_bit),
+            )
+
+            # victim: merge into existing way when the group tag is present
+            empty = row_tag == 0
+            vway = jnp.where(
+                tag_hit, way,
+                jnp.where(empty.any(), jnp.argmax(empty), jnp.argmin(lru[s])),
+            )
+            evicting = miss & (~tag_hit) & (row_tag[vway] != 0)
+            vg = row_tag[vway] - 1
+            vst = mem_state[vg].astype(jnp.int32)
+            v_valid = valid[s, vway]
+            v_dirty = dirty[s, vway]
+
+            ev_enabled = jnp.where(
+                f_dyn, (sampled | dyn_on).astype(jnp.int32),
+                f_comp.astype(jnp.int32),
+            )
+            eidx = evict_table_index(
+                ev_enabled, vst,
+                pair_ab[vg].astype(jnp.int32),
+                pair_cd[vg].astype(jnp.int32),
+                quad[vg].astype(jnp.int32),
+                v_valid, v_dirty,
+            )
+            wb_d = jnp.where(evicting, EVT["wb_dirty"][eidx], 0)
+            wb_c = jnp.where(evicting, EVT["wb_clean"][eidx], 0)
+            ilw = jnp.where(evicting, EVT["il"][eidx], 0)
+            ns = jnp.where(evicting, EVT["new_state"][eidx], vst)
+            # ideal: benefits without maintenance overheads
+            wb_c = jnp.where(f_ideal, 0, wb_c)
+            ilw = jnp.where(f_ideal, 0, ilw)
+
+            # ------------------------------------------------- stats
+            stats = stats.at[ST_LLC_HITS].add(jnp.where(hit, 1, 0))
+            stats = stats.at[ST_LLC_MISSES].add(jnp.where(miss, 1, 0))
+            stats = stats.at[ST_PF_USED].add(jnp.where(hit & pf_bit, 1, 0))
+            stats = stats.at[ST_DEMAND_READS].add(jnp.where(miss, 1, 0))
+            stats = stats.at[ST_READ_PROBES].add(jnp.where(miss, probes, 0))
+            stats = stats.at[ST_WB_DIRTY].add(wb_d)
+            stats = stats.at[ST_WB_CLEAN].add(wb_c)
+            stats = stats.at[ST_IL_WRITES].add(ilw)
+            need_pred = f_llp & miss & (lane > 0)
+            stats = stats.at[ST_PRED_TOTAL].add(jnp.where(need_pred, 1, 0))
+            stats = stats.at[ST_PRED_HIT].add(
+                jnp.where(need_pred & (probes == 1), 1, 0))
+            stats = stats.at[ST_PF_EXTRA_ACCESS].add(
+                jnp.where(f_next & miss, 1, 0))
+
+            # dynamic cost/benefit counter (gated; others keep their init)
+            cost = jnp.where(evicting & sampled, wb_c + ilw, 0) + \
+                jnp.where(miss & sampled, probes - 1, 0)
+            benefit = jnp.where(hit & pf_bit & sampled, 1, 0)
+            counter = jnp.where(
+                f_dyn, jnp.clip(counter + benefit - cost, 0, COUNTER_MAX),
+                counter,
+            )
+
+            # explicit metadata cache (two gated probes, sequenced like the
+            # old scalar path's lax.conds: demand miss first, dirty update)
+            mline = g // GPM
+            m1, d1 = meta_probe(mstate, mline, False, meta_sets)
+            apply1 = f_meta & miss
+            mstate = _sel_state(apply1, m1, mstate)
+            stats = stats.at[ST_META_READS].add(jnp.where(apply1, d1[0], 0))
+            stats = stats.at[ST_META_WB].add(jnp.where(apply1, d1[1], 0))
+            stats = stats.at[ST_META_HITS].add(jnp.where(apply1, d1[2], 0))
+            vmline = vg // GPM
+            m2, d2 = meta_probe(mstate, vmline, True, meta_sets)
+            apply2 = f_meta & evicting & (ns != vst)
+            mstate = _sel_state(apply2, m2, mstate)
+            stats = stats.at[ST_META_READS].add(jnp.where(apply2, d2[0], 0))
+            stats = stats.at[ST_META_WB].add(jnp.where(apply2, d2[1], 0))
+            stats = stats.at[ST_META_HITS].add(jnp.where(apply2, d2[2], 0))
+
+            # LCT update (frozen when FLAG_LCT_UPDATE is off: cram-nollp)
+            obs = LVL_J[st, lane].astype(lct.dtype)
+            lct = jnp.where(f_lct & miss, lct.at[pidx].set(obs), lct)
+
+            mem_state = mem_state.at[vg].set(
+                jnp.where(evicting, ns.astype(mem_state.dtype), mem_state[vg])
+            )
+
+            # ------------------- LLC array updates (hit & miss merged)
+            new_valid_miss = jnp.where(tag_hit, v_here | obtained, obtained)
+            prev_pf = jnp.where(tag_hit, pf[s, vway], 0)
+            fresh = obtained & ~jnp.where(tag_hit, v_here, 0) & ~lane_bit
+            new_pf_miss = (prev_pf | fresh) & ~lane_bit
+            stats = stats.at[ST_PF_INSTALLED].add(
+                jnp.where(miss, popcount4(fresh), 0))
+            wr_bit = jnp.where(wr, lane_bit, 0)
+            new_dirty_miss = jnp.where(tag_hit, dirty[s, vway], 0) | wr_bit
+
+            uway = jnp.where(hit, way, vway)
+            tag = tag.at[s, uway].set(jnp.where(hit, row_tag[way], g + 1))
+            lru = lru.at[s, uway].set(clock)
+            valid = valid.at[s, uway].set(
+                jnp.where(hit, v_here, new_valid_miss))
+            dirty = dirty.at[s, uway].set(
+                jnp.where(hit, dirty[s, way] | wr_bit, new_dirty_miss))
+            pf = pf.at[s, uway].set(
+                jnp.where(hit, pf[s, way] & ~lane_bit, new_pf_miss))
+
+            return (tag, lru, valid, dirty, pf, mem_state, lct, mstate,
+                    counter, clock, stats), None
+
+        final, _ = lax.scan(step, carry, (addrs, is_write))
+        return final
+
+    def run_one(flags, params, addrs, is_write, pair_ab, pair_cd, quad):
+        final = run_chunk(init_state(params), flags, params,
+                          addrs, is_write, pair_ab, pair_cd, quad)
+        return final[-1]
+
+    return EngineParts(init_state=init_state, run_chunk=run_chunk,
+                       run_one=run_one)
+
+
+__all__ = [
+    "ST_READ_PROBES", "ST_DEMAND_READS", "ST_WB_DIRTY", "ST_WB_CLEAN",
+    "ST_IL_WRITES", "ST_META_READS", "ST_META_WB", "ST_META_HITS",
+    "ST_PF_INSTALLED", "ST_PF_USED", "ST_PRED_TOTAL", "ST_PRED_HIT",
+    "ST_LLC_HITS", "ST_LLC_MISSES", "ST_PF_EXTRA_ACCESS", "N_STATS",
+    "STAT_NAMES",
+    "FLAG_COMP", "FLAG_LLP", "FLAG_META", "FLAG_NEXTLINE", "FLAG_IDEAL",
+    "FLAG_DYNAMIC", "FLAG_LCT_UPDATE", "N_FLAGS",
+    "PARAM_LCT_SIZE", "PARAM_SAMPLE_THRESH", "PARAM_COUNTER_INIT",
+    "PARAM_META_SETS", "N_PARAMS",
+    "SimConfig", "EngineParts", "build_engine", "default_params",
+    "sample_threshold",
+]

@@ -1,17 +1,21 @@
-"""Trace-driven bandwidth simulator for all schemes in the paper (jax.lax.scan).
+"""Scalar trace-driven bandwidth simulator — the engine's 1×1 instantiation.
 
-Schemes:
+The step function, state constructor, and stat layout live in
+`core.engine` (the single source of truth shared with the batched sweep
+in `core.batchsim`); scheme semantics live in the `core.schemes`
+registry.  This module keeps the per-scheme front-end: `simulate` closes
+one scheme's (flags, params) row over the engine step as compile-time
+constants, so XLA folds the behaviour gates into the same specialized
+per-scheme program the old hand-written steps produced — results are
+bit-identical (tests/test_engine.py pins the golden stats).
+
+Schemes (see schemes.py for the registry, DESIGN.md §4 for semantics):
   baseline   — uncompressed memory (the normalization target)
   nextline   — uncompressed + next-line prefetch on miss (Table V)
   ideal      — compression benefits with zero maintenance overheads (Fig. 3/16)
   explicit   — CRAM with explicit metadata + 32KB metadata cache (Fig. 7/12)
   cram       — CRAM + implicit metadata + LLP, always compress (Fig. 12/16)
   dynamic    — Dynamic-CRAM with 1% set sampling + 12-bit counter (Fig. 16/18)
-
-The LLC is group-granular with ganged fill/eviction (see llc.py docstring);
-eviction layout transitions and their bandwidth costs come from
-evict_logic.build_evict_table — the same logic the exact functional model
-executes, so the two simulators agree by construction.
 
 Performance model (DESIGN.md §2.2): speedup = 1/((1-f) + f·ratio) with f the
 workload's memory-bound fraction and ratio = scheme_accesses/baseline_accesses.
@@ -24,70 +28,33 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from .dynamic import (
-    COUNTER_INIT,
-    COUNTER_MAX,
-    ENABLE_THRESHOLD,
-    is_sampled_set,
-)
-from .evict_logic import build_evict_table, evict_table_index
-from .llp import LCT_ENTRIES, LINES_PER_PAGE, _HASH_MULT
-from .mapping import LANE_LEVEL, LANES_IN_SLOT, LOC, PRED_SLOT, probe_chain
-
-SCHEMES = ("baseline", "nextline", "ideal", "explicit", "cram", "dynamic")
-
-# stats vector layout
-(
-    ST_READ_PROBES,
+from . import schemes as schemes_registry
+from .engine import (  # noqa: F401  (stat indices re-exported for callers)
+    N_STATS,
     ST_DEMAND_READS,
-    ST_WB_DIRTY,
-    ST_WB_CLEAN,
     ST_IL_WRITES,
-    ST_META_READS,
-    ST_META_WB,
-    ST_META_HITS,
-    ST_PF_INSTALLED,
-    ST_PF_USED,
-    ST_PRED_TOTAL,
-    ST_PRED_HIT,
     ST_LLC_HITS,
     ST_LLC_MISSES,
+    ST_META_HITS,
+    ST_META_READS,
+    ST_META_WB,
     ST_PF_EXTRA_ACCESS,
-    N_STATS,
-) = range(16)
-
-_STAT_NAMES = (
-    "read_probes", "demand_reads", "wb_dirty", "wb_clean", "il_writes",
-    "meta_reads", "meta_wb", "meta_hits", "pf_installed", "pf_used",
-    "pred_total", "pred_hit", "llc_hits", "llc_misses", "pf_extra_access",
+    ST_PF_INSTALLED,
+    ST_PF_USED,
+    ST_PRED_HIT,
+    ST_PRED_TOTAL,
+    ST_READ_PROBES,
+    ST_WB_CLEAN,
+    ST_WB_DIRTY,
+    STAT_NAMES,
+    SimConfig,
+    _probe_count_table,  # noqa: F401  (legacy import site)
+    build_engine,
 )
+from .schemes import BASE_SCHEMES as SCHEMES
 
-
-def _probe_count_table() -> np.ndarray:
-    """PROBE[state, lane, predicted_level] -> memory accesses to locate line."""
-    t = np.zeros((5, 4, 3), dtype=np.int32)
-    for st in range(5):
-        for lane in range(4):
-            for lvl in range(3):
-                pred = int(PRED_SLOT[lane][lvl]) if lane else 0
-                chain = probe_chain(lane, pred) if lane else [0]
-                t[st, lane, lvl] = chain.index(int(LOC[st][lane])) + 1
-    return t
-
-
-@dataclass(frozen=True)
-class SimConfig:
-    # The paper's 8MB LLC is scaled with the footprint cap (DESIGN.md §2.2):
-    # 128 sets x 8 ways x 4 lanes x 64B = 256KB against a <=64MB footprint
-    # preserves the footprint/LLC ratio of Table II workloads.
-    llc_sets: int = 128
-    llc_ways: int = 8
-    n_groups: int = 1 << 18       # matches traces.GROUPS_TOTAL
-    meta_sets: int = 64           # 32KB metadata cache: 64 sets x 8 ways x 64B
-    meta_ways: int = 8
-    groups_per_meta: int = 128    # ~170 groups per 64B metadata line; pow2
-    compress_clean: bool = True
-    sample_rate: float = 0.08     # scaled from the paper's 1% (trace-length)
+# back-compat alias; the canonical tuple is engine.STAT_NAMES
+_STAT_NAMES = STAT_NAMES
 
 
 @dataclass
@@ -110,227 +77,54 @@ class SimResult:
         }
 
 
-@functools.lru_cache(maxsize=None)
-def _jit_sim(scheme: str, cfg: SimConfig):
-    import jax
+def _scheme_consts(scheme: schemes_registry.Scheme, cfg: SimConfig):
     import jax.numpy as jnp
-    from jax import lax
 
-    assert scheme in SCHEMES, scheme
-    S, W = cfg.llc_sets, cfg.llc_ways
-    MS, MW, GPM = cfg.meta_sets, cfg.meta_ways, cfg.groups_per_meta
-    comp_scheme = scheme in ("ideal", "explicit", "cram", "dynamic")
+    return jnp.asarray(scheme.flags()), jnp.asarray(scheme.params(cfg))
 
-    EVT = {k: jnp.asarray(v) for k, v in
-           build_evict_table(cfg.compress_clean).items()}
-    PROBE = jnp.asarray(_probe_count_table())
-    LOC_J = jnp.asarray(LOC)
-    LIS_J = jnp.asarray(LANES_IN_SLOT)
-    LVL_J = jnp.asarray(LANE_LEVEL)
-    SAMPLED = jnp.asarray(
-        np.asarray([bool(is_sampled_set(i, S, rate=cfg.sample_rate))
-                    for i in range(S)])
-    )
 
-    def popcount4(x):
-        return ((x >> 0) & 1) + ((x >> 1) & 1) + ((x >> 2) & 1) + ((x >> 3) & 1)
+@functools.lru_cache(maxsize=64)
+def _jit_sim(scheme: schemes_registry.Scheme, cfg: SimConfig):
+    """Specialized jitted run for one scheme: engine step with the scheme's
+    (flags, params) closed over as constants.
 
-    def meta_probe(mstate, mline, make_dirty, stats):
-        """32KB metadata-cache access; returns updated (mstate, stats)."""
-        mtag, mlru, mdirty, mclock = mstate
-        ms = mline % MS
-        row = mtag[ms]
-        match = row == mline + 1
-        hit = match.any()
-        empty = row == 0
-        vic = jnp.where(empty.any(), jnp.argmax(empty), jnp.argmin(mlru[ms]))
-        way = jnp.where(hit, jnp.argmax(match), vic)
-        vic_dirty = (~hit) & (row[way] != 0) & mdirty[ms, way]
-        stats = stats.at[ST_META_READS].add(jnp.where(hit, 0, 1))
-        stats = stats.at[ST_META_WB].add(jnp.where(vic_dirty, 1, 0))
-        stats = stats.at[ST_META_HITS].add(jnp.where(hit, 1, 0))
-        mtag = mtag.at[ms, way].set(mline + 1)
-        mclock = mclock + 1
-        mlru = mlru.at[ms, way].set(mclock)
-        keep = jnp.where(hit, mdirty[ms, way], False)
-        mdirty = mdirty.at[ms, way].set(keep | make_dirty)
-        return (mtag, mlru, mdirty, mclock), stats
+    The cache is bounded because the key space is open (any Scheme record);
+    large config sweeps belong on batchsim.sweep, where variants are data
+    rows of one compilation rather than one specialized program each."""
+    import jax
+
+    eng = build_engine(cfg)
+    fl, pr = _scheme_consts(scheme, cfg)
 
     def run(addrs, is_write, pair_ab, pair_cd, quad):
-        def step(carry, evn):
-            (tag, lru, valid, dirty, pf, mem_state, lct, mstate, counter,
-             clock, stats) = carry
-            addr, wr = evn
-            addr = addr.astype(jnp.int32)
-            g = addr >> 2
-            lane = addr & 3
-            lane_bit = (jnp.int32(1) << lane)
-            s = g % S
-            clock = clock + 1
-
-            row_tag = tag[s]
-            match = row_tag == g + 1
-            tag_hit = match.any()
-            way = jnp.argmax(match)
-            v_here = jnp.where(tag_hit, valid[s, way], 0)
-            hit = tag_hit & ((v_here & lane_bit) != 0)
-            miss = ~hit
-            sampled = SAMPLED[s]
-            dyn_on = counter >= ENABLE_THRESHOLD
-
-            pf_bit = jnp.where(hit, (pf[s, way] & lane_bit) != 0, False)
-
-            # ----------------------------- fetch accounting (miss path)
-            st = mem_state[g].astype(jnp.int32)
-            pidx = (
-                (addr // LINES_PER_PAGE).astype(jnp.uint32)
-                * np.uint32(_HASH_MULT) % np.uint32(LCT_ENTRIES)
-            ).astype(jnp.int32)
-            pred_level = lct[pidx].astype(jnp.int32)
-            if scheme in ("cram", "dynamic"):
-                probes = jnp.where(lane == 0, 1, PROBE[st, lane, pred_level])
-            else:
-                probes = jnp.int32(1)
-            if comp_scheme:
-                true_slot = LOC_J[st, lane]
-                obtained = LIS_J[st, true_slot]
-            elif scheme == "nextline":
-                obtained = lane_bit | jnp.where(lane < 3, lane_bit << 1, 0)
-            else:
-                obtained = lane_bit
-
-            # victim: merge into existing way when the group tag is present
-            empty = row_tag == 0
-            vway = jnp.where(
-                tag_hit, way,
-                jnp.where(empty.any(), jnp.argmax(empty), jnp.argmin(lru[s])),
-            )
-            evicting = miss & (~tag_hit) & (row_tag[vway] != 0)
-            vg = row_tag[vway] - 1
-            vst = mem_state[vg].astype(jnp.int32)
-            v_valid = valid[s, vway]
-            v_dirty = dirty[s, vway]
-
-            if scheme == "dynamic":
-                ev_enabled = (sampled | dyn_on).astype(jnp.int32)
-            elif comp_scheme:
-                ev_enabled = jnp.int32(1)
-            else:
-                ev_enabled = jnp.int32(0)
-            eidx = evict_table_index(
-                ev_enabled, vst,
-                pair_ab[vg].astype(jnp.int32),
-                pair_cd[vg].astype(jnp.int32),
-                quad[vg].astype(jnp.int32),
-                v_valid, v_dirty,
-            )
-            wb_d = jnp.where(evicting, EVT["wb_dirty"][eidx], 0)
-            wb_c = jnp.where(evicting, EVT["wb_clean"][eidx], 0)
-            ilw = jnp.where(evicting, EVT["il"][eidx], 0)
-            ns = jnp.where(evicting, EVT["new_state"][eidx], vst)
-            if scheme == "ideal":  # benefits without maintenance overheads
-                wb_c = jnp.zeros_like(wb_c)
-                ilw = jnp.zeros_like(ilw)
-
-            # ------------------------------------------------- stats
-            stats = stats.at[ST_LLC_HITS].add(jnp.where(hit, 1, 0))
-            stats = stats.at[ST_LLC_MISSES].add(jnp.where(miss, 1, 0))
-            stats = stats.at[ST_PF_USED].add(jnp.where(hit & pf_bit, 1, 0))
-            stats = stats.at[ST_DEMAND_READS].add(jnp.where(miss, 1, 0))
-            stats = stats.at[ST_READ_PROBES].add(jnp.where(miss, probes, 0))
-            stats = stats.at[ST_WB_DIRTY].add(wb_d)
-            stats = stats.at[ST_WB_CLEAN].add(wb_c)
-            stats = stats.at[ST_IL_WRITES].add(ilw)
-            if scheme in ("cram", "dynamic"):
-                need_pred = miss & (lane > 0)
-                stats = stats.at[ST_PRED_TOTAL].add(
-                    jnp.where(need_pred, 1, 0))
-                stats = stats.at[ST_PRED_HIT].add(
-                    jnp.where(need_pred & (probes == 1), 1, 0))
-            if scheme == "nextline":
-                stats = stats.at[ST_PF_EXTRA_ACCESS].add(
-                    jnp.where(miss, 1, 0))
-
-            if scheme == "dynamic":
-                cost = jnp.where(evicting & sampled, wb_c + ilw, 0) + \
-                    jnp.where(miss & sampled, probes - 1, 0)
-                benefit = jnp.where(hit & pf_bit & sampled, 1, 0)
-                counter = jnp.clip(counter + benefit - cost, 0, COUNTER_MAX)
-
-            if scheme == "explicit":
-                mline = g // GPM
-                mstate, stats = lax.cond(
-                    miss,
-                    lambda a: meta_probe(a[0], mline, False, a[1]),
-                    lambda a: a,
-                    (mstate, stats),
-                )
-                vmline = vg // GPM
-                mstate, stats = lax.cond(
-                    evicting & (ns != vst),
-                    lambda a: meta_probe(a[0], vmline, True, a[1]),
-                    lambda a: a,
-                    (mstate, stats),
-                )
-
-            if scheme in ("cram", "dynamic"):
-                obs = LVL_J[st, lane].astype(lct.dtype)
-                lct = jnp.where(miss, lct.at[pidx].set(obs), lct)
-
-            mem_state = mem_state.at[vg].set(
-                jnp.where(evicting, ns.astype(mem_state.dtype), mem_state[vg])
-            )
-
-            # ------------------- LLC array updates (hit & miss merged)
-            new_valid_miss = jnp.where(tag_hit, v_here | obtained, obtained)
-            prev_pf = jnp.where(tag_hit, pf[s, vway], 0)
-            fresh = obtained & ~jnp.where(tag_hit, v_here, 0) & ~lane_bit
-            new_pf_miss = (prev_pf | fresh) & ~lane_bit
-            stats = stats.at[ST_PF_INSTALLED].add(
-                jnp.where(miss, popcount4(fresh), 0))
-            wr_bit = jnp.where(wr, lane_bit, 0)
-            new_dirty_miss = jnp.where(tag_hit, dirty[s, vway], 0) | wr_bit
-
-            uway = jnp.where(hit, way, vway)
-            tag = tag.at[s, uway].set(jnp.where(hit, row_tag[way], g + 1))
-            lru = lru.at[s, uway].set(clock)
-            valid = valid.at[s, uway].set(
-                jnp.where(hit, v_here, new_valid_miss))
-            dirty = dirty.at[s, uway].set(
-                jnp.where(hit, dirty[s, way] | wr_bit, new_dirty_miss))
-            pf = pf.at[s, uway].set(
-                jnp.where(hit, pf[s, way] & ~lane_bit, new_pf_miss))
-
-            return (tag, lru, valid, dirty, pf, mem_state, lct, mstate,
-                    counter, clock, stats), None
-
-        state = (
-            jnp.zeros((S, W), jnp.int32),           # tag
-            jnp.zeros((S, W), jnp.int32),           # lru
-            jnp.zeros((S, W), jnp.int32),           # valid
-            jnp.zeros((S, W), jnp.int32),           # dirty
-            jnp.zeros((S, W), jnp.int32),           # pf
-            jnp.zeros((cfg.n_groups,), jnp.int8),   # mem_state (all S_U)
-            jnp.zeros((LCT_ENTRIES,), jnp.int8),    # lct
-            (
-                jnp.zeros((MS, MW), jnp.int32),
-                jnp.zeros((MS, MW), jnp.int32),
-                jnp.zeros((MS, MW), bool),
-                jnp.asarray(0, jnp.int32),
-            ),
-            jnp.asarray(COUNTER_INIT, jnp.int32),
-            jnp.asarray(0, jnp.int32),
-            jnp.zeros((N_STATS,), jnp.int32),
-        )
-        final, _ = lax.scan(step, state, (addrs, is_write))
-        return final[-1]
+        return eng.run_one(fl, pr, addrs, is_write, pair_ab, pair_cd, quad)
 
     return jax.jit(run)
 
 
+@functools.lru_cache(maxsize=64)
+def _jit_sim_chunked(scheme: schemes_registry.Scheme, cfg: SimConfig):
+    """(init, chunk) pair for chunked scalar execution with a donated carry
+    (donation is a no-op on CPU, where XLA does not implement it)."""
+    import jax
+
+    eng = build_engine(cfg)
+    fl, pr = _scheme_consts(scheme, cfg)
+    donate = () if jax.default_backend() == "cpu" else (0,)
+
+    def init():
+        return eng.init_state(pr)
+
+    def chunk(carry, addrs, is_write, pair_ab, pair_cd, quad):
+        return eng.run_chunk(carry, fl, pr, addrs, is_write,
+                             pair_ab, pair_cd, quad)
+
+    return jax.jit(init), jax.jit(chunk, donate_argnums=donate)
+
+
 def summarize_stats(scheme: str, stats_vec) -> SimResult:
     """Fold a raw N_STATS vector into a SimResult (shared with batchsim)."""
-    stats = dict(zip(_STAT_NAMES, (int(x) for x in np.asarray(stats_vec))))
+    stats = dict(zip(STAT_NAMES, (int(x) for x in np.asarray(stats_vec))))
     accesses = (
         stats["read_probes"] + stats["wb_dirty"] + stats["wb_clean"]
         + stats["il_writes"] + stats["meta_reads"] + stats["meta_wb"]
@@ -344,21 +138,33 @@ def summarize_stats(scheme: str, stats_vec) -> SimResult:
     return SimResult(scheme, stats, accesses, llp_acc, meta_hr)
 
 
-def simulate(scheme: str, addrs, is_write, pair_ab, pair_cd, quad,
-             cfg: SimConfig = SimConfig()) -> SimResult:
+def simulate(scheme, addrs, is_write, pair_ab, pair_cd, quad,
+             cfg: SimConfig = SimConfig(),
+             chunk_size: int | None = None) -> SimResult:
+    """Run one scheme over one trace.  `scheme` is a registry name or a
+    schemes.Scheme record; `chunk_size` splits the trace into jitted chunk
+    dispatches (bit-identical to the monolithic scan)."""
     import jax.numpy as jnp
 
-    fn = _jit_sim(scheme, cfg)
-    stats_vec = np.asarray(
-        fn(
-            jnp.asarray(addrs, jnp.int32),
-            jnp.asarray(is_write),
-            jnp.asarray(pair_ab),
-            jnp.asarray(pair_cd),
-            jnp.asarray(quad),
-        )
+    sch = schemes_registry.resolve(scheme)
+    args = (
+        jnp.asarray(addrs, jnp.int32),
+        jnp.asarray(is_write),
+        jnp.asarray(pair_ab),
+        jnp.asarray(pair_cd),
+        jnp.asarray(quad),
     )
-    return summarize_stats(scheme, stats_vec)
+    if chunk_size:
+        init, chunk = _jit_sim_chunked(sch, cfg)
+        carry = init()
+        a, w, tail = args[0], args[1], args[2:]
+        for lo in range(0, a.shape[0], chunk_size):
+            hi = lo + chunk_size
+            carry = chunk(carry, a[lo:hi], w[lo:hi], *tail)
+        stats_vec = np.asarray(carry[-1])
+    else:
+        stats_vec = np.asarray(_jit_sim(sch, cfg)(*args))
+    return summarize_stats(sch.name, stats_vec)
 
 
 def speedup(baseline_accesses: int, scheme_accesses: int, f: float) -> float:
@@ -386,16 +192,25 @@ def summarize_workload(name: str, f: float, results: dict[str, SimResult],
 
 def run_workload(name: str, schemes=SCHEMES, n_events: int = 200_000,
                  seed: int = 0, cfg: SimConfig = SimConfig()):
-    """Simulate one workload under several schemes; returns summary dict."""
+    """Simulate one workload under several schemes; returns summary dict.
+
+    A baseline run is required for speedup normalization; when "baseline"
+    is not among the requested schemes it is folded into the main loop
+    (mirroring batchsim.sweep_workloads) instead of paying a separate
+    simulate dispatch after the fact.
+    """
     from .traces import build_workload
 
     meta, addrs, is_write, pab, pcd, pq, f = build_workload(name, n_events, seed)
+    requested = [schemes_registry.resolve(s) for s in schemes]
+    req_names = [s.name for s in requested]
+    sim_schemes = (requested if "baseline" in req_names
+                   else [schemes_registry.get("baseline"), *requested])
     out, base = {}, None
-    for sch in schemes:
+    for sch in sim_schemes:
         res = simulate(sch, addrs, is_write, pab, pcd, pq, cfg)
-        out[sch] = res
-        if sch == "baseline":
+        if sch in requested:
+            out[sch.name] = res
+        if sch.name == "baseline":
             base = res.accesses
-    if base is None:
-        base = simulate("baseline", addrs, is_write, pab, pcd, pq, cfg).accesses
     return summarize_workload(name, f, out, base)

@@ -15,6 +15,7 @@ fraction used by the bandwidth-bound speedup model (DESIGN.md §2.2).
 
 from __future__ import annotations
 
+import zlib
 from dataclasses import dataclass
 
 import numpy as np
@@ -111,7 +112,10 @@ def group_fits(spec: WorkloadSpec, seed: int = 0):
 
 def generate_trace(spec: WorkloadSpec, n_events: int, seed: int = 0):
     """Build (addrs int32 (T,), is_write bool (T,)) for one workload."""
-    rng = np.random.default_rng(seed ^ hash(spec.name) & 0xFFFFFFFF)
+    # crc32, not hash(): str hashing is salted per process, which made
+    # traces (and every cached/golden stats vector) irreproducible across
+    # runs.  The stream for a given (name, seed) is now deterministic.
+    rng = np.random.default_rng(seed ^ zlib.crc32(spec.name.encode()))
     n_lines = min(int(spec.footprint_mb * (1 << 20) // 64), LINES_TOTAL)
     # hot set: large enough to dwarf the (scaled) LLC, small enough that a
     # few-hundred-k-event trace actually revisits it several times (reuse)

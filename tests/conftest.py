@@ -15,6 +15,7 @@ except ModuleNotFoundError:
     collect_ignore = [
         "test_codecs.py",
         "test_cram_functional.py",
+        "test_engine_property.py",
         "test_kernels.py",
         "test_marker_mapping.py",
         "test_substrates.py",

@@ -76,8 +76,11 @@ def test_scheme_subset_includes_baseline_normalization():
 
 
 def test_scheme_flags_table():
+    from repro.core.engine import FLAG_COMP, FLAG_DYNAMIC, FLAG_LCT_UPDATE, N_FLAGS
+
     f = scheme_flags(SCHEMES)
-    assert f.shape == (len(SCHEMES), 6)
+    assert f.shape == (len(SCHEMES), N_FLAGS)
     # baseline has no behaviour flags; dynamic is a compressed+llp scheme
     assert not f[SCHEMES.index("baseline")].any()
-    assert f[SCHEMES.index("dynamic")][0] and f[SCHEMES.index("dynamic")][5]
+    d = f[SCHEMES.index("dynamic")]
+    assert d[FLAG_COMP] and d[FLAG_DYNAMIC] and d[FLAG_LCT_UPDATE]

@@ -1,0 +1,72 @@
+"""Benchmark-layer unit tests: fig14 missing-scheme robustness and the
+consolidated report's registry-extra sections (no simulation involved —
+the suite dict is synthesized)."""
+
+import pathlib
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+if str(ROOT) not in sys.path:
+    sys.path.insert(0, str(ROOT))
+
+
+def _summary(schemes, accuracy=0.97):
+    breakdown = {
+        "data_reads": 10, "mispredict_extra": 1, "wb_dirty": 2,
+        "wb_clean+invalidate": 3, "metadata": 4, "prefetch_extra": 0,
+    }
+    return {
+        "workload": "x", "f": 0.5, "baseline_accesses": 100,
+        "schemes": {
+            s: {"accesses": 90, "speedup": 1.05, "llp_accuracy": accuracy,
+                "meta_hit_rate": 0.5, "breakdown": dict(breakdown)}
+            for s in schemes
+        },
+    }
+
+
+def _suite(schemes):
+    return {"n_events": 1000, "sweep_wall_s": 0.1,
+            "workloads": {"libq": _summary(schemes),
+                          "mcf17": _summary(schemes)}}
+
+
+def test_fig14_skips_missing_schemes(monkeypatch):
+    import benchmarks.fig14_llp as fig14
+
+    monkeypatch.setattr(fig14, "suite_results",
+                        lambda: _suite(("baseline", "dynamic")))
+    rows = fig14.run()  # must not KeyError on the cram/explicit columns
+    labels = {r[0]: r[2] for r in rows}
+    assert "suite cache lacks: cram,explicit" in labels["fig14/omitted_schemes"]
+    assert labels["fig14/mean_llp_accuracy"].startswith("n/a")
+    assert labels["fig14/libq"] == "n/a"
+
+
+def test_fig14_full_suite(monkeypatch):
+    import benchmarks.fig14_llp as fig14
+
+    monkeypatch.setattr(fig14, "suite_results",
+                        lambda: _suite(("cram", "explicit")))
+    rows = fig14.run()
+    labels = {r[0]: r[2] for r in rows}
+    assert "llp=0.970" in labels["fig14/libq"]
+    assert "metaHR=0.500" in labels["fig14/libq"]
+    assert not any("omitted" in name for name, _, _ in rows)
+
+
+def test_build_report_registry_sections():
+    from benchmarks.sweep_report import build_report
+
+    suite = _suite(("baseline", "cram", "cram-nollp",
+                    "cram@lct64", "cram@lct128"))
+    rep = build_report(suite)
+    # paper aggregates stay restricted to the six paper schemes
+    assert set(rep["fig16_geomean"]) == {"cram"}
+    # the extras feed their own sections
+    assert set(rep["lct_sensitivity"]) == {"64", "128", "512"}
+    assert rep["llp_value"]["llp_gain_pct"] == pytest.approx(0.0)
+    assert rep["lct_sensitivity"]["512"]["geomean_speedup"] == \
+        pytest.approx(1.05)

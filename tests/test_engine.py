@@ -1,0 +1,197 @@
+"""Unified engine: golden parity, execution modes, and the scheme registry.
+
+The golden fixture (tests/golden/engine_stats.json) was produced by the
+PRE-refactor per-scheme simulator on the deterministic trace generator —
+the unified engine must reproduce every stats vector bit-identically
+through both the scalar (1×1) and batched (vmapped) instantiations, and
+through the chunked and sharded execution modes.
+"""
+
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import schemes as schemes_registry
+from repro.core.batchsim import sweep
+from repro.core.engine import (
+    N_FLAGS,
+    N_PARAMS,
+    N_STATS,
+    ST_PRED_HIT,
+    ST_READ_PROBES,
+    STAT_NAMES,
+    SimConfig,
+)
+from repro.core.memsim import SCHEMES, _STAT_NAMES, simulate
+from repro.core.schemes import Scheme
+from repro.core.traces import build_workload
+
+GOLDEN = json.loads(
+    (pathlib.Path(__file__).parent / "golden" / "engine_stats.json")
+    .read_text())
+NAMES = ("libq", "pr_twi", "mix3")
+CFG = SimConfig()
+
+
+@pytest.fixture(scope="module")
+def wls():
+    return {n: build_workload(n, GOLDEN["n_events"], seed=GOLDEN["seed"])
+            for n in NAMES}
+
+
+def _golden_vec(scheme: str, workload: str) -> np.ndarray:
+    return np.asarray(GOLDEN["stats"][scheme][workload], np.int32)
+
+
+def test_stat_names_single_source():
+    assert tuple(GOLDEN["stat_names"]) == STAT_NAMES == _STAT_NAMES
+    assert len(STAT_NAMES) == N_STATS
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_scalar_reproduces_prerefactor_golden(wls, scheme):
+    for name in NAMES:
+        _, a, w, pab, pcd, pq, _ = wls[name]
+        r = simulate(scheme, a, w, pab, pcd, pq, CFG)
+        got = np.asarray([r.stats[k] for k in STAT_NAMES], np.int32)
+        assert np.array_equal(got, _golden_vec(scheme, name)), (
+            f"{scheme}/{name}: {got} != golden")
+
+
+@pytest.fixture(scope="module")
+def stacked(wls):
+    ws = [wls[n] for n in NAMES]
+    return tuple(np.stack([w[i] for w in ws]) for i in range(1, 6))
+
+
+def test_batched_reproduces_prerefactor_golden(stacked):
+    stats = sweep(SCHEMES, *stacked, CFG)
+    for si, sch in enumerate(SCHEMES):
+        for wi, name in enumerate(NAMES):
+            assert np.array_equal(stats[si, wi], _golden_vec(sch, name)), (
+                f"{sch}/{name}")
+
+
+def test_chunked_sweep_bit_identical(stacked):
+    whole = sweep(SCHEMES, *stacked, CFG)
+    # chunk boundary not dividing T exercises the remainder dispatch
+    chunked = sweep(SCHEMES, *stacked, CFG, chunk_size=5_000)
+    assert np.array_equal(whole, chunked)
+
+
+def test_scalar_chunked_bit_identical(wls):
+    _, a, w, pab, pcd, pq, _ = wls["libq"]
+    r = simulate("dynamic", a, w, pab, pcd, pq, CFG, chunk_size=5_000)
+    got = np.asarray([r.stats[k] for k in STAT_NAMES], np.int32)
+    assert np.array_equal(got, _golden_vec("dynamic", "libq"))
+
+
+def test_config_axis_rides_same_dispatch(wls):
+    """Config variants (params rows) batch with behaviour schemes in ONE
+    dispatch: full-size variants are bit-equal to their base scheme;
+    shrunken LCT / metadata-cache ablations change the stats."""
+    from repro.core.engine import ST_META_READS
+
+    _, a, w, pab, pcd, pq, _ = wls["libq"]
+    lct_full = Scheme("lct-full-test", comp=True, llp=True, lct_size=512)
+    meta_full = Scheme("meta-full-test", comp=True, meta=True,
+                       meta_sets=CFG.meta_sets)
+    meta_small = Scheme("meta-small-test", comp=True, meta=True, meta_sets=4)
+    stats = sweep(("cram", "cram@lct64", lct_full,
+                   "explicit", meta_full, meta_small),
+                  a[None], w[None], pab[None], pcd[None], pq[None], CFG)
+    assert np.array_equal(stats[0, 0], _golden_vec("cram", "libq"))
+    assert np.array_equal(stats[2, 0], stats[0, 0])
+    assert not np.array_equal(stats[1, 0], stats[0, 0])
+    assert np.array_equal(stats[3, 0], _golden_vec("explicit", "libq"))
+    assert np.array_equal(stats[4, 0], stats[3, 0])
+    # a 4-set (2KB) metadata cache must miss more than the 64-set (32KB) one
+    assert stats[5, 0][ST_META_READS] > stats[3, 0][ST_META_READS]
+
+
+def test_cram_nollp_pays_for_missing_predictor():
+    """Force packed-state refetches: pass 1 installs + evicts groups packed
+    (everything quad-able), pass 2 refetches them.  With the LCT frozen at
+    level 0 (cram-nollp) every non-home lane pays the probe chain; the
+    learned LCT (cram) mispredicts only once per page."""
+    cfg = SimConfig(llc_sets=8, llc_ways=2, n_groups=256)
+    lines = cfg.n_groups * 4
+    # pass 2 touches only lane 1 of each (now packed, evicted) group, so
+    # every access is a non-home-lane miss that needs the slot prediction
+    addrs = np.concatenate([
+        np.arange(lines, dtype=np.int32),
+        np.arange(cfg.n_groups, dtype=np.int32) * 4 + 1,
+    ])[None]
+    wr = np.zeros_like(addrs, dtype=bool)
+    ones = np.ones((1, cfg.n_groups), dtype=bool)
+    stats = sweep(("cram", "cram-nollp"), addrs, wr, ones, ones, ones, cfg)
+    cram, nollp = stats[0, 0], stats[1, 0]
+    assert nollp[ST_READ_PROBES] > cram[ST_READ_PROBES]
+    assert nollp[ST_PRED_HIT] < cram[ST_PRED_HIT]
+
+
+def test_sharded_sweep_bit_identical_to_single_device():
+    """shard_map over a forced 2-device CPU must match the single-device
+    dispatch exactly (fresh process: device count is fixed at jax init)."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["JAX_PLATFORMS"] = "cpu"
+        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                                   + " --xla_force_host_platform_device_count=2")
+        import numpy as np
+        import jax
+        from repro.core.batchsim import sweep
+        from repro.core.engine import SimConfig
+
+        assert len(jax.devices()) == 2
+        cfg = SimConfig(llc_sets=16, llc_ways=2, n_groups=512)
+        rng = np.random.default_rng(7)
+        T, W = 800, 2
+        addrs = rng.integers(0, cfg.n_groups * 4, (W, T)).astype(np.int32)
+        wr = rng.random((W, T)) < 0.3
+        pab = rng.random((W, cfg.n_groups)) < 0.6
+        pcd = rng.random((W, cfg.n_groups)) < 0.6
+        quad = rng.random((W, cfg.n_groups)) < 0.3
+        schemes = ("baseline", "cram", "dynamic")
+        sharded = sweep(schemes, addrs, wr, pab, pcd, quad, cfg, shard=True)
+        single = sweep(schemes, addrs, wr, pab, pcd, quad, cfg, shard=False)
+        assert np.array_equal(sharded, single), (sharded, single)
+        print("SHARD-OK")
+    """)
+    env = dict(os.environ)
+    src = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "SHARD-OK" in out.stdout
+
+
+def test_registry_round_trip():
+    for name in SCHEMES:
+        sch = schemes_registry.get(name)
+        assert sch.name == name
+        assert sch.flags().shape == (N_FLAGS,)
+        assert sch.params(CFG).shape == (N_PARAMS,)
+    assert "cram-nollp" in schemes_registry.names()
+    with pytest.raises(KeyError, match="unknown scheme"):
+        schemes_registry.get("not-a-scheme")
+    with pytest.raises(ValueError, match="already registered"):
+        schemes_registry.register(schemes_registry.get("cram"))
+    with pytest.raises(ValueError, match="lct_size"):
+        Scheme("bad", lct_size=0)
+
+
+def test_variant_derivation():
+    v = schemes_registry.variant("dynamic", "dyn-test-variant",
+                                 sample_rate=0.5, overwrite=True)
+    assert v.dynamic and v.comp and v.llp
+    from repro.core.engine import PARAM_SAMPLE_THRESH
+    assert v.params(CFG)[PARAM_SAMPLE_THRESH] == 512
+    assert schemes_registry.get("dyn-test-variant") is v

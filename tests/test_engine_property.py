@@ -1,0 +1,76 @@
+"""Property test: random (flags, params) points through the engine's scalar
+vs batched instantiations must agree bit-for-bit.
+
+The scalar and batched front-ends share the engine step by construction;
+what can still diverge is the batching itself (vmap lowering, gather/
+scatter batching rules).  So: drive arbitrary flag combinations — including
+nonsensical ones like ideal-without-comp — and traced config params through
+both instantiations and require exact int32 equality.
+
+Both callables are compiled ONCE (flags/params are traced arguments here,
+not closed-over constants), so each hypothesis example only pays two
+dispatches of a short scan.
+"""
+
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core.dynamic import COUNTER_MAX
+from repro.core.engine import (
+    N_FLAGS,
+    N_PARAMS,
+    PARAM_COUNTER_INIT,
+    PARAM_LCT_SIZE,
+    PARAM_META_SETS,
+    PARAM_SAMPLE_THRESH,
+    SimConfig,
+    build_engine,
+)
+
+CFG = SimConfig(llc_sets=16, llc_ways=2, n_groups=512)
+T = 600
+
+_FNS = {}
+
+
+def _fns():
+    if not _FNS:
+        import jax
+
+        eng = build_engine(CFG)
+        run_w = jax.vmap(eng.run_one, in_axes=(None, None, 0, 0, 0, 0, 0))
+        run_sw = jax.vmap(run_w, in_axes=(0, 0, None, None, None, None, None))
+        _FNS["scalar"] = jax.jit(eng.run_one)
+        _FNS["batched"] = jax.jit(run_sw)
+    return _FNS["scalar"], _FNS["batched"]
+
+
+@given(
+    flags=st.lists(st.booleans(), min_size=N_FLAGS, max_size=N_FLAGS),
+    lct_size=st.sampled_from((1, 7, 64, 512)),
+    thresh=st.integers(0, 1024),
+    cinit=st.integers(0, COUNTER_MAX),
+    meta_sets=st.sampled_from((1, 16, 64)),
+    seed=st.integers(0, 2**16),
+)
+def test_random_flag_points_scalar_equals_batched(flags, lct_size, thresh,
+                                                  cinit, meta_sets, seed):
+    rng = np.random.default_rng(seed)
+    addrs = rng.integers(0, CFG.n_groups * 4, T).astype(np.int32)
+    wr = rng.random(T) < 0.4
+    pab = rng.random(CFG.n_groups) < 0.6
+    pcd = rng.random(CFG.n_groups) < 0.6
+    quad = rng.random(CFG.n_groups) < 0.3
+
+    fl = np.asarray(flags, np.int32)
+    pr = np.zeros(N_PARAMS, np.int32)
+    pr[PARAM_LCT_SIZE] = lct_size
+    pr[PARAM_SAMPLE_THRESH] = thresh
+    pr[PARAM_COUNTER_INIT] = cinit
+    pr[PARAM_META_SETS] = meta_sets
+
+    scalar, batched = _fns()
+    a = np.asarray(scalar(fl, pr, addrs, wr, pab, pcd, quad))
+    b = np.asarray(batched(fl[None], pr[None], addrs[None], wr[None],
+                           pab[None], pcd[None], quad[None]))[0, 0]
+    assert np.array_equal(a, b), (fl.tolist(), pr.tolist(), a, b)
