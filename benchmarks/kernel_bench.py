@@ -54,6 +54,30 @@ def run() -> list[tuple]:
         rows.append((f"kernel/attend_{label}", t_att,
                      f"bw_saving={bw['saving']:.3f} err={err:.1e}"))
 
+    # incremental CRAM-KV decode: per-step pack work is O(new pairs)
+    from repro.kv import synthetic_kv_stream
+
+    kvc = CRAMKVCache(max_pages=12, page=page, n_kv=hkv, head_dim=d,
+                      policy="static")
+    stream, _ = synthetic_kv_stream(np.random.default_rng(1), 1, 12 * page,
+                                    hkv, d)
+    kvc.append(stream[:, : 6 * page], stream[:, : 6 * page])
+    kvc.account_step()
+    kvc.append(stream[:, 6 * page:6 * page + 1],
+               stream[:, 6 * page:6 * page + 1])
+    kvc.account_step()          # warm-up: compile W=1 window before timing
+    pairs0 = kvc.stats.pack_pairs_processed
+    t0 = time.perf_counter()
+    n_steps = 8
+    for t in range(6 * page + 1, 6 * page + 1 + n_steps):
+        kvc.append(stream[:, t:t + 1], stream[:, t:t + 1])
+        kvc.account_step()
+    t_step = (time.perf_counter() - t0) / n_steps * 1e6
+    pack_per_step = (kvc.stats.pack_pairs_processed - pairs0) / n_steps
+    rows.append(("kernel/kv_decode_step", t_step,
+                 f"pack_pairs/step={pack_per_step:.1f} "
+                 f"saving={kvc.saving():.3f}"))
+
     # checkpoint codec ratios per tensor class
     classes = {
         "zeros": np.zeros(1 << 16, np.uint8).tobytes(),

@@ -2,9 +2,10 @@
 
 Sweep mode (the fast path — ONE batched jitted dispatch per section):
 
-    python benchmarks/run.py --sweep all            # memsim + compress scan
+    python benchmarks/run.py --sweep all            # memsim + compress + serve
     python benchmarks/run.py --sweep memsim         # Fig. 12/15/16/18, Table V
     python benchmarks/run.py --sweep compress       # Pallas image scan (Fig. 4)
+    python benchmarks/run.py --sweep serve          # CRAM-KV decode curves
 
 Sweep flags:
     --events N        trace length per workload   (default $REPRO_BENCH_EVENTS
@@ -12,6 +13,8 @@ Sweep flags:
     --workloads a,b   comma-separated workload subset (default: full suite)
     --schemes x,y     comma-separated scheme subset   (default: the six paper
                       schemes + registry extras: cram-nollp, cram@lct64/128/256)
+    --serve-steps N   decode steps per serve curve (default 32)
+    --serve-batches a,b  serve-curve batch sizes (default 1,4)
     --out PATH        report path (default experiments/sweep_report.json)
     --force           ignore the on-disk suite cache
 
@@ -40,6 +43,14 @@ The consolidated JSON report written by --sweep has this schema:
                                  "mean_size", "status_counts"}},
         "overall":    {...same keys...},
         "lines_scanned", "wall_s"
+      },
+      "serve": {                        # present for --sweep serve/all
+        "curves":    [per (policy x batch x compressibility) decode curve:
+                      seq_len / pack_pairs_per_step / bytes per step...],
+        "pack_work": {"mean_pack_pairs_per_step", "mean_total_pairs",
+                      "full_rebuild_work_ratio"},   # incremental-repack win
+        "static_compressible_saving",
+        "parity":    {"incremental_equals_rebuild", "kernel_vs_oracle_err"}
       }
     }
 
@@ -71,6 +82,7 @@ MODULES = [
     "table4_channels",
     "table5_prefetch",
     "kernel_bench",
+    "serve_bench",
     "dryrun_summary",
     "roofline_report",
 ]
@@ -126,6 +138,14 @@ def _sweep_compress(args) -> dict:
     }
 
 
+def _sweep_serve(args) -> dict:
+    """CRAM-KV decode-bandwidth/packing curves (incremental batched cache)."""
+    from benchmarks.serve_bench import sweep
+
+    batches = tuple(int(b) for b in args.serve_batches.split(","))
+    return sweep(batches=batches, decode_steps=args.serve_steps)
+
+
 def run_sweep(args) -> None:
     # --events/--workloads/--schemes only shape the memsim section; the
     # compress scan always covers the fixed Fig. 4 corpus, so record the
@@ -157,6 +177,14 @@ def run_sweep(args) -> None:
         o = report["compress"]["overall"]
         print(f"compress scan: {report['compress']['lines_scanned']} lines, "
               f"p64={o['pair_fits_64B']:.3f} p60={o['pair_fits_60B']:.3f}")
+    if args.sweep in ("serve", "all"):
+        report["serve"] = _sweep_serve(args)
+        pw = report["serve"]["pack_work"]
+        pr = report["serve"]["parity"]
+        print(f"serve: pack/step={pw['mean_pack_pairs_per_step']:.2f} pairs "
+              f"(full rebuild would be {pw['mean_total_pairs']:.1f}), "
+              f"static saving={report['serve']['static_compressible_saving']:.3f}, "
+              f"incr==rebuild={pr['incremental_equals_rebuild']}")
     out_path = Path(args.out) if args.out else (
         _ROOT / "experiments" / "sweep_report.json")
     out_path.parent.mkdir(parents=True, exist_ok=True)
@@ -194,8 +222,12 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("modules", nargs="*",
                     help="legacy mode: per-figure modules to run")
-    ap.add_argument("--sweep", choices=("all", "memsim", "compress"),
+    ap.add_argument("--sweep", choices=("all", "memsim", "compress", "serve"),
                     help="batched sweep mode; emits one JSON report")
+    ap.add_argument("--serve-steps", type=int, default=32,
+                    help="decode steps per serve-bench curve")
+    ap.add_argument("--serve-batches", default="1,4",
+                    help="comma-separated serve-bench batch sizes")
     ap.add_argument("--events", type=int, default=None,
                     help="trace length per workload (sweep mode only; "
                          "legacy mode reads $REPRO_BENCH_EVENTS)")

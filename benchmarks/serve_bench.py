@@ -1,0 +1,149 @@
+"""CRAM-KV serving bench: decode-bandwidth / packing-work curves vs
+sequence length and batch size through the batched incremental cache.
+
+Each curve prefills a batch of sequences, then decodes token by token,
+recording per step: the pairs actually re-packed (the incremental-repack
+work — O(new pairs), where a full rebuild would pay O(total pairs) every
+step), the CRAM vs raw bytes a decode step DMAs, and the bandwidth saving.
+
+Sweep mode (`benchmarks/run.py --sweep serve`) emits the JSON curves plus
+an incremental-vs-full-rebuild parity check; legacy mode
+(`benchmarks/run.py serve_bench`) prints summary rows.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+
+_ROOT = Path(__file__).resolve().parents[1]
+for _p in (str(_ROOT), str(_ROOT / "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from repro.kv import CRAMKVCache, synthetic_kv_stream  # noqa: E402
+
+PAGE, HKV, HD = 8, 1, 32
+
+
+def _stream(rng, batch, n_tokens, compressible=True):
+    return synthetic_kv_stream(rng, batch, n_tokens, HKV, HD,
+                               compressible=compressible)
+
+
+def decode_curve(policy="static", batch=1, prefill_pages=4, decode_steps=32,
+                 compressible=True, seed=0) -> dict:
+    """One decode trajectory; per-step pack work and bandwidth."""
+    rng = np.random.default_rng(seed)
+    prefill = prefill_pages * PAGE
+    total = prefill + decode_steps + 1           # +1 warm-up step
+    n_need = (total + PAGE - 1) // PAGE
+    cache = CRAMKVCache(max_pages=n_need + (n_need % 2), page=PAGE,
+                        n_kv=HKV, head_dim=HD, batch=batch, policy=policy)
+    cache.append(*_stream(rng, batch, prefill, compressible))
+    cache.account_step()
+    # one untimed decode step compiles the W=1 pack window and the T=1
+    # append scatter, so the timed loop measures steady-state steps only
+    cache.append(*_stream(rng, batch, 1, compressible))
+    cache.account_step()
+    seq_len, pack_pairs, total_pairs, cram_b, raw_b = [], [], [], [], []
+    t0 = time.perf_counter()
+    for _ in range(decode_steps):
+        cache.append(*_stream(rng, batch, 1, compressible))
+        before = cache.stats.pack_pairs_processed
+        bw = cache.account_step()
+        seq_len.append(cache.tokens)
+        pack_pairs.append(cache.stats.pack_pairs_processed - before)
+        total_pairs.append(batch * cache.n_active_pairs)
+        cram_b.append(int(bw["cram_bytes"]))
+        raw_b.append(int(bw["raw_bytes"]))
+    wall = time.perf_counter() - t0
+    mean_pack = float(np.mean(pack_pairs))
+    mean_total = float(np.mean(total_pairs))
+    return {
+        "policy": policy, "batch": batch, "compressible": compressible,
+        "prefill_tokens": prefill, "decode_steps": decode_steps,
+        "seq_len": seq_len,
+        "pack_pairs_per_step": pack_pairs,
+        "total_pairs": total_pairs,
+        "cram_bytes_per_step": cram_b,
+        "raw_bytes_per_step": raw_b,
+        "mean_pack_pairs_per_step": mean_pack,
+        "mean_total_pairs": mean_total,
+        "full_rebuild_work_ratio": mean_total / max(mean_pack, 1e-9),
+        "final_saving": 1.0 - cram_b[-1] / max(raw_b[-1], 1),
+        "cumulative_saving": cache.saving(),
+        "decode_wall_s": round(wall, 4),
+        "packed_pairs": cache.stats.packed_pairs,
+        "raw_pairs": cache.stats.raw_pairs,
+        "predictor_misses": cache.stats.predictor_misses,
+    }
+
+
+def _parity_check(seed=0) -> dict:
+    """Incremental state vs from-scratch rebuild, and kernel vs oracle."""
+    rng = np.random.default_rng(seed)
+    cache = CRAMKVCache(max_pages=8, page=PAGE, n_kv=HKV, head_dim=HD,
+                        batch=2, policy="static")
+    for t in (2 * PAGE, 3, 1, PAGE):
+        cache.append(*_stream(rng, 2, t))
+        cache.repack()
+    ref, act = cache.reference_rebuild(), cache.active_state()
+    equal = all(bool(jnp.array_equal(act[k], ref[k])) for k in ref)
+    q = jnp.asarray(rng.standard_normal((2, 4, HD)), jnp.float32)
+    err = float(jnp.max(jnp.abs(cache.attend(q, account=False)
+                                - cache.attend_ref(q))))
+    return {"incremental_equals_rebuild": equal,
+            "kernel_vs_oracle_err": err}
+
+
+def sweep(policies=("static", "dynamic", "off"), batches=(1, 4),
+          prefill_pages=4, decode_steps=32, seed=0) -> dict:
+    curves = []
+    for policy in policies:
+        for batch in batches:
+            for compressible in (True, False):
+                curves.append(decode_curve(
+                    policy=policy, batch=batch, prefill_pages=prefill_pages,
+                    decode_steps=decode_steps, compressible=compressible,
+                    seed=seed))
+    static_comp = [c for c in curves
+                   if c["policy"] == "static" and c["compressible"]]
+    return {
+        "page": PAGE, "n_kv": HKV, "head_dim": HD,
+        "curves": curves,
+        "pack_work": {
+            "mean_pack_pairs_per_step": float(np.mean(
+                [c["mean_pack_pairs_per_step"] / c["batch"]
+                 for c in curves])),
+            "mean_total_pairs": float(np.mean(
+                [c["mean_total_pairs"] / c["batch"] for c in curves])),
+            "full_rebuild_work_ratio": float(np.mean(
+                [c["full_rebuild_work_ratio"] for c in curves])),
+        },
+        "static_compressible_saving": float(np.mean(
+            [c["cumulative_saving"] for c in static_comp])),
+        "parity": _parity_check(seed),
+    }
+
+
+def run() -> list[tuple]:
+    """Legacy-mode rows for benchmarks/run.py."""
+    rep = sweep(batches=(1, 2), decode_steps=12)
+    rows = []
+    for c in rep["curves"]:
+        name = (f"serve/{c['policy']}_b{c['batch']}"
+                f"_{'comp' if c['compressible'] else 'rand'}")
+        us = c["decode_wall_s"] / max(c["decode_steps"], 1) * 1e6
+        rows.append((name, us,
+                     f"pack/step={c['mean_pack_pairs_per_step']:.2f} "
+                     f"saving={c['cumulative_saving']:.3f}"))
+    p = rep["parity"]
+    rows.append(("serve/parity", 0.0,
+                 f"incr_eq_rebuild={p['incremental_equals_rebuild']} "
+                 f"err={p['kernel_vs_oracle_err']:.1e}"))
+    return rows

@@ -2,8 +2,13 @@
 
 `build_cram_cache` packs logical KV pages pairwise into physical slots
 (raw when the pair doesn't fit), writing base strips + in-band markers.
-`decode_attention` runs the fused marker-check/unpack/flash-decode kernel,
-vmapped over batch.  Both default to interpret mode off-TPU.
+`pack_window` / `raw_window` are the incremental variants: they (re)pack
+only a gathered window of dirty pairs, batched over sequences, so a decode
+step costs O(new pairs) instead of a full rebuild.  `decode_attention`
+runs the fused marker-check/unpack/flash-decode kernel, vmapped over
+batch; `decode_attention_batched` vmaps it over per-sequence caches.
+`hbm_bytes_moved` is a jitted bandwidth reduction that also charges the
+LLP-mispredict re-probe.  All kernels default to interpret mode off-TPU.
 """
 
 from __future__ import annotations
@@ -70,6 +75,53 @@ def build_cram_cache(pages, *, key: int = 0x5EED, interpret=None):
     }
 
 
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pack_window(a, b, marker_lanes, enabled, *, interpret=True):
+    """Incrementally (re)pack a gathered window of dirty page pairs.
+
+    a/b: (B, W, page, Hkv, D2) int16 — pageA/pageB of each dirty pair;
+    marker_lanes: (W, MARKER_LANES) int16 per-pair marker lanes (shared
+    across the batch); enabled: (B,) bool per-sequence compression gate.
+
+    Pack *fitness* is measured for every pair regardless of the gate (the
+    §VI dynamic controller samples fitness even while disabled so it can
+    re-enable); the *layout* honors the gate: disabled sequences store the
+    raw two-slot layout with zeroed strips, exactly as a full rebuild with
+    compression off would.
+
+    Returns (slots, overflow, strips, layout_packed (B, W), fit (B, W)).
+    """
+    packed, base, fit = jax.vmap(jax.vmap(
+        lambda x, y: pack_pair(x, y, interpret=interpret)))(a, b)
+    bsz, w, _, hkv, d2 = a.shape
+    lay = fit & enabled[:, None]
+    sel = lay[:, :, None, None, None]
+    slots = jnp.where(sel, packed, a)
+    over = jnp.where(sel, jnp.zeros_like(b), b)
+    strips = jnp.zeros((bsz, w, hkv, d2 + MARKER_LANES), jnp.int16)
+    strips = strips.at[..., :d2].set(base)
+    tail = jnp.broadcast_to(marker_lanes[None, :, None, :],
+                            (bsz, w, hkv, MARKER_LANES))
+    strips = strips.at[..., d2:].set(jnp.where(lay[:, :, None, None],
+                                               tail, 0))
+    strips = jnp.where(enabled[:, None, None, None], strips, 0)
+    return slots, over, strips, lay, fit
+
+
+@jax.jit
+def raw_window(a, b):
+    """Raw layout for a window of pairs — never touches the pack kernel.
+
+    The `policy="off"` path: pageA/pageB land in their own slots, strips
+    zeroed, nothing packed and no fitness measured.
+    """
+    bsz, w = a.shape[:2]
+    hkv, d2 = a.shape[-2:]
+    strips = jnp.zeros((bsz, w, hkv, d2 + MARKER_LANES), jnp.int16)
+    none = jnp.zeros((bsz, w), bool)
+    return a, b, strips, none, none
+
+
 def physical_view(cache, valid_per_page):
     """Flatten the cache to the slot list the decode kernel walks.
 
@@ -119,30 +171,82 @@ def decode_attention_ref(q, cache, valid_per_page):
     return jax.vmap(fn)(q)
 
 
-def hbm_bytes_moved(cache, valid_per_page) -> dict:
+def decode_attention_batched(q, cache, valid_per_page, *, interpret=None):
+    """Per-sequence decode: q (B, Hq, D), cache leaves carry a leading
+    batch axis except `markers` (per-pair values, shared across sequences);
+    valid_per_page (B, 2n).  Returns (B, Hq, D) float32."""
+    if interpret is None:
+        interpret = default_interpret()
+    markers = cache["markers"]
+
+    def one(qi, slots, over, strips, ok, vp):
+        c = {"slots": slots, "slots_overflow": over, "strips": strips,
+             "markers": markers, "packed_mask": ok}
+        s, st, m, v = physical_view(c, vp)
+        return cram_decode_attention(qi, s, st, m, v, interpret=interpret)
+
+    return jax.vmap(one)(q, cache["slots"], cache["slots_overflow"],
+                         cache["strips"], cache["packed_mask"],
+                         jnp.asarray(valid_per_page))
+
+
+def decode_attention_ref_batched(q, cache, valid_per_page):
+    """Oracle counterpart of decode_attention_batched (pure jnp)."""
+    markers_u = jnp.asarray(np.asarray(cache["markers"]).view(np.uint32))
+
+    def one(qi, slots, over, strips, ok, vp):
+        c = {"slots": slots, "slots_overflow": over, "strips": strips,
+             "markers": cache["markers"], "packed_mask": ok}
+        s, st, _, v = physical_view(c, vp)
+        mk = jnp.stack([markers_u, markers_u], 1).reshape(-1)
+        return _ref.cram_decode_attention_ref(qi, s, st, mk, v.reshape(-1))
+
+    return jax.vmap(one)(q, cache["slots"], cache["slots_overflow"],
+                         cache["strips"], cache["packed_mask"],
+                         jnp.asarray(valid_per_page))
+
+
+@functools.partial(jax.jit, static_argnames=("slot_bytes", "strip_bytes"))
+def _bytes_moved(packed_mask, live, predicted, *, slot_bytes, strip_bytes):
+    """Jitted reduction over (..., n) pair masks -> (raw, cram) byte totals
+    per leading batch element (scalar when unbatched)."""
+    any_live = live.any(-1)
+    n_live = live.sum(-1)
+    raw = (n_live * slot_bytes).sum(-1)
+    per_pair = jnp.where(packed_mask, slot_bytes + strip_bytes,
+                         n_live * (slot_bytes + strip_bytes))
+    # LLP-miss re-probe: a pair whose predicted packedness disagrees with
+    # its actual layout costs one extra slot DMA on this access.
+    reprobe = jnp.where(predicted != packed_mask, slot_bytes, 0)
+    cram = jnp.where(any_live, per_pair + reprobe, 0).sum(-1)
+    return raw, cram
+
+
+def hbm_bytes_moved(cache, valid_per_page, predictor=None) -> dict:
     """Bandwidth accounting: bytes a decode step DMAs with/without CRAM.
 
     raw  : one slot per live page (uncompressed layout, no strips)
     CRAM : packed pair -> ONE slot + strip serves both pages (the paper's
            one-access-two-lines win); unpacked pair -> one slot + strip per
            live page (the strip read is the in-band metadata overhead,
-           ~1/page of a slot).
+           ~1/page of a slot); a *mispredicted* live pair — the LLP analog
+           predicted the wrong packedness — costs one extra slot DMA (the
+           paper's LLP-miss re-probe).
+
+    `predictor` is the (…, n) predicted packed-mask; None means a perfect
+    predictor (no re-probe charge).  Leading batch axes are reduced per
+    sequence and summed into the scalar totals.
     """
     slots = cache["slots"]
-    ok = np.asarray(cache["packed_mask"])
-    n, page, hkv, d2 = slots.shape
+    page, hkv, d2 = slots.shape[-3:]
     slot_bytes = page * hkv * d2 * 2
     strip_bytes = hkv * (d2 + MARKER_LANES) * 2
-    v = np.asarray(valid_per_page).reshape(n, 2)
-    live = v > 0
-    raw = int(live.sum()) * slot_bytes
-    cram = 0
-    for i in range(n):
-        if not live[i].any():
-            continue
-        if ok[i]:
-            cram += slot_bytes + strip_bytes
-        else:
-            cram += int(live[i].sum()) * (slot_bytes + strip_bytes)
-    return {"raw_bytes": raw, "cram_bytes": cram,
-            "saving": 1.0 - cram / max(raw, 1)}
+    ok = jnp.asarray(cache["packed_mask"])
+    v = jnp.asarray(valid_per_page).reshape(ok.shape + (2,))
+    pred = ok if predictor is None else jnp.asarray(predictor)
+    raw, cram = _bytes_moved(ok, v > 0, pred, slot_bytes=slot_bytes,
+                             strip_bytes=strip_bytes)
+    raw_i, cram_i = int(raw.sum()), int(cram.sum())
+    return {"raw_bytes": raw_i, "cram_bytes": cram_i,
+            "raw_per_seq": np.asarray(raw), "cram_per_seq": np.asarray(cram),
+            "saving": 1.0 - cram_i / max(raw_i, 1)}

@@ -1,5 +1,6 @@
-"""Paged KV cache with CRAM packing (serving substrate)."""
+"""Batched paged KV cache with incremental CRAM packing (serving substrate)."""
 
-from .cache import CRAMKVCache
+from .cache import CRAMKVCache, KVStats
+from .traffic import synthetic_kv_stream
 
-__all__ = ["CRAMKVCache"]
+__all__ = ["CRAMKVCache", "KVStats", "synthetic_kv_stream"]

@@ -1,22 +1,35 @@
-"""CRAM-KV: paged serving cache with marker-packed page pairs.
+"""CRAM-KV: batched paged serving cache with marker-packed page pairs.
 
 The serving-side embodiment of the paper (DESIGN.md §3): logical KV pages
 pack pairwise into physical slots when BDI-compressible (kernels/bdi_pack),
 interpretation is by in-band marker (kernels/cram_attention), a
 last-compressibility predictor (the LLP analog, indexed by page-pair)
 decides whether the overflow slot needs to be fetched at all, and a
-Dynamic-CRAM counter turns packing off when the data never compresses.
+per-sequence Dynamic-CRAM counter (§VI) turns packing off when the data
+never compresses — while *still sampling pack fitness on repacked pairs*,
+so it can re-enable when compressible traffic returns.
 
-Bandwidth accounting (per decode step):
+Cache state is a JAX pytree with a batch axis (B sequences x page pairs):
+`append` is a vectorized token scatter (no per-token host loop), and
+`repack` is incremental — a dirty-pair mask tracks the page pairs touched
+since the last pack, so a decode step re-packs O(new pairs) instead of
+rebuilding every pair (the old per-step full build made decode O(T^2) in
+sequence length).  The incremental state is bit-identical to a from-scratch
+`kernels/ops.build_cram_cache` rebuild under the gate applied at the last
+repack (`reference_rebuild` is the oracle; tests/test_kv_cache.py pins it).
+
+Bandwidth accounting (per decode step, kernels/ops.hbm_bytes_moved):
   raw        : one slot DMA per live page
   CRAM       : one slot DMA per packed PAIR (2 pages), plus the strip;
-               unpacked pairs cost two slots; mispredicted pairs cost a
-               second access (the paper's LLP-miss re-probe)
+               unpacked pairs cost one slot + strip per live page;
+               mispredicted pairs cost a second slot access (the paper's
+               LLP-miss re-probe)
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import functools
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +37,7 @@ import numpy as np
 
 from ..core.dynamic import COUNTER_INIT, COUNTER_MAX, ENABLE_THRESHOLD
 from ..kernels import ops as kops
+from ..kernels.ref import MARKER_LANES, marker_to_lanes, slot_markers
 
 
 @dataclass
@@ -36,110 +50,285 @@ class KVStats:
     predictor_misses: int = 0
     pack_attempts: int = 0
     pack_skipped_dynamic: int = 0
+    pack_calls: int = 0
+    pack_pairs_processed: int = 0  # sequences x pairs run through repack
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_tokens(pages, kv, start):
+    """pages (B, Tmax, Hkv, D2) <- kv (B, T, Hkv, D2) at token `start`."""
+    return jax.lax.dynamic_update_slice(pages, kv, (0, start, 0, 0))
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3))
+def _scatter_window(slots, over, strips, mask, idx, slots_w, over_w,
+                    strips_w, lay):
+    """One fused, donated update of the physical state at pair `idx` —
+    the per-step write stays O(new pairs), no five-way full-buffer copy."""
+    return (slots.at[:, idx].set(slots_w),
+            over.at[:, idx].set(over_w),
+            strips.at[:, idx].set(strips_w),
+            mask.at[:, idx].set(lay))
 
 
 class CRAMKVCache:
-    """Single-sequence paged KV cache (batch = one cache per sequence)."""
+    """Batched paged KV cache: B sequences, uniform token counts."""
 
     def __init__(self, max_pages: int, page: int, n_kv: int, head_dim: int,
-                 *, policy: str = "dynamic", key: int = 0x5EED):
+                 *, batch: int = 1, policy: str = "dynamic",
+                 key: int = 0x5EED, counter_init: int = COUNTER_INIT,
+                 interpret: bool | None = None):
         assert max_pages % 2 == 0
+        assert policy in ("dynamic", "static", "off")
         self.page, self.n_kv, self.d = page, n_kv, head_dim
         self.d2 = 2 * head_dim
         self.max_pages = max_pages
-        self.pages = np.zeros((max_pages, page, n_kv, self.d2), np.int16)
-        self.tokens = 0
+        self.n_pairs = max_pages // 2
+        self.batch = batch
         self.policy = policy
         self.key = key
-        self.counter = COUNTER_INIT
-        self.predictor = np.zeros(max_pages // 2, bool)  # last packability
+        self.interpret = (kops.default_interpret() if interpret is None
+                          else interpret)
+        self.tokens = 0
+        markers = slot_markers(self.n_pairs, key)
+        self._marker_lanes = jnp.asarray(marker_to_lanes(markers))
+        b, n, p = batch, self.n_pairs, page
+        self.state = {
+            "pages": jnp.zeros((b, max_pages * p, n_kv, self.d2), jnp.int16),
+            "slots": jnp.zeros((b, n, p, n_kv, self.d2), jnp.int16),
+            "slots_overflow": jnp.zeros((b, n, p, n_kv, self.d2), jnp.int16),
+            "strips": jnp.zeros((b, n, n_kv, self.d2 + MARKER_LANES),
+                                jnp.int16),
+            "packed_mask": jnp.zeros((b, n), bool),
+            "predictor": jnp.zeros((b, n), bool),
+            "counter": jnp.full((b,), counter_init, jnp.int32),
+            "markers": jnp.asarray(markers.view(np.int32)),
+        }
+        # dirty-pair mask: appends are uniform across the batch, so one
+        # host-side mask covers every sequence; per-sequence gate flips
+        # mark the whole active prefix dirty (rare — full re-layout).
+        self._dirty = np.zeros(self.n_pairs, bool)
+        # pairs with data not yet fed to the §VI counter: a gate flip
+        # re-dirties the layout but must NOT re-count historical fitness
+        # (that would re-apply the whole prefix's fit/unfit balance and
+        # could slam the counter straight back across the threshold).
+        self._uncounted = np.zeros(self.n_pairs, bool)
+        self._last_enabled = np.full(batch, policy != "off", bool)
         self.stats = KVStats()
-        self._cache = None
-        self._dirty = True
 
     # ----------------------------------------------------------- appends
     def append(self, k, v):
-        """k/v: (T, n_kv, d) bf16 new tokens."""
-        k = np.asarray(jnp.asarray(k, jnp.bfloat16).view(jnp.int16))
-        v = np.asarray(jnp.asarray(v, jnp.bfloat16).view(jnp.int16))
-        T = k.shape[0]
-        kv = np.concatenate([k, v], axis=-1)          # (T, n_kv, d2)
-        for t in range(T):
-            p, o = divmod(self.tokens, self.page)
-            assert p < self.max_pages, "cache full"
-            self.pages[p, o] = kv[t]
-            self.tokens += 1
-        self._dirty = True
+        """k/v: (B, T, n_kv, d) — or (T, n_kv, d) when batch == 1 — new
+        tokens, any float dtype (stored as bf16 bit patterns)."""
+        k = jnp.asarray(k, jnp.bfloat16).view(jnp.int16)
+        v = jnp.asarray(v, jnp.bfloat16).view(jnp.int16)
+        if k.ndim == 3:
+            assert self.batch == 1, "batched cache needs (B, T, n_kv, d)"
+            k, v = k[None], v[None]
+        kv = jnp.concatenate([k, v], axis=-1)        # (B, T, n_kv, d2)
+        bsz, t = kv.shape[:2]
+        assert bsz == self.batch
+        assert self.tokens + t <= self.max_pages * self.page, "cache full"
+        self.state["pages"] = _scatter_tokens(
+            self.state["pages"], kv, self.tokens)
+        span = 2 * self.page                          # tokens per pair
+        lo = self.tokens // span
+        hi = (self.tokens + t - 1) // span
+        self._dirty[lo:hi + 1] = True
+        self._uncounted[lo:hi + 1] = True
+        self.tokens += t
 
     @property
     def n_pages(self) -> int:
         return (self.tokens + self.page - 1) // self.page
 
+    @property
+    def n_active_pairs(self) -> int:
+        return (self.n_pages + 1) // 2
+
     def valid_per_page(self) -> np.ndarray:
-        full, rem = divmod(self.tokens, self.page)
-        v = np.zeros(2 * ((self.n_pages + 1) // 2), np.int32)
-        v[:full] = self.page
-        if rem:
-            v[full] = rem
-        return v
+        """(B, max_pages) int32 valid tokens per logical page."""
+        v = np.clip(self.tokens - np.arange(self.max_pages) * self.page,
+                    0, self.page).astype(np.int32)
+        return np.broadcast_to(v, (self.batch, self.max_pages)).copy()
+
+    def pages_view(self):
+        """Logical pages (B, max_pages, page, n_kv, d2)."""
+        return self.state["pages"].reshape(
+            self.batch, self.max_pages, self.page, self.n_kv, self.d2)
 
     # ------------------------------------------------------------- packing
-    def _compression_enabled(self) -> bool:
+    def enabled(self) -> np.ndarray:
+        """(B,) bool: per-sequence compression gate (counter MSB, §VI)."""
         if self.policy == "off":
-            return False
+            return np.zeros(self.batch, bool)
         if self.policy == "static":
-            return True
-        return self.counter >= ENABLE_THRESHOLD
+            return np.ones(self.batch, bool)
+        return np.asarray(self.state["counter"]) >= ENABLE_THRESHOLD
 
     def repack(self):
-        """(Re)build the physical view; called when pages changed."""
-        n = 2 * ((self.n_pages + 1) // 2)
-        pages = jnp.asarray(self.pages[:n])
-        self.stats.pack_attempts += n // 2
-        if self._compression_enabled():
-            cache = kops.build_cram_cache(pages, key=self.key)
+        """Incrementally re-pack the dirty pairs (no-op when clean)."""
+        idx = np.nonzero(self._dirty)[0]
+        if idx.size == 0:
+            return
+        w = int(idx.size)
+        enabled = self.enabled()
+        idx_j = jnp.asarray(idx, jnp.int32)
+        pairs = self.pages_view().reshape(
+            self.batch, self.n_pairs, 2, self.page, self.n_kv, self.d2)
+        win = pairs[:, idx_j]                         # (B, W, 2, page, ...)
+        a, b = win[:, :, 0], win[:, :, 1]
+        if self.policy == "off":
+            slots_w, over_w, strips_w, lay, fit = kops.raw_window(a, b)
+            self.stats.pack_skipped_dynamic += self.batch * w
         else:
-            self.stats.pack_skipped_dynamic += n // 2
-            cache = kops.build_cram_cache(pages, key=self.key)
-            cache["packed_mask"] = jnp.zeros_like(cache["packed_mask"])
-            cache["slots"] = pages[0::2]
-            cache["slots_overflow"] = pages[1::2]
-            cache["strips"] = jnp.zeros_like(cache["strips"])
-        self._cache = cache
-        self._dirty = False
-
-        ok = np.asarray(cache["packed_mask"])
-        # predictor bookkeeping (LLP analog: last observed packability)
-        hits = int((self.predictor[: len(ok)] == ok).sum())
-        self.stats.predictor_hits += hits
-        self.stats.predictor_misses += len(ok) - hits
-        # dynamic counter: benefit = packed pairs (halved DMA), cost =
-        # pack work for pairs that failed
+            slots_w, over_w, strips_w, lay, fit = kops.pack_window(
+                a, b, self._marker_lanes[idx_j], jnp.asarray(enabled),
+                interpret=self.interpret)
+            self.stats.pack_attempts += self.batch * w
+            self.stats.pack_skipped_dynamic += int((~enabled).sum()) * w
+        st = self.state
+        (st["slots"], st["slots_overflow"], st["strips"],
+         st["packed_mask"]) = _scatter_window(
+            st["slots"], st["slots_overflow"], st["strips"],
+            st["packed_mask"], idx_j, slots_w, over_w, strips_w, lay)
+        self.stats.pack_calls += 1
+        self.stats.pack_pairs_processed += self.batch * w
+        lay_n = int(np.asarray(lay).sum())
+        self.stats.packed_pairs += lay_n
+        self.stats.raw_pairs += self.batch * w - lay_n
+        # §VI cost/benefit: fitness of *complete, not-yet-counted* repacked
+        # pairs drives the per-sequence counter — measured even while
+        # disabled (the zeroed layout mask no longer feeds the update), so
+        # the gate can re-enable once compressible traffic returns.  Each
+        # pair is counted exactly once, when it completes: gate-flip
+        # re-dirt re-lays pairs out but never re-counts their fitness.
+        complete = (idx + 1) * 2 * self.page <= self.tokens
         if self.policy == "dynamic":
-            self.counter = int(np.clip(
-                self.counter + int(ok.sum()) - int((~ok).sum()),
-                0, COUNTER_MAX))
-        self.predictor[: len(ok)] = ok
-        self.stats.packed_pairs += int(ok.sum())
-        self.stats.raw_pairs += int((~ok).sum())
+            countable = jnp.asarray(complete & self._uncounted[idx])
+            fit_n = (fit & countable[None, :]).sum(1)
+            unfit_n = ((~fit) & countable[None, :]).sum(1)
+            st["counter"] = jnp.clip(
+                st["counter"] + (fit_n - unfit_n).astype(jnp.int32),
+                0, COUNTER_MAX)
+        self._uncounted[idx[complete]] = False
+        self._dirty[:] = False
+        self._last_enabled = enabled
+        flipped = self.enabled() != enabled
+        if flipped.any():
+            # gate changed for some sequence: its whole layout must be
+            # rebuilt under the new gate at the next repack (keeps the
+            # incremental state equal to a full rebuild).
+            self._dirty[: self.n_active_pairs] = True
+
+    def reference_rebuild(self) -> dict:
+        """From-scratch full pack of the active pairs, per sequence, under
+        the gate applied at the last repack — the bit-exactness oracle for
+        the incremental path (compare with `active_state`)."""
+        n2 = 2 * self.n_active_pairs
+        pages = self.pages_view()[:, :n2]
+        out = []
+        for bi in range(self.batch):
+            if self._last_enabled[bi]:
+                c = kops.build_cram_cache(pages[bi], key=self.key,
+                                          interpret=self.interpret)
+            else:
+                n = n2 // 2
+                c = {
+                    "slots": pages[bi, 0::2],
+                    "slots_overflow": pages[bi, 1::2],
+                    "strips": jnp.zeros(
+                        (n, self.n_kv, self.d2 + MARKER_LANES), jnp.int16),
+                    "markers": self.state["markers"][:n],
+                    "packed_mask": jnp.zeros((n,), bool),
+                }
+            out.append(c)
+        keys = ("slots", "slots_overflow", "strips", "packed_mask")
+        ref = {k: jnp.stack([c[k] for c in out]) for k in keys}
+        ref["markers"] = self.state["markers"][: n2 // 2]
+        return ref
+
+    def active_state(self) -> dict:
+        """The physical cache restricted to the active pair prefix."""
+        n = self.n_active_pairs
+        st = self.state
+        return {
+            "slots": st["slots"][:, :n],
+            "slots_overflow": st["slots_overflow"][:, :n],
+            "strips": st["strips"][:, :n],
+            "packed_mask": st["packed_mask"][:, :n],
+            "markers": st["markers"][:n],
+        }
 
     # -------------------------------------------------------------- attend
-    def attend(self, q):
-        """q: (B, Hq, d) -> (B, Hq, d) float32 + bandwidth accounting."""
-        if self._dirty:
-            self.repack()
-        valid = jnp.asarray(self.valid_per_page())
-        out = kops.decode_attention(jnp.asarray(q), self._cache, valid)
-        bw = kops.hbm_bytes_moved(self._cache, valid)
+    def _active_bucket(self) -> int:
+        """Active pair count rounded up to a power of two: the decode grid
+        walks O(sequence) slots, not O(capacity), while the pow2 bucketing
+        bounds retraces to log2(capacity) shapes as the sequence grows."""
+        n = max(1, self.n_active_pairs)
+        return min(1 << (n - 1).bit_length(), self.n_pairs)
+
+    def _kernel_cache(self, n: int) -> dict:
+        st = self.state
+        return {"slots": st["slots"][:, :n],
+                "slots_overflow": st["slots_overflow"][:, :n],
+                "strips": st["strips"][:, :n],
+                "packed_mask": st["packed_mask"][:, :n],
+                "markers": st["markers"][:n]}
+
+    def account_step(self) -> dict:
+        """One decode step's bandwidth accounting + LLP predictor update.
+
+        Charges the CRAM byte model (incl. the mispredict re-probe against
+        the pair-indexed predictor), tallies predictor hits/misses on live
+        pairs, then lets the predictor observe the actual layout.
+        """
+        self.repack()
+        return self._account()
+
+    def _account(self) -> dict:
+        st = self.state
+        n = self._active_bucket()
+        valid = self.valid_per_page()[:, : 2 * n]
+        bw = kops.hbm_bytes_moved(self._kernel_cache(n), valid,
+                                  predictor=st["predictor"][:, :n])
+        live = valid.reshape(self.batch, n, 2).sum(-1) > 0
+        mis = (np.asarray(st["predictor"][:, :n])
+               != np.asarray(st["packed_mask"][:, :n]))
+        self.stats.predictor_misses += int((mis & live).sum())
+        self.stats.predictor_hits += int((~mis & live).sum())
         self.stats.raw_bytes += bw["raw_bytes"]
         self.stats.cram_bytes += bw["cram_bytes"]
+        # copy, not alias: packed_mask's buffer is donated at the next
+        # repack scatter and the predictor must survive it
+        st["predictor"] = jnp.copy(st["packed_mask"])
+        return bw
+
+    def attend(self, q, *, account: bool = True):
+        """q: (B, Hq, d) one query row per sequence -> (B, Hq, d) float32,
+        with per-step bandwidth accounting (`account=False` for parity
+        probes that must not charge an extra step)."""
+        self.repack()
+        q = jnp.asarray(q)
+        if q.ndim == 2:
+            q = q[None]
+        n = self._active_bucket()
+        out = kops.decode_attention_batched(
+            q, self._kernel_cache(n), self.valid_per_page()[:, : 2 * n],
+            interpret=self.interpret)
+        if account:
+            self._account()   # bytes for the layout the kernel walked
         return out
 
     def attend_ref(self, q):
-        if self._dirty:
-            self.repack()
-        valid = jnp.asarray(self.valid_per_page())
-        return kops.decode_attention_ref(jnp.asarray(q), self._cache, valid)
+        """Oracle (pure jnp) attention over the same physical state."""
+        self.repack()
+        q = jnp.asarray(q)
+        if q.ndim == 2:
+            q = q[None]
+        n = self._active_bucket()
+        return kops.decode_attention_ref_batched(
+            q, self._kernel_cache(n), self.valid_per_page()[:, : 2 * n])
 
     def saving(self) -> float:
         return 1.0 - self.stats.cram_bytes / max(self.stats.raw_bytes, 1)
