@@ -1,0 +1,198 @@
+"""Per-codec x per-layout compression sweep over the registry.
+
+Every registered line codec (raw / bdi / fpc / hybrid) is sized over the 27
+workloads' synthetic line distributions (pair/quad compressibility tied to
+each workload's Table II p2/p4, via the same traces._page_levels draw the
+trace simulator uses) and folded through the GROUP4 layout's packing states
+to get an effective lines-per-slot ratio; every registered page codec
+(int8-delta / int4-delta) is measured over synthetic KV decode streams at
+several compressibility scales via the KV_PAIR / KV_QUAD layouts; and the
+line codecs are additionally rated on checkpoint/gradient tensor bytes
+(the kernel_bench/fig4 tensor classes).
+
+One registry, one sweep: adding a codec or layout to
+repro.compression makes it appear in this table with no benchmark code.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.compression import codecs, layouts
+from repro.compression.framing import LINE_BYTES, PAYLOAD_BUDGET
+from repro.core.traces import WORKLOADS, _page_levels
+from repro.kv.traffic import synthetic_kv_stream
+
+LINES_PER_PAGE = 64
+
+
+def _workload_image(spec, n_pages: int = 48, seed: int = 0) -> np.ndarray:
+    """(n_pages*64, 64) uint8 image with the workload's compressibility.
+
+    Page levels follow traces._page_levels (2 = quad-able, 1 = pair-able,
+    0 = incompressible); line contents are drawn per level so the hybrid
+    codec reproduces the level's packability, with per-line jitter.
+    """
+    rng = np.random.default_rng(seed ^ 0x51EE7)
+    levels = _page_levels(n_pages, spec.p2, spec.p4, seed)
+    n_lines = n_pages * LINES_PER_PAGE
+    lines = rng.integers(0, 256, (n_lines, LINE_BYTES)).astype(np.uint8)
+    lv = np.repeat(levels, LINES_PER_PAGE)
+    # level 1: pairs fit in the payload budget — base+delta int32 streams
+    m1 = lv == 1
+    if m1.any():
+        base = rng.integers(0, 2**24, (int(m1.sum()), 1))
+        vals = (base + rng.integers(-100, 100, (int(m1.sum()), 16)))
+        lines[m1] = vals.astype("<i4").view(np.uint8).reshape(-1, LINE_BYTES)
+    # level 2: quads fit — near-zero small-int lines
+    m2 = lv == 2
+    if m2.any():
+        vals = rng.integers(-4, 4, (int(m2.sum()), 16))
+        lines[m2] = vals.astype("<i4").view(np.uint8).reshape(-1, LINE_BYTES)
+    return lines
+
+
+def _group4_stats(sizes: np.ndarray) -> dict:
+    """Fold per-line sizes through the GROUP4 packing states."""
+    n = sizes.shape[0] - sizes.shape[0] % 4
+    g = sizes[:n].astype(np.int64).reshape(-1, 4)
+    ab = g[:, 0] + g[:, 1] <= PAYLOAD_BUDGET
+    cd = g[:, 2] + g[:, 3] <= PAYLOAD_BUDGET
+    quad = g.sum(1) <= PAYLOAD_BUDGET
+    # slots a group occupies per state: U=4, AB|CD=3, AB+CD=2, QUAD=1
+    slots = np.where(quad, 1, 4 - ab.astype(int) - cd.astype(int))
+    return {
+        "pair_ab_rate": float(ab.mean()),
+        "quad_rate": float(quad.mean()),
+        "lines_per_slot": float(4.0 / slots.mean()),
+    }
+
+
+def line_codec_table(n_pages: int = 48, workloads=None) -> dict:
+    """{workload: {codec: {mean_size, ratio, group4 stats}}} + throughput."""
+    specs = [w for w in WORKLOADS
+             if workloads is None or w.name in workloads]
+    names = codecs.codec_names("line64")
+    table: dict = {}
+    thr: dict = {n: [0.0, 0] for n in names}
+    for spec in specs:
+        img = _workload_image(spec, n_pages)
+        row = {}
+        for cname in names:
+            codec = codecs.get_codec(cname)
+            t0 = time.time()
+            sizes = np.asarray(codec.sizes(img))
+            dt = time.time() - t0
+            thr[cname][0] += dt
+            thr[cname][1] += img.shape[0]
+            row[cname] = {
+                "mean_size": float(sizes.mean()),
+                "ratio": float(LINE_BYTES / sizes.mean()),
+                "group4": _group4_stats(sizes),
+            }
+        table[spec.name] = row
+    throughput = {
+        n: (cnt / max(dt, 1e-9)) / 1e6 for n, (dt, cnt) in thr.items()}
+    return {"per_workload": table, "size_mlines_per_s": throughput}
+
+
+def page_codec_table(seed: int = 0) -> dict:
+    """Pack rates of the page codecs over KV streams x compressibility."""
+    rng = np.random.default_rng(seed)
+    streams = {
+        "kv_tight": dict(compressible=True, scale=2e-4),
+        "kv_loose": dict(compressible=True, scale=2e-3),
+        "kv_random": dict(compressible=False),
+    }
+    page, n_kv, hd, n_tokens = 8, 2, 16, 64 * 8
+    out: dict = {}
+    for sname, kw in streams.items():
+        k, v = synthetic_kv_stream(rng, 1, n_tokens, n_kv, hd, **kw)
+        kv = np.concatenate([k, v], -1).astype("<f4")
+        pages = np.ascontiguousarray(
+            (kv.view("<u4") >> 16).astype("<u2").view("<i2")[0]
+            .reshape(-1, page, n_kv, 2 * hd))
+        row = {}
+        for cname in codecs.codec_names("page"):
+            codec = codecs.get_codec(cname)
+            lanes = codec.group_lanes
+            n_groups = pages.shape[0] // lanes
+            fits = []
+            for gi in range(n_groups):
+                grp = pages[gi * lanes:(gi + 1) * lanes]
+                ok, _, _ = codec.pack_pages(*grp, xp=np)
+                fits.append(bool(ok))
+            fit_rate = float(np.mean(fits)) if fits else 0.0
+            layout = layouts.get_layout(
+                "kv-pair" if lanes == 2 else "kv-quad")
+            # slots per group: 1 when packed, `lanes` when raw
+            slots = fit_rate * 1 + (1 - fit_rate) * lanes
+            row[cname] = {
+                "fit_rate": fit_rate,
+                "layout": layout.name,
+                "pages_per_slot": float(lanes / slots),
+            }
+        out[sname] = row
+    return out
+
+
+def tensor_table(seed: int = 0) -> dict:
+    """Line-codec ratios over checkpoint/gradient tensor bytes."""
+    rng = np.random.default_rng(seed)
+    n_bytes = 2048 * LINE_BYTES
+    w32 = (rng.standard_normal(n_bytes // 4) * 0.02).astype("<f4")
+    grads = (rng.standard_normal(n_bytes // 4) * 1e-3).astype("<f4")
+    moments = (rng.standard_normal(n_bytes // 4) * 1e-8).astype("<f4")
+    moments[rng.random(moments.shape) < 0.6] = 0.0
+    bf16 = lambda a: np.ascontiguousarray(
+        (a.view("<u4") >> 16).astype("<u2")).view(np.uint8)
+    tensors = {
+        "weights_fp32": w32.view(np.uint8),
+        "weights_bf16": bf16(w32),
+        "grads_bf16": bf16(grads),
+        "adam_moments_fp32": moments.view(np.uint8),
+    }
+    out: dict = {}
+    for tname, raw in tensors.items():
+        lines = raw[: len(raw) - len(raw) % LINE_BYTES].reshape(
+            -1, LINE_BYTES)
+        out[tname] = {
+            cname: float(
+                LINE_BYTES / np.asarray(
+                    codecs.get_codec(cname).sizes(lines)).mean())
+            for cname in codecs.codec_names("line64")
+        }
+    return out
+
+
+def sweep(n_pages: int = 48, workloads=None) -> dict:
+    t0 = time.time()
+    report = {
+        "line64": line_codec_table(n_pages, workloads),
+        "kv_pages": page_codec_table(),
+        "tensors": tensor_table(),
+        "wall_s": None,
+    }
+    report["wall_s"] = round(time.time() - t0, 2)
+    return report
+
+
+def run() -> list[tuple]:
+    """Legacy CSV rows: geomean ratio per codec over the workload images."""
+    rep = sweep(n_pages=16)
+    rows = []
+    per_wl = rep["line64"]["per_workload"]
+    for cname in codecs.codec_names("line64"):
+        ratios = [per_wl[w][cname]["ratio"] for w in per_wl]
+        geo = float(np.exp(np.mean(np.log(ratios))))
+        thr = rep["line64"]["size_mlines_per_s"][cname]
+        rows.append((f"codec_sweep/{cname}", 0.0,
+                     f"geomean_ratio={geo:.3f} thr={thr:.2f}Ml/s"))
+    for sname, row in rep["kv_pages"].items():
+        for cname, d in row.items():
+            rows.append((f"codec_sweep/{sname}/{cname}", 0.0,
+                         f"fit={d['fit_rate']:.2f} "
+                         f"pages_per_slot={d['pages_per_slot']:.2f}"))
+    return rows

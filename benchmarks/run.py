@@ -3,9 +3,12 @@
 Sweep mode (the fast path — ONE batched jitted dispatch per section):
 
     python benchmarks/run.py --sweep all            # memsim + compress + serve
+                                                    #   + codecs
     python benchmarks/run.py --sweep memsim         # Fig. 12/15/16/18, Table V
     python benchmarks/run.py --sweep compress       # Pallas image scan (Fig. 4)
     python benchmarks/run.py --sweep serve          # CRAM-KV decode curves
+    python benchmarks/run.py --sweep codecs         # codec x layout registry
+                                                    #   table
 
 Sweep flags:
     --events N        trace length per workload   (default $REPRO_BENCH_EVENTS
@@ -51,6 +54,14 @@ The consolidated JSON report written by --sweep has this schema:
                       "full_rebuild_work_ratio"},   # incremental-repack win
         "static_compressible_saving",
         "parity":    {"incremental_equals_rebuild", "kernel_vs_oracle_err"}
+      },
+      "codecs": {                       # present for --sweep codecs/all
+        "line64":   {"per_workload": {workload: {codec: {mean_size, ratio,
+                      group4 packing stats}}},
+                     "size_mlines_per_s": {codec: throughput}},
+        "kv_pages": {stream: {page_codec: {fit_rate, layout,
+                      pages_per_slot}}},
+        "tensors":  {tensor: {codec: ratio}}       # ckpt/gradient bytes
       }
     }
 
@@ -74,6 +85,7 @@ for _p in (str(_ROOT), str(_ROOT / "src")):
         sys.path.insert(0, _p)
 
 MODULES = [
+    "codec_sweep",
     "fig4_compressibility",
     "fig12_speedup",
     "fig14_llp",
@@ -146,6 +158,15 @@ def _sweep_serve(args) -> dict:
     return sweep(batches=batches, decode_steps=args.serve_steps)
 
 
+def _sweep_codecs(args) -> dict:
+    """Per-codec x per-layout registry table (workload line distributions,
+    KV page streams, checkpoint/gradient tensors)."""
+    from benchmarks.codec_sweep import sweep
+
+    workloads = args.workloads.split(",") if args.workloads else None
+    return sweep(workloads=workloads)
+
+
 def run_sweep(args) -> None:
     # --events/--workloads/--schemes only shape the memsim section; the
     # compress scan always covers the fixed Fig. 4 corpus, so record the
@@ -177,6 +198,15 @@ def run_sweep(args) -> None:
         o = report["compress"]["overall"]
         print(f"compress scan: {report['compress']['lines_scanned']} lines, "
               f"p64={o['pair_fits_64B']:.3f} p60={o['pair_fits_60B']:.3f}")
+    if args.sweep in ("codecs", "all"):
+        report["codecs"] = _sweep_codecs(args)
+        thr = report["codecs"]["line64"]["size_mlines_per_s"]
+        kv = report["codecs"]["kv_pages"]
+        print("codec sweep:",
+              " ".join(f"{c}={v:.2f}Ml/s" for c, v in thr.items()))
+        print("kv pack rates:",
+              {s: {c: round(d["fit_rate"], 2) for c, d in row.items()}
+               for s, row in kv.items()})
     if args.sweep in ("serve", "all"):
         report["serve"] = _sweep_serve(args)
         pw = report["serve"]["pack_work"]
@@ -222,7 +252,8 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("modules", nargs="*",
                     help="legacy mode: per-figure modules to run")
-    ap.add_argument("--sweep", choices=("all", "memsim", "compress", "serve"),
+    ap.add_argument("--sweep",
+                    choices=("all", "memsim", "compress", "serve", "codecs"),
                     help="batched sweep mode; emits one JSON report")
     ap.add_argument("--serve-steps", type=int, default=32,
                     help="decode steps per serve-bench curve")

@@ -1,19 +1,20 @@
 """CRAM checkpoint codec: the paper's line compression applied to restart
 bandwidth.
 
-Tensors are carved into 64-byte lines; pairs/quads that BDI-compress into
-one line (with the 4-byte marker discipline, exactly core/compress rules)
-are packed.  The on-disk format is self-describing the same way the memory
-format is: a packed block starts with a marker byte-pair, so decompression
-needs no side table — only the line count.  An optional zstd outer layer
-stacks generic entropy coding on top (off by default; CRAM is the claim
-under test).
+Tensors are carved into 64-byte lines and streamed through a *registered*
+line codec (repro.compression.codecs): each line is stored in the codec's
+self-describing format (BDI's 1-byte mode header, the hybrid codec's
+algorithm header, FPC's self-terminating stream), so decompression needs no
+side table — only the line count, exactly like the memory image.  An
+optional zstd outer layer stacks generic entropy coding on top (off by
+default; CRAM is the claim under test).
 
-This uses the vectorized BDI batch paths (fast numpy), grouping lines by
-mode — FPC's bit-granular packing is exact but per-line Python, too slow
-for multi-GB checkpoints; measured compression ratios per dtype land in
-EXPERIMENTS.md (momentum/zero-heavy tensors compress well, live bf16
-weights poorly — the Dynamic-CRAM story again).
+The default "bdi" codec keeps the fully vectorized batch path (group lines
+by mode, scatter payloads by offset) — FPC/hybrid bit-granular packing is
+exact but per-line Python, usable for small tensors and measured by the
+codec sweep; measured compression ratios per dtype land in EXPERIMENTS.md
+(momentum/zero-heavy tensors compress well, live bf16 weights poorly — the
+Dynamic-CRAM story again).
 """
 
 from __future__ import annotations
@@ -23,10 +24,17 @@ import struct
 
 import numpy as np
 
-from ..core import bdi
+from ..compression import bdi
+from ..compression.codecs import codec_names, get_codec
+from ..compression.framing import LINE_BYTES as LINE
 
-LINE = 64
-_MAGIC = b"CRAMCKPT"
+# v2 streams carry a codec-id byte in the header; v1 (pre-registry) blobs
+# had no codec byte and are always BDI — still readable below.
+_MAGIC = b"CRAMCKP2"
+_MAGIC_V1 = b"CRAMCKPT"
+# stream codec ids (stable on-disk values)
+_CODEC_IDS = {"bdi": 0, "hybrid": 1, "fpc": 2, "raw": 3}
+_CODEC_BY_ID = {v: k for k, v in _CODEC_IDS.items()}
 
 
 def _pad_to_lines(raw: bytes) -> np.ndarray:
@@ -36,16 +44,9 @@ def _pad_to_lines(raw: bytes) -> np.ndarray:
     return buf.reshape(-1, LINE)
 
 
-def cram_compress_bytes(raw: bytes, use_zstd: bool = False) -> bytes:
-    """Compress a byte string through the CRAM line codec."""
-    lines = _pad_to_lines(raw)
-    n_lines = lines.shape[0]
+def _bdi_pack_stream(lines: np.ndarray) -> bytes:
+    """Vectorized BDI stream: per line, 1 mode byte + payload."""
     sizes, modes = bdi.bdi_sizes(lines)
-    out = io.BytesIO()
-    out.write(_MAGIC)
-    out.write(struct.pack("<QQB", len(raw), n_lines, 1 if use_zstd else 0))
-    # stream: per line, 1 mode byte + payload (mode M_RAW -> 64B verbatim);
-    # fully vectorized: group lines by mode, scatter payloads by offset
     modes_np = np.asarray(modes)
     size_table = np.asarray([bdi.PAYLOAD_BYTES[m] for m in range(9)],
                             np.int64)
@@ -59,24 +60,10 @@ def cram_compress_bytes(raw: bytes, use_zstd: bool = False) -> bytes:
         if payload.shape[1]:
             pos = offsets[idxs][:, None] + 1 + np.arange(payload.shape[1])
             buf[pos] = payload
-    body_b = buf.tobytes()
-    if use_zstd:
-        import zstandard as zstd
-
-        body_b = zstd.ZstdCompressor(level=3).compress(body_b)
-    out.write(body_b)
-    return out.getvalue()
+    return buf.tobytes()
 
 
-def cram_decompress_bytes(blob: bytes) -> bytes:
-    assert blob[:8] == _MAGIC, "not a CRAM checkpoint stream"
-    raw_len, n_lines, zflag = struct.unpack_from("<QQB", blob, 8)
-    body = blob[8 + 17:]
-    if zflag:
-        import zstandard as zstd
-
-        body = zstd.ZstdDecompressor().decompress(body)
-    view = np.frombuffer(body, np.uint8)
+def _bdi_unpack_stream(view: np.ndarray, n_lines: int) -> np.ndarray:
     # pass 1: walk mode bytes to recover offsets (sequential by design —
     # the stream is self-describing like the memory image)
     size_table = [bdi.PAYLOAD_BYTES[m] for m in range(9)]
@@ -99,8 +86,59 @@ def cram_decompress_bytes(blob: bytes) -> bytes:
         else:
             payload = np.zeros((len(idxs), 0), np.uint8)
         out[idxs] = bdi.bdi_unpack_batch(payload, int(m))
+    return out
+
+
+def cram_compress_bytes(raw: bytes, use_zstd: bool = False,
+                        codec: str = "bdi") -> bytes:
+    """Compress a byte string through a registered CRAM line codec."""
+    if codec not in _CODEC_IDS:
+        raise ValueError(
+            f"unknown checkpoint codec {codec!r}; valid: {sorted(_CODEC_IDS)}"
+            f" (registered line codecs: {sorted(codec_names('line64'))})")
+    lines = _pad_to_lines(raw)
+    n_lines = lines.shape[0]
+    out = io.BytesIO()
+    out.write(_MAGIC)
+    out.write(struct.pack("<QQBB", len(raw), n_lines,
+                          1 if use_zstd else 0, _CODEC_IDS[codec]))
+    if codec == "bdi":
+        body_b = _bdi_pack_stream(lines)
+    else:
+        pack_line = get_codec(codec).pack_line
+        body_b = b"".join(pack_line(line) for line in lines)
+    if use_zstd:
+        import zstandard as zstd
+
+        body_b = zstd.ZstdCompressor(level=3).compress(body_b)
+    out.write(body_b)
+    return out.getvalue()
+
+
+def cram_decompress_bytes(blob: bytes) -> bytes:
+    if blob[:8] == _MAGIC_V1:           # legacy header: no codec byte, BDI
+        raw_len, n_lines, zflag = struct.unpack_from("<QQB", blob, 8)
+        codec_id, body = _CODEC_IDS["bdi"], blob[8 + 17:]
+    else:
+        assert blob[:8] == _MAGIC, "not a CRAM checkpoint stream"
+        raw_len, n_lines, zflag, codec_id = struct.unpack_from(
+            "<QQBB", blob, 8)
+        body = blob[8 + 18:]
+    if zflag:
+        import zstandard as zstd
+
+        body = zstd.ZstdDecompressor().decompress(body)
+    codec = _CODEC_BY_ID[codec_id]
+    if codec == "bdi":
+        out = _bdi_unpack_stream(np.frombuffer(body, np.uint8), n_lines)
+    else:
+        unpack_line = get_codec(codec).unpack_line
+        out = np.empty((n_lines, LINE), np.uint8)
+        ofs = 0
+        for i in range(n_lines):
+            out[i], ofs = unpack_line(body, ofs)
     return out.reshape(-1)[:raw_len].tobytes()
 
 
-def compression_ratio(raw: bytes) -> float:
-    return len(raw) / max(len(cram_compress_bytes(raw)), 1)
+def compression_ratio(raw: bytes, codec: str = "bdi") -> float:
+    return len(raw) / max(len(cram_compress_bytes(raw, codec=codec)), 1)

@@ -1,0 +1,55 @@
+"""repro.compression — the single source of truth for the paper's stack.
+
+One subsystem owns the pieces every consumer previously re-implemented:
+
+  * framing   — THE marker-framing constants (slot budget, marker bytes /
+                lanes, payload budget, header byte) + device marker families
+  * codecs    — `Codec` registry: raw / bdi / fpc / hybrid line codecs and
+                int8-delta / int4-delta page codecs, each carrying its
+                bit-true numpy pack/unpack, vectorized xp-generic size
+                function, and (lazily resolved) Pallas backend
+  * layouts   — `Layout` registry: the Fig. 6 group4 mapping and the KV
+                pair/quad slot formats as instances of one marker-framed
+                protocol (candidate-slot tables included)
+  * gate      — THE saturating-counter Dynamic-CRAM gate (§VI)
+  * predictor — THE line-location predictor (§V-B), parameterized by a
+                layout's candidate-slot table
+  * marker    — host-side keyed markers + implicit-metadata classification
+  * fpc/bdi/hybrid/pagepack/bits — codec implementations behind the registry
+
+Consumers: core.engine / core.schemes (scheme rows name a codec+layout),
+core.cram (exact functional model), kernels (device backends), kv.cache,
+checkpoint.codec, optim.grad_compress, benchmarks.  The old per-module
+homes under repro.core re-export from here for compatibility.
+"""
+
+from . import bdi, bits, fpc, framing, gate, hybrid, layouts, marker
+from . import pagepack, predictor
+from .codecs import Codec, codec_names, get_codec, register_codec
+from .framing import (
+    HEADER_BYTES,
+    LINE_BYTES,
+    MARKER_BYTES,
+    MARKER_LANES,
+    PAYLOAD_BUDGET,
+    SLOT_BUDGET,
+)
+from .layouts import (
+    GROUP4,
+    KV_PAIR,
+    KV_QUAD,
+    Layout,
+    get_layout,
+    layout_names,
+    register_layout,
+)
+
+__all__ = [
+    "bdi", "bits", "fpc", "framing", "gate", "hybrid", "layouts", "marker",
+    "pagepack", "predictor",
+    "Codec", "codec_names", "get_codec", "register_codec",
+    "Layout", "get_layout", "layout_names", "register_layout",
+    "GROUP4", "KV_PAIR", "KV_QUAD",
+    "LINE_BYTES", "SLOT_BUDGET", "MARKER_BYTES", "MARKER_LANES",
+    "PAYLOAD_BUDGET", "HEADER_BYTES",
+]

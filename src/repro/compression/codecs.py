@@ -1,0 +1,199 @@
+"""Codec registry: every compression algorithm in the repo, as data.
+
+A `Codec` record names, per algorithm, its bit-true numpy pack/unpack, its
+vectorized xp-generic size function, and (optionally) its Pallas device
+backend — so `kernels/compress_scan.py` and `kernels/bdi_pack.py` are
+registered backends of the same codecs the simulator, KV cache, checkpoint
+codec, and benchmarks consume, not parallel truths.
+
+Two codec units exist:
+  * "line64" — operates on 64-byte memory lines (raw / bdi / fpc / hybrid);
+    `size_fn(lines_bytes, xp)` returns per-line compressed sizes in bytes
+    (including the codec's self-describing header, where it has one), and
+    `pack_line`/`unpack_line` are the exact host-side byte paths.
+  * "page"  — operates on groups of KV pages ((page, Hkv, D2) int16 tiles);
+    `pack_pages`/`unpack_pages` are the xp-generic bit-true group codecs
+    (compression.pagepack) and the Pallas backend packs a group per kernel
+    launch (kernels/bdi_pack).
+
+Pallas backends are stored as dotted paths and resolved lazily, so importing
+the registry never pulls in jax.experimental.pallas.
+"""
+
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass
+from typing import Callable
+
+import numpy as np
+
+from . import bdi as _bdi
+from . import fpc as _fpc
+from . import hybrid as _hybrid
+from . import pagepack as _pagepack
+from .framing import LINE_BYTES
+
+
+def _resolve(dotted: str) -> Callable:
+    mod, _, attr = dotted.rpartition(":")
+    return getattr(importlib.import_module(mod), attr)
+
+
+@dataclass(frozen=True)
+class Codec:
+    """One registered compression algorithm (see module docstring)."""
+
+    name: str
+    unit: str                                  # "line64" | "page"
+    description: str = ""
+    # line64 contract
+    size_fn: Callable | None = None            # (lines_bytes, xp) -> sizes
+    pack_line: Callable | None = None          # (line64,) -> bytes
+    unpack_line: Callable | None = None        # (data, ofs) -> (line, next)
+    # page contract
+    group_lanes: int = 0                       # pages packed per slot
+    pack_pages: Callable | None = None         # (*pages, xp) -> (ok, packed, base)
+    unpack_pages: Callable | None = None       # (packed, base, xp) -> pages
+    # lazy Pallas device backends (dotted "module:attr" paths): page codecs
+    # register a (pack, unpack) kernel pair; line codecs register the
+    # one-pass size/marker scan kernel plus the output column carrying
+    # this codec's sizes.
+    pallas_pack: str | None = None
+    pallas_unpack: str | None = None
+    pallas_scan: str | None = None
+    scan_field: str | None = None              # compress_scan output column
+
+    def sizes(self, lines_bytes, xp=np):
+        if self.size_fn is None:
+            raise ValueError(f"codec {self.name!r} has no size function")
+        return self.size_fn(lines_bytes, xp=xp)
+
+    def pallas(self) -> tuple[Callable, Callable] | None:
+        """Resolve the (pack, unpack) Pallas kernel pair, if registered."""
+        if self.pallas_pack is None:
+            return None
+        return _resolve(self.pallas_pack), _resolve(self.pallas_unpack)
+
+    def scan(self) -> Callable | None:
+        """Resolve the Pallas size-scan backend, if registered."""
+        return None if self.pallas_scan is None else _resolve(self.pallas_scan)
+
+    def has_pallas(self) -> bool:
+        return self.pallas_pack is not None or self.pallas_scan is not None
+
+
+_REGISTRY: dict[str, Codec] = {}
+
+
+def register_codec(codec: Codec, *, overwrite: bool = False) -> Codec:
+    if codec.name in _REGISTRY and not overwrite:
+        raise ValueError(f"codec {codec.name!r} is already registered")
+    _REGISTRY[codec.name] = codec
+    return codec
+
+
+def get_codec(name: str) -> Codec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown codec {name!r}; valid: {sorted(_REGISTRY)}") from None
+
+
+def codec_names(unit: str | None = None) -> tuple[str, ...]:
+    return tuple(n for n, c in _REGISTRY.items()
+                 if unit is None or c.unit == unit)
+
+
+# ------------------------------------------------------------- line64 codecs
+
+def _raw_sizes(lines_bytes, xp=np):
+    return xp.full(lines_bytes.shape[:-1], LINE_BYTES, dtype=xp.int32)
+
+
+def _raw_pack(line) -> bytes:
+    return np.asarray(line, dtype=np.uint8).tobytes()
+
+
+def _raw_unpack(data: bytes, offset: int = 0):
+    out = np.frombuffer(data[offset:offset + LINE_BYTES], dtype=np.uint8)
+    return out.copy(), offset + LINE_BYTES
+
+
+def _bdi_sizes(lines_bytes, xp=np):
+    sizes, _ = _bdi.bdi_sizes(lines_bytes, xp=xp)
+    return sizes + 1          # 1-byte self-describing mode header
+
+
+def _bdi_pack(line) -> bytes:
+    arr = np.asarray(line, dtype=np.uint8).reshape(1, LINE_BYTES)
+    _, modes = _bdi.bdi_sizes(arr)
+    mode = int(modes[0])
+    return bytes([mode]) + _bdi.bdi_pack_batch(arr, mode)[0].tobytes()
+
+
+def _bdi_unpack(data: bytes, offset: int = 0):
+    mode = data[offset]
+    n = _bdi.PAYLOAD_BYTES[mode]
+    payload = np.frombuffer(data[offset + 1: offset + 1 + n], dtype=np.uint8)
+    return _bdi.bdi_unpack_batch(payload.reshape(1, n), mode)[0], offset + 1 + n
+
+
+def _fpc_unpack(data: bytes, offset: int = 0):
+    line = _fpc.fpc_unpack(data[offset: offset + _fpc.MAX_LINE_BYTES])
+    nbytes = int(_fpc.fpc_size_bytes(line.reshape(1, LINE_BYTES))[0])
+    return line, offset + nbytes
+
+
+register_codec(Codec(
+    name="raw", unit="line64",
+    description="identity (uncompressed 64B line)",
+    size_fn=_raw_sizes, pack_line=_raw_pack, unpack_line=_raw_unpack,
+))
+
+register_codec(Codec(
+    name="bdi", unit="line64",
+    description="Base-Delta-Immediate [PACT 2012]; 1-byte mode header",
+    size_fn=_bdi_sizes, pack_line=_bdi_pack, unpack_line=_bdi_unpack,
+    pallas_scan="repro.kernels.compress_scan:compress_scan",
+    scan_field="bdi",
+))
+
+register_codec(Codec(
+    name="fpc", unit="line64",
+    description="Frequent Pattern Compression [ISCA 2004]; self-terminating",
+    size_fn=lambda lines, xp=np: _fpc.fpc_size_bytes(lines, xp=xp),
+    pack_line=_fpc.fpc_pack, unpack_line=_fpc_unpack,
+    pallas_scan="repro.kernels.compress_scan:compress_scan",
+    scan_field="fpc",
+))
+
+register_codec(Codec(
+    name="hybrid", unit="line64",
+    description="best-of FPC+BDI with a 1-byte algorithm header (§III-A) — "
+                "the paper's line codec",
+    size_fn=lambda lines, xp=np: _hybrid.compressed_sizes(lines, xp=xp),
+    pack_line=_hybrid.compress_line, unpack_line=_hybrid.decompress_line,
+    pallas_scan="repro.kernels.compress_scan:compress_scan",
+    scan_field="sizes",
+))
+
+
+# -------------------------------------------------------------- page codecs
+
+register_codec(Codec(
+    name="int8-delta", unit="page", group_lanes=2,
+    description="KV 2:1 page pairs: int8 deltas vs the pair base row",
+    pack_pages=_pagepack.pack_pair, unpack_pages=_pagepack.unpack_pair,
+    pallas_pack="repro.kernels.bdi_pack:pack_pair",
+    pallas_unpack="repro.kernels.bdi_pack:unpack_pair",
+))
+
+register_codec(Codec(
+    name="int4-delta", unit="page", group_lanes=4,
+    description="KV 4:1 page quads: int4 deltas vs the quad base row",
+    pack_pages=_pagepack.pack_quad, unpack_pages=_pagepack.unpack_quad,
+    pallas_pack="repro.kernels.bdi_pack:pack_quad",
+    pallas_unpack="repro.kernels.bdi_pack:unpack_quad",
+))

@@ -1,0 +1,57 @@
+"""Marker framing: THE constants of the in-band-metadata discipline.
+
+Every consumer of the paper's implicit-metadata format — the bit-true
+functional model, the trace engine, the Pallas scan/pack kernels, the
+serving KV cache, the checkpoint codec — frames compressed data the same
+way: a 64-byte slot whose last 4 bytes are a keyed per-slot marker, leaving
+60 bytes of payload; compressed sub-lines carry a 1-byte algorithm header.
+These numbers are defined once, here.
+
+Two marker families exist (same protocol, different PRF strength):
+  * the host family (marker.MarkerSpec, keyed blake2b) used by the exact
+    functional memory model;
+  * the device family (slot_markers below + compress_scan's in-kernel
+    multiply-add variant), an affine keyed hash that wraps identically in
+    int32 (TPU) and uint32 (host), used by every kernel path.
+A `domain` salt separates marker classes (2:1 pair vs 4:1 quad) so a slot's
+pair marker can never alias its quad marker.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+LINE_BYTES = 64                 # the paper's cache-line / DMA granule
+SLOT_BUDGET = 64                # one physical slot = one line
+MARKER_BYTES = 4                # in-band marker at the slot tail
+MARKER_LANES = 2                # the same 4 bytes as 2 int16 lanes (KV strips)
+PAYLOAD_BUDGET = SLOT_BUDGET - MARKER_BYTES   # 60B usable when packed
+HEADER_BYTES = 1                # per-sub-line algorithm header (counted)
+
+# marker-class domains for the device family (salt the key, not the index,
+# so domain 0 stays bit-identical to the historical pair markers)
+DOMAIN_PAIR = 0
+DOMAIN_QUAD = 1
+_DOMAIN_SALT = 0x9E3779B9
+
+
+def slot_markers(n_slots: int, key: int = 0x5EED,
+                 domain: int = DOMAIN_PAIR) -> np.ndarray:
+    """Per-slot 32-bit device markers (keyed affine hash; regenerable)."""
+    idx = np.arange(n_slots, dtype=np.uint64)
+    k = np.uint64((key + domain * _DOMAIN_SALT) & 0xFFFFFFFFFFFFFFFF)
+    h = (idx * np.uint64(0x9E3779B97F4A7C15) + k) >> np.uint64(13)
+    return (h & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+
+
+def marker_to_lanes(m: np.ndarray) -> np.ndarray:
+    """uint32 marker -> two int16 lanes (little-endian halves)."""
+    lo = (m & 0xFFFF).astype(np.uint16).view(np.int16)
+    hi = ((m >> 16) & 0xFFFF).astype(np.uint16).view(np.int16)
+    return np.stack([lo, hi], axis=-1)
+
+
+def lanes_to_marker_i32(tail, xp):
+    """Two int16 tail lanes -> the int32 marker bit pattern (xp-generic)."""
+    t = tail.astype(xp.int32)
+    return (t[..., 0] & 0xFFFF) | ((t[..., 1] & 0xFFFF) << 16)

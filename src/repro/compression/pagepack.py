@@ -1,0 +1,82 @@
+"""KV page-packing codecs: int8-delta pairs (2:1) and int4-delta quads (4:1).
+
+The serving-side line codec (DESIGN.md §3): a KV *page* is a (page, Hkv, D2)
+int16 tile of bf16 bit patterns; a group of pages packs into ONE physical
+slot when every element is within a signed delta range of a shared base row
+(page A's token-0 row), mirroring BDI's base+delta idea at page granularity.
+
+  * pair (int8 deltas):  element = (deltaB & 0xFF) << 8 | (deltaA & 0xFF)
+  * quad (int4 deltas):  element = (dD & 0xF) << 12 | (dC & 0xF) << 8
+                                 | (dB & 0xF) << 4  | (dA & 0xF)
+
+These are the bit-true, xp-generic (numpy or jax.numpy) reference
+implementations; `kernels/bdi_pack.py` provides the Pallas device backends
+and `kernels/ref.py` the jnp oracles — all three are allclose-pinned by the
+cross-backend round-trip tests.  Two's-complement wrapping makes the
+encode/decode pair exact whenever the fit check passes.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+PAIR_DELTA_BITS = 8
+QUAD_DELTA_BITS = 4
+
+
+def _deltas(page, base, xp):
+    return page.astype(xp.int32) - base.astype(xp.int32)[None]
+
+
+def _fits(delta, bits: int):
+    lim = 1 << (bits - 1)
+    return (delta >= -lim) & (delta <= lim - 1)
+
+
+def pack_pair(page_a, page_b, xp=np):
+    """(page,Hkv,D2) int16 x2 -> (ok, packed int16, base (Hkv,D2) int16)."""
+    base = page_a[0]
+    da = _deltas(page_a, base, xp)
+    db = _deltas(page_b, base, xp)
+    ok = xp.all(_fits(da, PAIR_DELTA_BITS) & _fits(db, PAIR_DELTA_BITS))
+    packed = ((db & 0xFF) << 8 | (da & 0xFF)).astype(xp.uint16).view(xp.int16)
+    return ok, packed, base
+
+
+def unpack_pair(packed, base, xp=np):
+    """Inverse of pack_pair -> (page_a, page_b) int16."""
+    v = packed.view(xp.uint16).astype(xp.int32)
+    lo = (v & 0xFF).astype(xp.int8).astype(xp.int32)        # sign-extend
+    hi = ((v >> 8) & 0xFF).astype(xp.int8).astype(xp.int32)
+    a = base.astype(xp.int32)[None] + lo
+    b = base.astype(xp.int32)[None] + hi
+    return a.astype(xp.int16), b.astype(xp.int16)
+
+
+def pack_quad(page_a, page_b, page_c, page_d, xp=np):
+    """Four (page,Hkv,D2) int16 pages -> (ok, packed int16, base int16).
+
+    Each int16 element carries four int4 deltas vs the shared base (page
+    A's token-0 row) — the 4:1 analogue of the pair codec.
+    """
+    base = page_a[0]
+    ds = [_deltas(p, base, xp) for p in (page_a, page_b, page_c, page_d)]
+    ok = xp.all(
+        _fits(ds[0], QUAD_DELTA_BITS) & _fits(ds[1], QUAD_DELTA_BITS)
+        & _fits(ds[2], QUAD_DELTA_BITS) & _fits(ds[3], QUAD_DELTA_BITS))
+    packed = ((ds[3] & 0xF) << 12 | (ds[2] & 0xF) << 8
+              | (ds[1] & 0xF) << 4 | (ds[0] & 0xF))
+    packed = packed.astype(xp.uint16).view(xp.int16)
+    return ok, packed, base
+
+
+def unpack_quad(packed, base, xp=np):
+    """Inverse of pack_quad -> (page_a, page_b, page_c, page_d) int16."""
+    v = packed.view(xp.uint16).astype(xp.int32)
+    b32 = base.astype(xp.int32)[None]
+    out = []
+    for shift in (0, 4, 8, 12):
+        nib = ((v >> shift) & 0xF)
+        nib = (nib ^ 0x8) - 0x8                             # sign-extend int4
+        out.append((b32 + nib).astype(xp.int16))
+    return tuple(out)

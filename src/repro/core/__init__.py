@@ -1,14 +1,17 @@
-"""CRAM core: the paper's contribution as a reusable library.
+"""CRAM core: the trace-simulation layer over repro.compression.
 
-Layers:
-  * codecs: fpc, bdi, compress (hybrid FPC+BDI with in-line headers)
-  * protocol: marker (implicit metadata), mapping (restricted 4-line groups),
-    lit (inversion table), llp (line-location predictor), dynamic (cost/benefit
-    counter), evict_logic (layout transitions)
-  * models: cram (exact functional compressed memory), llc (group LLC),
-    engine (the one trace-sim step/state/stats definition), schemes
-    (declarative scheme registry), memsim (scalar front-end), batchsim
-    (batched scheme × config × workload sweep), traces (workload suite)
+The codec/layout/mechanism stack lives in `repro.compression` (codecs,
+layouts, framing, gate, predictor, marker); this package keeps the
+simulation models consuming it:
+  * cram (exact functional compressed memory), llc (group LLC), lit
+    (inversion table), evict_logic (layout transitions)
+  * engine (the one trace-sim step/state/stats definition), schemes
+    (declarative scheme registry — rows name a codec+layout), memsim
+    (scalar front-end), batchsim (batched scheme × config × workload
+    sweep), traces (workload suite)
+
+The historical codec/mechanism module names (fpc, bdi, compress, marker,
+mapping, llp, dynamic, bits) remain importable as re-export shims.
 """
 
 from . import bdi, compress, dynamic, engine, evict_logic, fpc, lit, llc, llp

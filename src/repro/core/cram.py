@@ -14,26 +14,25 @@ Bandwidth accounting matches the paper's breakdown (Fig. 15):
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 
-from . import compress as cc
-from .dynamic import DynamicController
-from .evict_logic import evict_plan
-from .lit import LIT
-from .llc import GroupEntry, GroupLLC
-from .llp import LLP
-from .mapping import LANE_LEVEL, PAYLOAD_BUDGET, PRED_SLOT, probe_chain
-from .marker import (
+from ..compression import hybrid as cc
+from ..compression.framing import LINE_BYTES, PAYLOAD_BUDGET
+from ..compression.gate import DynamicController
+from ..compression.layouts import LANE_LEVEL, PRED_SLOT, probe_chain
+from ..compression.marker import (
     LineStatus,
     MarkerSpec,
     classify_line,
     invert_line,
     needs_inversion,
 )
-
-LINE_BYTES = 64
+from ..compression.predictor import LLP
+from .evict_logic import evict_plan
+from .lit import LIT
+from .llc import GroupEntry, GroupLLC
 
 
 @dataclass
@@ -241,7 +240,7 @@ class CRAMSystem:
     # ------------------------------------------------------------------ evict
     def _prior_state_from_levels(self, e: GroupEntry) -> int:
         """Reconstruct the group's memory layout from the LLC 2-bit tags."""
-        from .mapping import S_AB, S_AB_CD, S_CD, S_QUAD, fits_to_state
+        from ..compression.layouts import S_QUAD, fits_to_state
 
         lv = [e.levels[l] if e.valid_mask & (1 << l) else -1 for l in range(4)]
         if 2 in lv:

@@ -37,10 +37,15 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from .dynamic import COUNTER_INIT, COUNTER_MAX, ENABLE_THRESHOLD
+from ..compression.gate import COUNTER_INIT, COUNTER_MAX, ENABLE_THRESHOLD
+from ..compression.layouts import GROUP4, LANE_LEVEL, LANES_IN_SLOT, LOC
+from ..compression.predictor import (
+    HASH_MULT,
+    LCT_ENTRIES,
+    LINES_PER_PAGE,
+    probe_count_table,
+)
 from .evict_logic import build_evict_table, evict_table_index
-from .llp import LCT_ENTRIES, LINES_PER_PAGE, _HASH_MULT
-from .mapping import LANE_LEVEL, LANES_IN_SLOT, LOC, PRED_SLOT, probe_chain
 
 # stats vector layout (the one definition; memsim/batchsim re-export)
 (
@@ -118,15 +123,10 @@ class SimConfig:
 
 
 def _probe_count_table() -> np.ndarray:
-    """PROBE[state, lane, predicted_level] -> memory accesses to locate line."""
-    t = np.zeros((5, 4, 3), dtype=np.int32)
-    for st in range(5):
-        for lane in range(4):
-            for lvl in range(3):
-                pred = int(PRED_SLOT[lane][lvl]) if lane else 0
-                chain = probe_chain(lane, pred) if lane else [0]
-                t[st, lane, lvl] = chain.index(int(LOC[st][lane])) + 1
-    return t
+    """PROBE[state, lane, predicted_level] for the GROUP4 layout (the one
+    predictor implementation, parameterized by the layout's candidate-slot
+    table, lives in compression.predictor)."""
+    return probe_count_table(GROUP4)
 
 
 def _set_hash_table(n_sets: int) -> np.ndarray:
@@ -258,7 +258,7 @@ def build_engine(cfg: SimConfig) -> EngineParts:
             st = mem_state[g].astype(jnp.int32)
             pidx = (
                 (addr // LINES_PER_PAGE).astype(jnp.uint32)
-                * np.uint32(_HASH_MULT) % lct_size
+                * np.uint32(HASH_MULT) % lct_size
             ).astype(jnp.int32)
             pred_level = lct[pidx].astype(jnp.int32)
             probes = jnp.where(

@@ -19,9 +19,16 @@ Semantics (§IV-A write operation, §V-A invalidation, §VI dynamic policy):
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
-from .mapping import LOC, S_AB, S_AB_CD, S_CD, S_QUAD, S_U, fits_to_state
+from ..compression.layouts import (
+    LOC,
+    S_AB,
+    S_AB_CD,
+    S_CD,
+    S_QUAD,
+    fits_to_state,
+)
 
 _AB_MASK, _CD_MASK, _ALL = 0b0011, 0b1100, 0b1111
 

@@ -1,202 +1,18 @@
-"""Frequent Pattern Compression (FPC) [Alameldeen & Wood 2004].
+"""Moved: repro.compression.fpc is the implementation (FPC line codec)."""
 
-Per 32-bit word, a 3-bit prefix selects one of 8 patterns; zero words are
-run-length encoded (up to 8 per run).  This is the per-line codec CRAM uses
-(hybridized with BDI in compress.py), matching §III-A of the paper.
-
-Two implementations are provided:
-  * fpc_size_bits(...)  — vectorized size computation, works with numpy OR
-    jax.numpy (pass the module as `xp`), used in simulator/benchmark hot paths.
-  * fpc_pack / fpc_unpack — exact bit-level round-trip (host-side numpy),
-    used by tests and by the checkpoint codec.
-
-Pattern table (prefix: pattern -> payload bits):
-  000 zero run (3-bit run length, 1..8 zeros)    -> 3
-  001 4-bit sign-extended word                   -> 4
-  010 8-bit sign-extended word                   -> 8
-  011 16-bit sign-extended word                  -> 16
-  100 halfword padded with a zero halfword       -> 16 (low half zero)
-  101 two halfwords, each an 8-bit SE halfword   -> 16
-  110 word of 4 repeated bytes                   -> 8
-  111 uncompressed word                          -> 32
-"""
-
-from __future__ import annotations
-
-import numpy as np
-
-from .bits import BitReader, BitWriter, bytes_to_u32, u32_to_bytes
-
-WORDS_PER_LINE = 16
-PREFIX_BITS = 3
-
-P_ZRUN, P_SE4, P_SE8, P_SE16, P_PAD16, P_HALF_SE8, P_REPB, P_RAW = range(8)
-
-_PAYLOAD_BITS = {
-    P_ZRUN: 3,
-    P_SE4: 4,
-    P_SE8: 8,
-    P_SE16: 16,
-    P_PAD16: 16,
-    P_HALF_SE8: 16,
-    P_REPB: 8,
-    P_RAW: 32,
-}
-
-
-def _classify_nonzero(w_i32, xp):
-    """Pattern id for each (nonzero) word; vectorized. w_i32: int32 array."""
-    w = w_i32.astype(xp.int64)
-    se4 = (w >= -8) & (w < 8)
-    se8 = (w >= -128) & (w < 128)
-    se16 = (w >= -32768) & (w < 32768)
-    u = w_i32.astype(xp.int64) & 0xFFFFFFFF
-    pad16 = (u & 0xFFFF) == 0
-    lo = ((u & 0xFFFF) ^ 0x8000) - 0x8000  # sign-extend low half
-    hi = (((u >> 16) & 0xFFFF) ^ 0x8000) - 0x8000
-    half_se8 = (lo >= -128) & (lo < 128) & (hi >= -128) & (hi < 128)
-    b0 = u & 0xFF
-    repb = (b0 == ((u >> 8) & 0xFF)) & (b0 == ((u >> 16) & 0xFF)) & (
-        b0 == ((u >> 24) & 0xFF)
-    )
-    # priority: smallest encoding wins; repb (8) before se8 is irrelevant for
-    # size but we fix an order so pack/size agree: se4 < se8 < repb < se16 <
-    # pad16 < half_se8 < raw.
-    pat = xp.full(w.shape, P_RAW, dtype=xp.int32)
-    pat = xp.where(half_se8, P_HALF_SE8, pat)
-    pat = xp.where(pad16, P_PAD16, pat)
-    pat = xp.where(se16, P_SE16, pat)
-    pat = xp.where(repb, P_REPB, pat)
-    pat = xp.where(se8, P_SE8, pat)
-    pat = xp.where(se4, P_SE4, pat)
-    return pat
-
-
-_NONZERO_BITS_BY_PAT = None
-
-
-def _payload_bits_table(xp):
-    return xp.asarray(
-        [ _PAYLOAD_BITS[p] for p in range(8) ], dtype=xp.int32
-    )
-
-
-def fpc_size_bits(lines_u32, xp=np):
-    """Compressed size in BITS for each line.
-
-    lines_u32: (..., 16) uint32/int32 array of words.
-    Returns (...,) int32 sizes (payload + prefixes, zero-run encoded).
-    """
-    w = lines_u32.astype(xp.int64)
-    w_i32 = ((w & 0xFFFFFFFF) ^ 0x80000000) - 0x80000000  # as signed int32
-    zero = w_i32 == 0
-    pat = _classify_nonzero(w_i32, xp)
-    tbl = _payload_bits_table(xp)
-    nz_bits = xp.where(zero, 0, PREFIX_BITS + tbl[pat])
-    total_nz = nz_bits.sum(axis=-1)
-
-    # zero runs: each run of length L contributes ceil(L/8)*(3+3) bits.
-    prev = xp.concatenate(
-        [xp.zeros(zero.shape[:-1] + (1,), dtype=bool), zero[..., :-1]], axis=-1
-    )
-    starts = zero & ~prev
-    run_id = xp.cumsum(starts.astype(xp.int32), axis=-1)  # 1-based on zeros
-    chunks = xp.zeros(zero.shape[:-1], dtype=xp.int32)
-    for k in range(1, WORDS_PER_LINE + 1):
-        len_k = (zero & (run_id == k)).sum(axis=-1)
-        chunks = chunks + (len_k + 7) // 8 * (len_k > 0)
-    return (total_nz + chunks * (PREFIX_BITS + 3)).astype(xp.int32)
-
-
-def fpc_size_bytes(lines_bytes, xp=np):
-    """(…,64) uint8 -> (…,) int32 compressed size in bytes (ceil bits/8)."""
-    if xp is np:
-        words = bytes_to_u32(np.asarray(lines_bytes))
-    else:
-        b = lines_bytes.astype(xp.uint32)
-        words = (
-            b[..., 0::4]
-            + (b[..., 1::4] << 8)
-            + (b[..., 2::4] << 16)
-            + (b[..., 3::4] << 24)
-        )
-    return (fpc_size_bits(words, xp=xp) + 7) // 8
-
-
-# ---------------------------------------------------------------------------
-# Exact pack / unpack (host-side, per line)
-# ---------------------------------------------------------------------------
-
-def fpc_pack(line_bytes: np.ndarray | bytes) -> bytes:
-    """Exact FPC encoding of one 64-byte line."""
-    arr = np.frombuffer(bytes(line_bytes), dtype=np.uint8) if isinstance(
-        line_bytes, (bytes, bytearray)
-    ) else np.asarray(line_bytes, dtype=np.uint8)
-    words = bytes_to_u32(arr).astype(np.int64)
-    w_signed = ((words & 0xFFFFFFFF) ^ 0x80000000) - 0x80000000
-    pats = np.asarray(_classify_nonzero(w_signed, np))
-    bw = BitWriter()
-    i = 0
-    while i < WORDS_PER_LINE:
-        w = int(w_signed[i])
-        u = w & 0xFFFFFFFF
-        if w == 0:
-            run = 0
-            while i + run < WORDS_PER_LINE and int(w_signed[i + run]) == 0 and run < 8:
-                run += 1
-            bw.write(P_ZRUN, PREFIX_BITS)
-            bw.write(run - 1, 3)
-            i += run
-            continue
-        pat = int(pats[i])
-        bw.write(pat, PREFIX_BITS)
-        if pat == P_SE4:
-            bw.write_signed(w, 4)
-        elif pat == P_SE8:
-            bw.write_signed(w, 8)
-        elif pat == P_SE16:
-            bw.write_signed(w, 16)
-        elif pat == P_PAD16:
-            bw.write((u >> 16) & 0xFFFF, 16)
-        elif pat == P_HALF_SE8:
-            lo = u & 0xFFFF
-            hi = (u >> 16) & 0xFFFF
-            bw.write_signed(((lo ^ 0x8000) - 0x8000), 8)
-            bw.write_signed(((hi ^ 0x8000) - 0x8000), 8)
-        elif pat == P_REPB:
-            bw.write(u & 0xFF, 8)
-        else:  # P_RAW
-            bw.write(u, 32)
-        i += 1
-    return bw.getvalue()
-
-
-def fpc_unpack(data: bytes) -> np.ndarray:
-    """Decode FPC bytes back to a (64,) uint8 line."""
-    br = BitReader(data)
-    words: list[int] = []
-    while len(words) < WORDS_PER_LINE:
-        pat = br.read(PREFIX_BITS)
-        if pat == P_ZRUN:
-            run = br.read(3) + 1
-            words.extend([0] * run)
-        elif pat == P_SE4:
-            words.append(br.read_signed(4) & 0xFFFFFFFF)
-        elif pat == P_SE8:
-            words.append(br.read_signed(8) & 0xFFFFFFFF)
-        elif pat == P_SE16:
-            words.append(br.read_signed(16) & 0xFFFFFFFF)
-        elif pat == P_PAD16:
-            words.append((br.read(16) << 16) & 0xFFFFFFFF)
-        elif pat == P_HALF_SE8:
-            lo = br.read_signed(8) & 0xFFFF
-            hi = br.read_signed(8) & 0xFFFF
-            words.append(((hi << 16) | lo) & 0xFFFFFFFF)
-        elif pat == P_REPB:
-            b = br.read(8)
-            words.append(b | (b << 8) | (b << 16) | (b << 24))
-        else:
-            words.append(br.read(32))
-    if len(words) != WORDS_PER_LINE:
-        raise ValueError("FPC stream decoded to wrong word count")
-    return u32_to_bytes(np.asarray(words, dtype="<u4"))
+from ..compression.fpc import (  # noqa: F401
+    P_HALF_SE8,
+    P_PAD16,
+    P_RAW,
+    P_REPB,
+    P_SE4,
+    P_SE8,
+    P_SE16,
+    P_ZRUN,
+    PREFIX_BITS,
+    WORDS_PER_LINE,
+    fpc_pack,
+    fpc_size_bits,
+    fpc_size_bytes,
+    fpc_unpack,
+)

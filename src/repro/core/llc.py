@@ -16,7 +16,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from .dynamic import is_sampled_set
+from ..compression.gate import is_sampled_set
 
 
 @dataclass

@@ -1,72 +1,14 @@
-"""Line Location Predictor (LLP) — §V-B.
+"""Moved: repro.compression.predictor is the implementation (THE line
+location predictor, §V-B)."""
 
-A 512-entry Last Compressibility Table (LCT), indexed by a hash of the page
-address, records the last compressibility *level* observed for lines of that
-page (0 = uncompressed, 1 = 2:1, 2 = 4:1).  Predicting the level predicts the
-slot to probe (mapping.PRED_SLOT).  128 bytes of state at 2 bits/entry
-(we store a byte per entry for simplicity; Table III accounting uses 2 bits).
-
-Works both as a host-side object (functional model) and as pure functions on
-a jnp array (trace simulator).
-"""
-
-from __future__ import annotations
-
-import numpy as np
-
-LCT_ENTRIES = 512
-LINES_PER_PAGE = 64  # 4KB page / 64B lines
-
-_HASH_MULT = 0x9E3779B1  # Fibonacci hashing
-
-
-def page_of(line_addr):
-    return line_addr // LINES_PER_PAGE
-
-
-def lct_index(page, n_entries: int = LCT_ENTRIES):
-    return ((page * _HASH_MULT) & 0xFFFFFFFF) % n_entries
-
-
-class LLP:
-    """Host-side predictor used by the exact functional model."""
-
-    def __init__(self, n_entries: int = LCT_ENTRIES):
-        self.n_entries = n_entries
-        self.lct = np.zeros(n_entries, dtype=np.int8)
-        self.predictions = 0
-        self.correct = 0
-
-    def predict_level(self, line_addr: int) -> int:
-        return int(self.lct[lct_index(page_of(line_addr), self.n_entries)])
-
-    def update(self, line_addr: int, observed_level: int) -> None:
-        self.lct[lct_index(page_of(line_addr), self.n_entries)] = observed_level
-
-    def record_outcome(self, was_correct: bool) -> None:
-        self.predictions += 1
-        self.correct += int(was_correct)
-
-    @property
-    def accuracy(self) -> float:
-        return self.correct / self.predictions if self.predictions else 1.0
-
-    @property
-    def storage_bytes(self) -> int:
-        return self.n_entries * 2 // 8  # 2 bits/entry as in Table III
-
-
-# -- pure-function variants for lax.scan ------------------------------------
-
-def llp_predict(lct, line_addr, xp):
-    idx = lct_index(page_of(line_addr), lct.shape[0])
-    return lct[idx]
-
-
-def llp_update(lct, line_addr, level, xp):
-    idx = lct_index(page_of(line_addr), lct.shape[0])
-    if xp is np:
-        lct = lct.copy()
-        lct[idx] = level
-        return lct
-    return lct.at[idx].set(level)
+from ..compression.predictor import (  # noqa: F401
+    _HASH_MULT,
+    HASH_MULT,
+    LCT_ENTRIES,
+    LINES_PER_PAGE,
+    LLP,
+    lct_index,
+    llp_predict,
+    llp_update,
+    page_of,
+)

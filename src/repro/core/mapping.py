@@ -1,158 +1,31 @@
-"""Restricted data mapping for groups of 4 lines (Fig. 6).
+"""Moved: repro.compression.layouts is the implementation (the Fig. 6
+GROUP4 mapping as an instance of the marker-framed Layout protocol)."""
 
-A group of four consecutive lines (lanes A=0, B=1, C=2, D=3) is stored in one
-of exactly five layout states.  Lane 0 never moves; each lane has at most
-three candidate slots (two on average), which is what makes the line-location
-prediction problem small.
-
-        lane:     A  B  C  D        vacated (Marker-IL) slots
-  S_U          :  0  1  2  3        -
-  S_AB         :  0  0  2  3        1
-  S_CD         :  0  1  2  2        3
-  S_AB_CD      :  0  0  2  2        1, 3
-  S_QUAD       :  0  0  0  0        1, 2, 3
-
-The Compression Status Information (CSI) for a group is one of these five
-states = 3 bits/group = 0.75 bits/line (matches §IV-B's 24MB for 16GB).
-"""
-
-from __future__ import annotations
-
-import numpy as np
-
-GROUP_LINES = 4
-SLOT_BUDGET = 64
-MARKER_BYTES = 4
-PAYLOAD_BUDGET = SLOT_BUDGET - MARKER_BYTES  # 60B usable when packed
-
-S_U, S_AB, S_CD, S_AB_CD, S_QUAD = range(5)
-N_STATES = 5
-STATE_NAMES = ("uncomp", "AB", "CD", "AB+CD", "quad")
-
-# LOC[state][lane] -> slot holding that lane's data
-LOC = np.asarray(
-    [
-        [0, 1, 2, 3],
-        [0, 0, 2, 3],
-        [0, 1, 2, 2],
-        [0, 0, 2, 2],
-        [0, 0, 0, 0],
-    ],
-    dtype=np.int32,
+from ..compression.framing import (  # noqa: F401
+    MARKER_BYTES,
+    PAYLOAD_BUDGET,
+    SLOT_BUDGET,
 )
-
-# VACATED[state][slot] -> slot holds Marker-IL
-VACATED = np.asarray(
-    [
-        [0, 0, 0, 0],
-        [0, 1, 0, 0],
-        [0, 0, 0, 1],
-        [0, 1, 0, 1],
-        [0, 1, 1, 1],
-    ],
-    dtype=bool,
+from ..compression.layouts import (  # noqa: F401
+    CANDIDATES,
+    GROUP4,
+    GROUP_LINES,
+    LANE_LEVEL,
+    LANES_IN_SLOT,
+    LINES_IN_SLOT,
+    LOC,
+    N_STATES,
+    OCCUPIED,
+    PRED_SLOT,
+    S_AB,
+    S_AB_CD,
+    S_CD,
+    S_QUAD,
+    S_U,
+    STATE_NAMES,
+    VACATED,
+    choose_state,
+    fits_to_state,
+    probe_chain,
+    slot_of,
 )
-
-# OCCUPIED[state][slot] -> slot holds data (lead slot of a packed run or a
-# plain uncompressed line)
-OCCUPIED = ~VACATED
-
-# How many lines live in a given slot for a given state (0 if vacated)
-LINES_IN_SLOT = np.asarray(
-    [
-        [1, 1, 1, 1],
-        [2, 0, 1, 1],
-        [1, 1, 2, 0],
-        [2, 0, 2, 0],
-        [4, 0, 0, 0],
-    ],
-    dtype=np.int32,
-)
-
-# Lanes resident in (state, slot): bitmask over lanes
-LANES_IN_SLOT = np.asarray(
-    [
-        [0b0001, 0b0010, 0b0100, 0b1000],
-        [0b0011, 0, 0b0100, 0b1000],
-        [0b0001, 0b0010, 0b1100, 0],
-        [0b0011, 0, 0b1100, 0],
-        [0b1111, 0, 0, 0],
-    ],
-    dtype=np.int32,
-)
-
-# candidate probe order per lane: own/leader slots from "least compressed"
-# to "most compressed". The controller probes from its *predicted* slot and
-# then walks the remaining candidates.
-CANDIDATES = ((0,), (1, 0), (2, 0), (3, 2, 0))
-
-# Per-lane compressibility level observed from a state (0=uncomp, 1=2:1, 2=4:1)
-LANE_LEVEL = np.asarray(
-    [
-        [0, 0, 0, 0],
-        [1, 1, 0, 0],
-        [0, 0, 1, 1],
-        [1, 1, 1, 1],
-        [2, 2, 2, 2],
-    ],
-    dtype=np.int32,
-)
-
-# Slot predicted for (lane, predicted_level): level 2 -> slot 0; level 1 ->
-# pair-leader slot; level 0 -> own slot.
-PRED_SLOT = np.asarray(
-    [
-        [0, 0, 0],
-        [1, 0, 0],
-        [2, 2, 0],
-        [3, 2, 0],
-    ],
-    dtype=np.int32,
-)
-
-
-def choose_state(sizes, valid_mask: int = 0b1111, budget: int = PAYLOAD_BUDGET):
-    """Best layout state for a group given per-line compressed sizes.
-
-    sizes: 4 compressed sizes in bytes (including per-line headers).
-    valid_mask: which lanes' data the controller actually holds (only lanes
-      co-resident in the LLC may be packed together — ganged eviction).
-    """
-    s = [int(x) for x in sizes]
-    have = lambda m: (valid_mask & m) == m
-    quad = have(0b1111) and sum(s) <= budget
-    ab = have(0b0011) and s[0] + s[1] <= budget
-    cd = have(0b1100) and s[2] + s[3] <= budget
-    if quad:
-        return S_QUAD
-    if ab and cd:
-        return S_AB_CD
-    if ab:
-        return S_AB
-    if cd:
-        return S_CD
-    return S_U
-
-
-def fits_to_state(pair_ab: bool, pair_cd: bool, quad: bool) -> int:
-    if quad:
-        return S_QUAD
-    if pair_ab and pair_cd:
-        return S_AB_CD
-    if pair_ab:
-        return S_AB
-    if pair_cd:
-        return S_CD
-    return S_U
-
-
-def slot_of(state: int, lane: int) -> int:
-    return int(LOC[state][lane])
-
-
-def probe_chain(lane: int, predicted_slot: int) -> list[int]:
-    """Probe order: predicted slot first, then remaining candidates."""
-    cands = list(CANDIDATES[lane])
-    if predicted_slot in cands:
-        cands.remove(predicted_slot)
-    return [predicted_slot] + cands

@@ -22,7 +22,10 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from .dynamic import COUNTER_INIT, COUNTER_MAX
+from ..compression.codecs import get_codec
+from ..compression.gate import COUNTER_INIT, COUNTER_MAX
+from ..compression.layouts import get_layout
+from ..compression.predictor import LCT_ENTRIES
 from .engine import (
     FLAG_COMP,
     FLAG_DYNAMIC,
@@ -40,7 +43,6 @@ from .engine import (
     SimConfig,
     sample_threshold,
 )
-from .llp import LCT_ENTRIES
 
 
 @dataclass(frozen=True)
@@ -51,8 +53,15 @@ class Scheme:
     (the paper's schemes update the LCT iff they predict with it).  Config
     fields become the engine's traced params row: `sample_rate=None`
     defers to SimConfig.sample_rate at params_matrix time.
+
+    `codec`/`layout` name the compression-registry entries the scheme's
+    packability bits are defined against (repro.compression): the trace
+    generator's pair/quad fit masks model the named codec packed into the
+    named layout's states.  Both are validated against the registries.
     """
     name: str
+    codec: str = "hybrid"
+    layout: str = "group4"
     comp: bool = False
     llp: bool = False
     meta: bool = False
@@ -67,6 +76,8 @@ class Scheme:
     description: str = ""
 
     def __post_init__(self):
+        get_codec(self.codec)        # raises on unknown registry names
+        get_layout(self.layout)
         if not 1 <= self.lct_size <= LCT_ENTRIES:
             raise ValueError(
                 f"lct_size must be in [1, {LCT_ENTRIES}], got {self.lct_size}")
@@ -151,9 +162,9 @@ def params_matrix(schemes, cfg: SimConfig = SimConfig()) -> np.ndarray:
 # ---------------------------------------------------------------- built-ins
 
 BASE_SCHEMES = tuple(register(s).name for s in (
-    Scheme("baseline",
+    Scheme("baseline", codec="raw",
            description="uncompressed memory (the normalization target)"),
-    Scheme("nextline", nextline=True,
+    Scheme("nextline", codec="raw", nextline=True,
            description="uncompressed + next-line prefetch on miss (Table V)"),
     Scheme("ideal", comp=True, ideal=True,
            description="compression benefits, zero maintenance (Fig. 3/16)"),

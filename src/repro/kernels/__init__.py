@@ -1,11 +1,16 @@
 """Pallas TPU kernels for the CRAM compute hot-spots (+ pure-jnp oracles).
 
   compress_scan.py  one-pass image compressibility + marker classification
-  bdi_pack.py       CRAM-KV 2:1 pair packing / unpacking
+                    (device backend of the line codecs in
+                    repro.compression.codecs)
+  bdi_pack.py       CRAM-KV 2:1 pair / 4:1 quad packing and unpacking
+                    (device backends of the int8-delta / int4-delta codecs)
   cram_attention.py fused marker-check/unpack/flash-decode attention
   ops.py            public jit'd wrappers over the KV kernels
-  ref.py            pure-jnp oracles (the allclose/equality targets)
+  ref.py            pure-jnp oracles (the allclose/equality targets;
+                    thin jnp bindings of repro.compression.pagepack)
 
 All kernels default to interpret mode off-TPU, so the package is fully
-exercised on CPU; numpy reference paths stay the bit-true source of truth.
+exercised on CPU; repro.compression's numpy paths stay the bit-true source
+of truth.
 """

@@ -1,10 +1,18 @@
-"""Pallas TPU kernel: BDI-style 2:1 pair packing of KV pages (CRAM-KV).
+"""Pallas TPU kernels: BDI-style page packing of KV pages (CRAM-KV).
 
-One kernel invocation packs a pair of (page, Hkv, D2) int16 pages into a
-single slot of int8 delta-pairs against a shared base strip (pageA's
-token-0 row), reporting whether the pair fits (all deltas within int8).
-The unpack kernel inverts it.  Layout/semantics match ref.pack_pair_ref /
-ref.unpack_pair_ref exactly (allclose-tested in interpret mode).
+The device backends of the registered page codecs
+(repro.compression.codecs):
+
+  * int8-delta (pack_pair/unpack_pair) — packs a pair of (page, Hkv, D2)
+    int16 pages into a single slot of int8 delta-pairs against a shared
+    base strip (pageA's token-0 row), reporting whether the pair fits;
+  * int4-delta (pack_quad/unpack_quad) — packs FOUR pages into one slot of
+    int4 delta-nibbles against the same base (4:1).
+
+Layout/semantics match the xp-generic bit-true reference in
+repro.compression.pagepack (and its jnp wrappers in kernels/ref.py)
+exactly — allclose-tested in interpret mode by the cross-backend
+round-trip tests.
 
 BlockSpec notes (TPU target): D2 = 2*head_dim = 256 lanes (2x the 128-lane
 register width); the whole page tile lives in VMEM (128 x 8 x 256 x 2B =
@@ -70,5 +78,62 @@ def unpack_pair(packed, base, *, interpret: bool = True):
             jax.ShapeDtypeStruct((page, hkv, d2), jnp.int16),
             jax.ShapeDtypeStruct((page, hkv, d2), jnp.int16),
         ),
+        interpret=interpret,
+    )(packed, base)
+
+
+def _pack_quad_kernel(a_ref, b_ref, c_ref, d_ref, packed_ref, base_ref,
+                      ok_ref):
+    a = a_ref[...].astype(jnp.int32)         # (page, Hkv, D2)
+    base = a[0]                              # (Hkv, D2)
+    da = a - base[None]
+    db = b_ref[...].astype(jnp.int32) - base[None]
+    dc = c_ref[...].astype(jnp.int32) - base[None]
+    dd = d_ref[...].astype(jnp.int32) - base[None]
+    fits = lambda x: (x >= -8) & (x <= 7)
+    ok = jnp.all(fits(da) & fits(db) & fits(dc) & fits(dd))
+    packed = ((dd & 0xF) << 12) | ((dc & 0xF) << 8) | ((db & 0xF) << 4) \
+        | (da & 0xF)
+    packed_ref[...] = jax.lax.bitcast_convert_type(
+        packed.astype(jnp.uint16), jnp.int16)
+    base_ref[...] = base.astype(jnp.int16)
+    ok_ref[...] = jnp.full((1,), ok, jnp.int32)
+
+
+def _unpack_quad_kernel(packed_ref, base_ref, a_ref, b_ref, c_ref, d_ref):
+    v = jax.lax.bitcast_convert_type(
+        packed_ref[...], jnp.uint16).astype(jnp.int32)
+    base = base_ref[...].astype(jnp.int32)
+    se4 = lambda x: (x ^ 0x8) - 0x8          # sign-extend int4
+    a_ref[...] = (base[None] + se4(v & 0xF)).astype(jnp.int16)
+    b_ref[...] = (base[None] + se4((v >> 4) & 0xF)).astype(jnp.int16)
+    c_ref[...] = (base[None] + se4((v >> 8) & 0xF)).astype(jnp.int16)
+    d_ref[...] = (base[None] + se4((v >> 12) & 0xF)).astype(jnp.int16)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pack_quad(page_a, page_b, page_c, page_d, *, interpret: bool = True):
+    """Four (page,Hkv,D2) int16 pages -> (packed i16, base i16, ok)."""
+    page, hkv, d2 = page_a.shape
+    packed, base, ok = pl.pallas_call(
+        _pack_quad_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((page, hkv, d2), jnp.int16),
+            jax.ShapeDtypeStruct((hkv, d2), jnp.int16),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ),
+        interpret=interpret,
+    )(page_a, page_b, page_c, page_d)
+    return packed, base, ok[0] > 0
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def unpack_quad(packed, base, *, interpret: bool = True):
+    page, hkv, d2 = packed.shape
+    return pl.pallas_call(
+        _unpack_quad_kernel,
+        out_shape=tuple(
+            jax.ShapeDtypeStruct((page, hkv, d2), jnp.int16)
+            for _ in range(4)),
         interpret=interpret,
     )(packed, base)

@@ -30,11 +30,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from repro.core.marker import LineStatus
+from repro.compression.framing import HEADER_BYTES, LINE_BYTES
+from repro.compression.marker import LineStatus
 
-LINE_BYTES = 64
 WORDS_PER_LINE = 16
-HEADER_BYTES = 1
 BLOCK_LINES = 256
 
 # multiply-add marker family constants (odd multipliers; wrap mod 2^32)

@@ -3,9 +3,10 @@
 Flash-decode over a CRAM-packed paged KV cache: the grid walks physical
 slots; each step DMAs one slot + its base strip into VMEM, checks the
 strip-tail marker (implicit metadata — no separate status fetch), inlines
-the int8->int16 BDI unpack for packed slots (one DMA yields TWO pages:
-the paper's bandwidth win), and accumulates online-softmax partials in
-VMEM scratch.  The final step normalizes into the output.
+the delta unpack for packed slots (one DMA yields TWO pages for the
+int8-delta pair codec or FOUR for the int4-delta quad codec: the paper's
+bandwidth win), and accumulates online-softmax partials in VMEM scratch.
+The final step normalizes into the output.
 
 The raw/packed selection is a jnp.where over both interpretations — on
 real TPU hardware this becomes a pl.when branch; in interpret mode the
@@ -28,7 +29,7 @@ NEG_INF = -1e30
 
 
 def _kernel(q_ref, slot_ref, strip_ref, marker_ref, valid_ref,
-            out_ref, m_s, l_s, acc_s):
+            out_ref, m_s, l_s, acc_s, *, lanes):
     i = pl.program_id(0)
     n = pl.num_programs(0)
 
@@ -55,21 +56,27 @@ def _kernel(q_ref, slot_ref, strip_ref, marker_ref, valid_ref,
     # --- decode both interpretations, select by marker
     base = strip[:, :d2].astype(jnp.int32)          # (Hkv, D2)
     v_u = jax.lax.bitcast_convert_type(slot, jnp.uint16).astype(jnp.int32)
-    lo = ((v_u & 0xFF) ^ 0x80) - 0x80
-    hi = (((v_u >> 8) & 0xFF) ^ 0x80) - 0x80
-    page_a_packed = (base[None] + lo).astype(jnp.int16)
-    page_b_packed = (base[None] + hi).astype(jnp.int16)
-    page_a = jnp.where(is_packed, page_a_packed, slot)
-    page_b = jnp.where(is_packed, page_b_packed, jnp.zeros_like(slot))
+    if lanes == 2:                                  # int8-delta pair codec
+        lo = ((v_u & 0xFF) ^ 0x80) - 0x80
+        hi = (((v_u >> 8) & 0xFF) ^ 0x80) - 0x80
+        packed_pages = [base[None] + lo, base[None] + hi]
+    else:                                           # int4-delta quad codec
+        se4 = lambda x: (x ^ 0x8) - 0x8
+        packed_pages = [base[None] + se4((v_u >> s) & 0xF)
+                        for s in (0, 4, 8, 12)]
+    zeros = jnp.zeros_like(slot)
+    pages = [jnp.where(is_packed, p.astype(jnp.int16),
+                       slot if j == 0 else zeros)
+             for j, p in enumerate(packed_pages)]
 
-    kv = jnp.stack([page_a, page_b])                # (2, page, Hkv, D2)
+    kv = jnp.stack(pages)                           # (lanes, page, Hkv, D2)
     kvf = jax.lax.bitcast_convert_type(kv, jnp.bfloat16).astype(jnp.float32)
-    k = kvf[..., :d].reshape(2 * page, hkv, d)
-    v = kvf[..., d:].reshape(2 * page, hkv, d)
+    k = kvf[..., :d].reshape(lanes * page, hkv, d)
+    v = kvf[..., d:].reshape(lanes * page, hkv, d)
 
-    valid = valid_ref[0]                            # (2,) int32 per page
-    tok = jax.lax.broadcasted_iota(jnp.int32, (2, page), 1)
-    mask = (tok < valid[:, None]).reshape(2 * page)
+    valid = valid_ref[0]                            # (lanes,) int32 per page
+    tok = jax.lax.broadcasted_iota(jnp.int32, (lanes, page), 1)
+    mask = (tok < valid[:, None]).reshape(lanes * page)
 
     kg = jnp.repeat(k, g, axis=1)                   # (T, Hq, D)
     vg = jnp.repeat(v, g, axis=1)
@@ -94,23 +101,25 @@ def _kernel(q_ref, slot_ref, strip_ref, marker_ref, valid_ref,
         out_ref[...] = acc_s[...] / jnp.maximum(l_s[...][:, 0:1], 1e-30)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("lanes", "interpret"))
 def cram_decode_attention(q, slots, strips, markers, valid, *,
-                          interpret: bool = True):
+                          lanes: int = 2, interpret: bool = True):
     """q (Hq, D); slots (n,page,Hkv,D2) i16; strips (n,Hkv,D2+2) i16;
-    markers (n,) int32 (expected pack markers); valid (n,2) int32 valid
-    tokens per logical page.  Returns (Hq, D) float32."""
+    markers (n,) int32 (expected pack markers); valid (n,lanes) int32 valid
+    tokens per logical page.  `lanes` selects the slot format: 2 = pair
+    (int8-delta), 4 = quad (int4-delta).  Returns (Hq, D) float32."""
     n, page, hkv, d2 = slots.shape
     hq, d = q.shape
+    assert lanes in (2, 4)
     return pl.pallas_call(
-        _kernel,
+        functools.partial(_kernel, lanes=lanes),
         grid=(n,),
         in_specs=[
             pl.BlockSpec((hq, d), lambda i: (0, 0)),
             pl.BlockSpec((1, page, hkv, d2), lambda i: (i, 0, 0, 0)),
             pl.BlockSpec((1, hkv, d2 + MARKER_LANES), lambda i: (i, 0, 0)),
             pl.BlockSpec((1,), lambda i: (i,)),
-            pl.BlockSpec((1, 2), lambda i: (i, 0)),
+            pl.BlockSpec((1, lanes), lambda i: (i, 0)),
         ],
         out_specs=pl.BlockSpec((hq, d), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((hq, d), jnp.float32),

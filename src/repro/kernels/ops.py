@@ -1,14 +1,18 @@
 """Public jit'd wrappers around the CRAM-KV Pallas kernels.
 
 `build_cram_cache` packs logical KV pages pairwise into physical slots
-(raw when the pair doesn't fit), writing base strips + in-band markers.
-`pack_window` / `raw_window` are the incremental variants: they (re)pack
-only a gathered window of dirty pairs, batched over sequences, so a decode
-step costs O(new pairs) instead of a full rebuild.  `decode_attention`
-runs the fused marker-check/unpack/flash-decode kernel, vmapped over
-batch; `decode_attention_batched` vmaps it over per-sequence caches.
-`hbm_bytes_moved` is a jitted bandwidth reduction that also charges the
-LLP-mispredict re-probe.  All kernels default to interpret mode off-TPU.
+(raw when the pair doesn't fit), writing base strips + in-band markers;
+`build_cram_cache_quad` is the 4:1 analogue over page quads (int4-delta
+codec, quad-domain markers).  `pack_window` / `pack_quad_window` /
+`raw_window` / `raw_quad_window` are the incremental variants: they
+(re)pack only a gathered window of dirty groups, batched over sequences,
+so a decode step costs O(new groups) instead of a full rebuild.
+`decode_attention` runs the fused marker-check/unpack/flash-decode
+kernel, vmapped over batch; `decode_attention_batched` /
+`decode_attention_quad_batched` vmap it over per-sequence caches.
+`hbm_bytes_moved` is a jitted, lanes-aware bandwidth reduction that also
+charges the LLP-mispredict re-probe.  All kernels default to interpret
+mode off-TPU.
 """
 
 from __future__ import annotations
@@ -20,7 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import ref as _ref
-from .bdi_pack import pack_pair
+from .bdi_pack import pack_pair, pack_quad
 from .cram_attention import cram_decode_attention
 from .ref import MARKER_LANES, marker_to_lanes, slot_markers
 
@@ -122,6 +126,98 @@ def raw_window(a, b):
     return a, b, strips, none, none
 
 
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pack_quad_window(pages, marker_lanes, enabled, *, interpret=True):
+    """Incrementally (re)pack a gathered window of dirty page QUADS.
+
+    pages: (B, W, 4, page, Hkv, D2) int16 — the four lanes of each dirty
+    group; marker_lanes: (W, MARKER_LANES) int16 per-group quad-domain
+    marker lanes; enabled: (B,) bool per-sequence gate.  Same gate
+    semantics as pack_window: fitness measured regardless, layout honors
+    the gate, disabled sequences get the raw layout with zeroed strips.
+
+    Returns (slots, overflow (B, W, 3, ...), strips, layout_packed, fit).
+    """
+    a, b, c, d = (pages[:, :, j] for j in range(4))
+    packed, base, fit = jax.vmap(jax.vmap(
+        lambda w, x, y, z: pack_quad(w, x, y, z, interpret=interpret)))(
+        a, b, c, d)
+    bsz, w = a.shape[:2]
+    hkv, d2 = a.shape[-2:]
+    lay = fit & enabled[:, None]
+    sel = lay[:, :, None, None, None]
+    slots = jnp.where(sel, packed, a)
+    over = jnp.where(lay[:, :, None, None, None, None],
+                     jnp.zeros_like(pages[:, :, 1:]), pages[:, :, 1:])
+    strips = jnp.zeros((bsz, w, hkv, d2 + MARKER_LANES), jnp.int16)
+    strips = strips.at[..., :d2].set(base)
+    tail = jnp.broadcast_to(marker_lanes[None, :, None, :],
+                            (bsz, w, hkv, MARKER_LANES))
+    strips = strips.at[..., d2:].set(jnp.where(lay[:, :, None, None],
+                                               tail, 0))
+    strips = jnp.where(enabled[:, None, None, None], strips, 0)
+    return slots, over, strips, lay, fit
+
+
+@jax.jit
+def raw_quad_window(pages):
+    """Raw layout for a window of quads (`policy="off"`): every page in its
+    own slot, strips zeroed, no fitness measured."""
+    bsz, w = pages.shape[:2]
+    hkv, d2 = pages.shape[-2:]
+    strips = jnp.zeros((bsz, w, hkv, d2 + MARKER_LANES), jnp.int16)
+    none = jnp.zeros((bsz, w), bool)
+    return pages[:, :, 0], pages[:, :, 1:], strips, none, none
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _pack_all_quad(pages, markers_i16, *, interpret=True):
+    """pages: (4n, page, Hkv, D2) int16 -> (slots, overflow, strips, ok)."""
+    a, b, c, d = pages[0::4], pages[1::4], pages[2::4], pages[3::4]
+    packed, base, ok = jax.vmap(
+        lambda w, x, y, z: pack_quad(w, x, y, z, interpret=interpret))(
+        a, b, c, d)
+    sel = ok[:, None, None, None]
+    slots = jnp.where(sel, packed, a)
+    over_pages = jnp.stack([b, c, d], axis=1)         # (n, 3, page, ...)
+    over = jnp.where(ok[:, None, None, None, None],
+                     jnp.zeros_like(over_pages), over_pages)
+    n, _, hkv, d2 = slots.shape
+    strips = jnp.zeros((n, hkv, d2 + MARKER_LANES), jnp.int16)
+    strips = strips.at[:, :, :d2].set(base)
+    tail = jnp.broadcast_to(markers_i16[:, None, :], (n, hkv, MARKER_LANES))
+    strips = strips.at[:, :, d2:].set(jnp.where(ok[:, None, None], tail, 0))
+    return slots, over, strips, ok
+
+
+def build_cram_cache_quad(pages, *, key: int = 0x5EED, interpret=None):
+    """Pack logical pages (4n, page, Hkv, D2) int16 into a quad CRAM cache.
+
+    The 4:1 analogue of build_cram_cache: groups of four consecutive pages
+    pack into ONE slot via the int4-delta codec when they fit; non-fitting
+    groups store all four pages raw (lead slot + 3 overflow slots).
+    Markers come from the quad domain so a slot's pair marker can never
+    alias its quad marker.
+    """
+    from ..compression.framing import DOMAIN_QUAD
+
+    if interpret is None:
+        interpret = default_interpret()
+    n4 = pages.shape[0]
+    assert n4 % 4 == 0
+    markers = slot_markers(n4 // 4, key, domain=DOMAIN_QUAD)
+    mk_lanes = jnp.asarray(marker_to_lanes(markers))
+    slots, over, strips, ok = _pack_all_quad(pages, mk_lanes,
+                                             interpret=interpret)
+    return {
+        "slots": slots,
+        "slots_overflow": over,         # (n, 3, page, ...) lanes B/C/D
+        "strips": strips,
+        "markers": jnp.asarray(markers.view(np.int32)),
+        "packed_mask": ok,
+    }
+
+
 def physical_view(cache, valid_per_page):
     """Flatten the cache to the slot list the decode kernel walks.
 
@@ -206,6 +302,76 @@ def decode_attention_ref_batched(q, cache, valid_per_page):
                          jnp.asarray(valid_per_page))
 
 
+def physical_view_quad(cache, valid_per_page):
+    """Quad analogue of physical_view: flatten to the slot list the decode
+    kernel walks.  Packed group -> 1 slot holding 4 pages; raw group -> 4
+    slots (lead + 3 overflow).  Returns (slots, strips, markers,
+    valid (4n, 4)) covering every page."""
+    slots = cache["slots"]                  # (n, page, hkv, d2)
+    over = cache["slots_overflow"]          # (n, 3, page, hkv, d2)
+    strips = cache["strips"]
+    markers = cache["markers"]
+    ok = cache["packed_mask"]
+    n, page, hkv, d2 = slots.shape
+    vp = valid_per_page.reshape(n, 4)
+    all_slots = jnp.concatenate([slots[:, None], over], axis=1)
+    all_slots = all_slots.reshape(4 * n, page, hkv, d2)
+    zstrip = jnp.zeros_like(strips)
+    all_strips = jnp.stack([strips, zstrip, zstrip, zstrip], 1).reshape(
+        4 * n, hkv, d2 + MARKER_LANES)
+    all_markers = jnp.repeat(markers, 4)
+    zero = jnp.zeros_like(vp[:, 0])
+    # lead slot: all four pages when packed, lane A only when raw
+    v_lead_raw = jnp.stack([vp[:, 0], zero, zero, zero], 1)
+    v_lead = jnp.where(ok[:, None], vp, v_lead_raw)
+    # overflow slot j: lane j+1 when raw, dead when packed
+    v_over = [
+        jnp.where(ok[:, None],
+                  jnp.zeros((n, 4), vp.dtype),
+                  jnp.stack([vp[:, j + 1], zero, zero, zero], 1))
+        for j in range(3)
+    ]
+    valid = jnp.stack([v_lead, *v_over], 1).reshape(4 * n, 4)
+    return all_slots, all_strips, all_markers, valid
+
+
+def decode_attention_quad_batched(q, cache, valid_per_page, *,
+                                  interpret=None):
+    """Per-sequence decode over a quad cache: q (B, Hq, D); cache leaves
+    carry a leading batch axis except `markers`; valid_per_page (B, 4n)."""
+    if interpret is None:
+        interpret = default_interpret()
+    markers = cache["markers"]
+
+    def one(qi, slots, over, strips, ok, vp):
+        c = {"slots": slots, "slots_overflow": over, "strips": strips,
+             "markers": markers, "packed_mask": ok}
+        s, st, m, v = physical_view_quad(c, vp)
+        return cram_decode_attention(qi, s, st, m, v, lanes=4,
+                                     interpret=interpret)
+
+    return jax.vmap(one)(q, cache["slots"], cache["slots_overflow"],
+                         cache["strips"], cache["packed_mask"],
+                         jnp.asarray(valid_per_page))
+
+
+def decode_attention_quad_ref_batched(q, cache, valid_per_page):
+    """Oracle counterpart of decode_attention_quad_batched (pure jnp)."""
+    markers_u = jnp.asarray(np.asarray(cache["markers"]).view(np.uint32))
+
+    def one(qi, slots, over, strips, ok, vp):
+        c = {"slots": slots, "slots_overflow": over, "strips": strips,
+             "markers": cache["markers"], "packed_mask": ok}
+        s, st, _, v = physical_view_quad(c, vp)
+        mk = jnp.repeat(markers_u, 4)
+        return _ref.cram_decode_attention_ref(qi, s, st, mk, v.reshape(-1),
+                                              lanes=4)
+
+    return jax.vmap(one)(q, cache["slots"], cache["slots_overflow"],
+                         cache["strips"], cache["packed_mask"],
+                         jnp.asarray(valid_per_page))
+
+
 @functools.partial(jax.jit, static_argnames=("slot_bytes", "strip_bytes"))
 def _bytes_moved(packed_mask, live, predicted, *, slot_bytes, strip_bytes):
     """Jitted reduction over (..., n) pair masks -> (raw, cram) byte totals
@@ -222,27 +388,29 @@ def _bytes_moved(packed_mask, live, predicted, *, slot_bytes, strip_bytes):
     return raw, cram
 
 
-def hbm_bytes_moved(cache, valid_per_page, predictor=None) -> dict:
+def hbm_bytes_moved(cache, valid_per_page, predictor=None,
+                    lanes: int = 2) -> dict:
     """Bandwidth accounting: bytes a decode step DMAs with/without CRAM.
 
     raw  : one slot per live page (uncompressed layout, no strips)
-    CRAM : packed pair -> ONE slot + strip serves both pages (the paper's
-           one-access-two-lines win); unpacked pair -> one slot + strip per
-           live page (the strip read is the in-band metadata overhead,
-           ~1/page of a slot); a *mispredicted* live pair — the LLP analog
-           predicted the wrong packedness — costs one extra slot DMA (the
-           paper's LLP-miss re-probe).
+    CRAM : packed group -> ONE slot + strip serves all `lanes` pages (the
+           paper's one-access-N-lines win); unpacked group -> one slot +
+           strip per live page (the strip read is the in-band metadata
+           overhead, ~1/page of a slot); a *mispredicted* live group — the
+           LLP analog predicted the wrong packedness — costs one extra
+           slot DMA (the paper's LLP-miss re-probe).
 
     `predictor` is the (…, n) predicted packed-mask; None means a perfect
-    predictor (no re-probe charge).  Leading batch axes are reduced per
-    sequence and summed into the scalar totals.
+    predictor (no re-probe charge).  `lanes` is the group width (2 for the
+    pair layout, 4 for quad).  Leading batch axes are reduced per sequence
+    and summed into the scalar totals.
     """
     slots = cache["slots"]
     page, hkv, d2 = slots.shape[-3:]
     slot_bytes = page * hkv * d2 * 2
     strip_bytes = hkv * (d2 + MARKER_LANES) * 2
     ok = jnp.asarray(cache["packed_mask"])
-    v = jnp.asarray(valid_per_page).reshape(ok.shape + (2,))
+    v = jnp.asarray(valid_per_page).reshape(ok.shape + (lanes,))
     pred = ok if predictor is None else jnp.asarray(predictor)
     raw, cram = _bytes_moved(ok, v > 0, pred, slot_bytes=slot_bytes,
                              strip_bytes=strip_bytes)

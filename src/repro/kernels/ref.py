@@ -18,57 +18,50 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-MARKER_LANES = 2  # 2 x int16 = 4 marker bytes, at the strip tail
-
-
-def slot_markers(n_slots: int, key: int = 0x5EED) -> np.ndarray:
-    """Per-slot 32-bit markers (keyed affine hash; regenerable)."""
-    idx = np.arange(n_slots, dtype=np.uint64)
-    h = (idx * np.uint64(0x9E3779B97F4A7C15) + np.uint64(key)) >> np.uint64(13)
-    return (h & np.uint64(0xFFFFFFFF)).astype(np.uint32)
-
-
-def marker_to_lanes(m: np.ndarray) -> np.ndarray:
-    """uint32 marker -> two int16 lanes (little-endian halves)."""
-    lo = (m & 0xFFFF).astype(np.uint16).view(np.int16)
-    hi = ((m >> 16) & 0xFFFF).astype(np.uint16).view(np.int16)
-    return np.stack([lo, hi], axis=-1)
+from ..compression import pagepack
+from ..compression.framing import (  # noqa: F401  (re-exported for callers)
+    MARKER_LANES,
+    marker_to_lanes,
+    slot_markers,
+)
 
 
 def pack_pair_ref(page_a, page_b):
-    """Try to pack two (page, Hkv, D2) int16 pages.
+    """Try to pack two (page, Hkv, D2) int16 pages (int8-delta codec).
 
     Returns (ok, packed (page,Hkv,D2) int16, base (Hkv, D2) int16).
     """
-    base = page_a[0]                                 # (Hkv, D2)
-    da = page_a.astype(jnp.int32) - base.astype(jnp.int32)[None]
-    db = page_b.astype(jnp.int32) - base.astype(jnp.int32)[None]
-    ok = jnp.all((da >= -128) & (da <= 127) & (db >= -128) & (db <= 127))
-    packed = ((db & 0xFF) << 8 | (da & 0xFF)).astype(jnp.uint16).view(
-        jnp.int16)
-    return ok, packed, base
+    return pagepack.pack_pair(page_a, page_b, xp=jnp)
 
 
 def unpack_pair_ref(packed, base):
     """Inverse of pack_pair_ref -> (page_a, page_b) int16."""
-    v = packed.view(jnp.uint16).astype(jnp.int32)
-    lo = (v & 0xFF).astype(jnp.int8).astype(jnp.int32)        # sign-extend
-    hi = ((v >> 8) & 0xFF).astype(jnp.int8).astype(jnp.int32)
-    a = base.astype(jnp.int32)[None] + lo
-    b = base.astype(jnp.int32)[None] + hi
-    return a.astype(jnp.int16), b.astype(jnp.int16)
+    return pagepack.unpack_pair(packed, base, xp=jnp)
 
 
-def materialize_kv_ref(slots, strips, markers):
+def pack_quad_ref(page_a, page_b, page_c, page_d):
+    """Try to pack four pages into one slot (int4-delta codec).
+
+    Returns (ok, packed (page,Hkv,D2) int16, base (Hkv, D2) int16).
+    """
+    return pagepack.pack_quad(page_a, page_b, page_c, page_d, xp=jnp)
+
+
+def unpack_quad_ref(packed, base):
+    """Inverse of pack_quad_ref -> 4-tuple of (page,Hkv,D2) int16."""
+    return pagepack.unpack_quad(packed, base, xp=jnp)
+
+
+def materialize_kv_ref(slots, strips, markers, lanes: int = 2):
     """Decode the physical cache into logical K/V pages.
 
     slots: (n_slots, page, Hkv, D2) int16; strips: (n_slots, Hkv, D2+2);
-    markers: (n_slots,) uint32 expected pack-markers.
-    Returns (pages (2*n_slots, page, Hkv, D2) int16, n_pages_per_slot).
-    A raw slot contributes its page at index 2*s (2*s+1 is zeros); a packed
-    slot contributes pages at 2*s and 2*s+1.
+    markers: (n_slots,) uint32 expected pack-markers; lanes: pages a
+    packed slot holds (2 = pair codec, 4 = quad codec).
+    Returns (pages (lanes*n_slots, page, Hkv, D2) int16, n_pages_per_slot).
+    A raw slot contributes its page at index lanes*s (the rest are zeros);
+    a packed slot contributes pages at lanes*s .. lanes*s + lanes-1.
     """
     n_slots, page, Hkv, D2 = slots.shape
     tail = strips[:, :, -MARKER_LANES:].astype(jnp.int32)
@@ -76,21 +69,25 @@ def materialize_kv_ref(slots, strips, markers):
     is_packed = jnp.all(
         tail_u == markers.astype(jnp.int32)[:, None], axis=-1)
     base = strips[:, :, :D2]
-    a, b = jax.vmap(unpack_pair_ref)(slots, base)
-    pages = jnp.zeros((2 * n_slots, page, Hkv, D2), jnp.int16)
-    pages = pages.at[0::2].set(jnp.where(is_packed[:, None, None, None],
-                                         a, slots))
-    pages = pages.at[1::2].set(jnp.where(is_packed[:, None, None, None],
-                                         b, 0))
-    n_pages = jnp.where(is_packed, 2, 1)
+    if lanes == 2:
+        decoded = jax.vmap(unpack_pair_ref)(slots, base)
+    else:
+        decoded = jax.vmap(unpack_quad_ref)(slots, base)
+    pages = jnp.zeros((lanes * n_slots, page, Hkv, D2), jnp.int16)
+    sel = is_packed[:, None, None, None]
+    for j, pg in enumerate(decoded):
+        raw = slots if j == 0 else jnp.zeros_like(slots)
+        pages = pages.at[j::lanes].set(jnp.where(sel, pg, raw))
+    n_pages = jnp.where(is_packed, lanes, 1)
     return pages, n_pages
 
 
-def cram_decode_attention_ref(q, slots, strips, markers, valid_tokens):
+def cram_decode_attention_ref(q, slots, strips, markers, valid_tokens,
+                              lanes: int = 2):
     """Oracle decode attention over the CRAM-packed cache.
 
     q: (Hq, D) bf16/f32; slots/strips/markers as above (int16 views of
-    bf16 K/V data); valid_tokens: (2*n_slots,) int32 valid count per
+    bf16 K/V data); valid_tokens: (lanes*n_slots,) int32 valid count per
     logical page (0 for absent pages).
     Returns (Hq, D) float32 attention output.
     """
@@ -98,11 +95,11 @@ def cram_decode_attention_ref(q, slots, strips, markers, valid_tokens):
     D = D2 // 2
     Hq = q.shape[0]
     G = Hq // Hkv
-    pages, _ = materialize_kv_ref(slots, strips, markers)
-    kv = pages.view(jnp.bfloat16).astype(jnp.float32)  # (P2, page, Hkv, D2)
+    pages, _ = materialize_kv_ref(slots, strips, markers, lanes)
+    kv = pages.view(jnp.bfloat16).astype(jnp.float32)  # (P, page, Hkv, D2)
     k = kv[..., :D]
     v = kv[..., D:]
-    P2 = 2 * n_slots
+    P2 = lanes * n_slots
     k = k.reshape(P2 * page, Hkv, D)
     v = v.reshape(P2 * page, Hkv, D)
     mask = (jnp.arange(page)[None, :]

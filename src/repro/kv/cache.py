@@ -1,28 +1,36 @@
-"""CRAM-KV: batched paged serving cache with marker-packed page pairs.
+"""CRAM-KV: batched paged serving cache with marker-packed page groups.
 
 The serving-side embodiment of the paper (DESIGN.md §3): logical KV pages
-pack pairwise into physical slots when BDI-compressible (kernels/bdi_pack),
-interpretation is by in-band marker (kernels/cram_attention), a
-last-compressibility predictor (the LLP analog, indexed by page-pair)
-decides whether the overflow slot needs to be fetched at all, and a
-per-sequence Dynamic-CRAM counter (§VI) turns packing off when the data
-never compresses — while *still sampling pack fitness on repacked pairs*,
-so it can re-enable when compressible traffic returns.
+pack groupwise into physical slots when delta-compressible, interpretation
+is by in-band marker (kernels/cram_attention), a last-compressibility
+predictor (the LLP analog, indexed by page group — compression.predictor's
+`observe_layout` rule) decides whether the overflow slots need to be
+fetched at all, and a per-sequence Dynamic-CRAM counter
+(compression.gate, §VI) turns packing off when the data never compresses —
+while *still sampling pack fitness on repacked groups*, so it can
+re-enable when compressible traffic returns.
 
-Cache state is a JAX pytree with a batch axis (B sequences x page pairs):
+Two registry-provided packing layouts (compression.layouts):
+  * packing="pair" — KV_PAIR: 2 pages per group, int8-delta codec (2:1);
+  * packing="quad" — KV_QUAD: 4 pages per group, int4-delta codec (4:1),
+    quad-domain markers (a slot's pair marker can never alias its quad
+    marker).
+
+Cache state is a JAX pytree with a batch axis (B sequences x page groups):
 `append` is a vectorized token scatter (no per-token host loop), and
-`repack` is incremental — a dirty-pair mask tracks the page pairs touched
-since the last pack, so a decode step re-packs O(new pairs) instead of
-rebuilding every pair (the old per-step full build made decode O(T^2) in
+`repack` is incremental — a dirty-group mask tracks the page groups touched
+since the last pack, so a decode step re-packs O(new groups) instead of
+rebuilding every group (the old per-step full build made decode O(T^2) in
 sequence length).  The incremental state is bit-identical to a from-scratch
-`kernels/ops.build_cram_cache` rebuild under the gate applied at the last
-repack (`reference_rebuild` is the oracle; tests/test_kv_cache.py pins it).
+`kernels/ops.build_cram_cache[_quad]` rebuild under the gate applied at the
+last repack (`reference_rebuild` is the oracle; tests/test_kv_cache.py pins
+it).
 
 Bandwidth accounting (per decode step, kernels/ops.hbm_bytes_moved):
   raw        : one slot DMA per live page
-  CRAM       : one slot DMA per packed PAIR (2 pages), plus the strip;
-               unpacked pairs cost one slot + strip per live page;
-               mispredicted pairs cost a second slot access (the paper's
+  CRAM       : one slot DMA per packed GROUP (2 or 4 pages), plus the
+               strip; unpacked groups cost one slot + strip per live page;
+               mispredicted groups cost a second slot access (the paper's
                LLP-miss re-probe)
 """
 
@@ -35,7 +43,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.dynamic import COUNTER_INIT, COUNTER_MAX, ENABLE_THRESHOLD
+from ..compression.framing import DOMAIN_PAIR, DOMAIN_QUAD
+from ..compression.gate import COUNTER_INIT, COUNTER_MAX, ENABLE_THRESHOLD
+from ..compression.predictor import observe_layout
 from ..kernels import ops as kops
 from ..kernels.ref import MARKER_LANES, marker_to_lanes, slot_markers
 
@@ -51,7 +61,7 @@ class KVStats:
     pack_attempts: int = 0
     pack_skipped_dynamic: int = 0
     pack_calls: int = 0
-    pack_pairs_processed: int = 0  # sequences x pairs run through repack
+    pack_pairs_processed: int = 0  # sequences x groups run through repack
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -63,8 +73,8 @@ def _scatter_tokens(pages, kv, start):
 @functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3))
 def _scatter_window(slots, over, strips, mask, idx, slots_w, over_w,
                     strips_w, lay):
-    """One fused, donated update of the physical state at pair `idx` —
-    the per-step write stays O(new pairs), no five-way full-buffer copy."""
+    """One fused, donated update of the physical state at group `idx` —
+    the per-step write stays O(new groups), no five-way full-buffer copy."""
     return (slots.at[:, idx].set(slots_w),
             over.at[:, idx].set(over_w),
             strips.at[:, idx].set(strips_w),
@@ -76,27 +86,34 @@ class CRAMKVCache:
 
     def __init__(self, max_pages: int, page: int, n_kv: int, head_dim: int,
                  *, batch: int = 1, policy: str = "dynamic",
-                 key: int = 0x5EED, counter_init: int = COUNTER_INIT,
+                 packing: str = "pair", key: int = 0x5EED,
+                 counter_init: int = COUNTER_INIT,
                  interpret: bool | None = None):
-        assert max_pages % 2 == 0
         assert policy in ("dynamic", "static", "off")
+        assert packing in ("pair", "quad")
+        self.packing = packing
+        self.group_lanes = 2 if packing == "pair" else 4
+        assert max_pages % self.group_lanes == 0
         self.page, self.n_kv, self.d = page, n_kv, head_dim
         self.d2 = 2 * head_dim
         self.max_pages = max_pages
-        self.n_pairs = max_pages // 2
+        self.n_groups = max_pages // self.group_lanes
         self.batch = batch
         self.policy = policy
         self.key = key
         self.interpret = (kops.default_interpret() if interpret is None
                           else interpret)
         self.tokens = 0
-        markers = slot_markers(self.n_pairs, key)
+        domain = DOMAIN_PAIR if packing == "pair" else DOMAIN_QUAD
+        markers = slot_markers(self.n_groups, key, domain=domain)
         self._marker_lanes = jnp.asarray(marker_to_lanes(markers))
-        b, n, p = batch, self.n_pairs, page
+        b, n, p = batch, self.n_groups, page
+        over_shape = ((b, n, p, n_kv, self.d2) if packing == "pair"
+                      else (b, n, self.group_lanes - 1, p, n_kv, self.d2))
         self.state = {
             "pages": jnp.zeros((b, max_pages * p, n_kv, self.d2), jnp.int16),
             "slots": jnp.zeros((b, n, p, n_kv, self.d2), jnp.int16),
-            "slots_overflow": jnp.zeros((b, n, p, n_kv, self.d2), jnp.int16),
+            "slots_overflow": jnp.zeros(over_shape, jnp.int16),
             "strips": jnp.zeros((b, n, n_kv, self.d2 + MARKER_LANES),
                                 jnp.int16),
             "packed_mask": jnp.zeros((b, n), bool),
@@ -104,17 +121,22 @@ class CRAMKVCache:
             "counter": jnp.full((b,), counter_init, jnp.int32),
             "markers": jnp.asarray(markers.view(np.int32)),
         }
-        # dirty-pair mask: appends are uniform across the batch, so one
+        # dirty-group mask: appends are uniform across the batch, so one
         # host-side mask covers every sequence; per-sequence gate flips
         # mark the whole active prefix dirty (rare — full re-layout).
-        self._dirty = np.zeros(self.n_pairs, bool)
-        # pairs with data not yet fed to the §VI counter: a gate flip
+        self._dirty = np.zeros(self.n_groups, bool)
+        # groups with data not yet fed to the §VI counter: a gate flip
         # re-dirties the layout but must NOT re-count historical fitness
         # (that would re-apply the whole prefix's fit/unfit balance and
         # could slam the counter straight back across the threshold).
-        self._uncounted = np.zeros(self.n_pairs, bool)
+        self._uncounted = np.zeros(self.n_groups, bool)
         self._last_enabled = np.full(batch, policy != "off", bool)
         self.stats = KVStats()
+
+    # legacy pair-era aliases (the default packing is the 2:1 pair layout)
+    @property
+    def n_pairs(self) -> int:
+        return self.n_groups
 
     # ----------------------------------------------------------- appends
     def append(self, k, v):
@@ -131,7 +153,7 @@ class CRAMKVCache:
         assert self.tokens + t <= self.max_pages * self.page, "cache full"
         self.state["pages"] = _scatter_tokens(
             self.state["pages"], kv, self.tokens)
-        span = 2 * self.page                          # tokens per pair
+        span = self.group_lanes * self.page           # tokens per group
         lo = self.tokens // span
         hi = (self.tokens + t - 1) // span
         self._dirty[lo:hi + 1] = True
@@ -143,8 +165,12 @@ class CRAMKVCache:
         return (self.tokens + self.page - 1) // self.page
 
     @property
+    def n_active_groups(self) -> int:
+        return -(-self.n_pages // self.group_lanes)
+
+    @property
     def n_active_pairs(self) -> int:
-        return (self.n_pages + 1) // 2
+        return self.n_active_groups
 
     def valid_per_page(self) -> np.ndarray:
         """(B, max_pages) int32 valid tokens per logical page."""
@@ -166,25 +192,40 @@ class CRAMKVCache:
             return np.ones(self.batch, bool)
         return np.asarray(self.state["counter"]) >= ENABLE_THRESHOLD
 
+    def _pack_window(self, win, idx_j, enabled):
+        """Dispatch the dirty window to the layout's pack/raw kernels.
+
+        win: (B, W, lanes, page, n_kv, d2) gathered dirty groups."""
+        if self.packing == "pair":
+            a, b = win[:, :, 0], win[:, :, 1]
+            if self.policy == "off":
+                return kops.raw_window(a, b)
+            return kops.pack_window(a, b, self._marker_lanes[idx_j],
+                                    jnp.asarray(enabled),
+                                    interpret=self.interpret)
+        if self.policy == "off":
+            return kops.raw_quad_window(win)
+        return kops.pack_quad_window(win, self._marker_lanes[idx_j],
+                                     jnp.asarray(enabled),
+                                     interpret=self.interpret)
+
     def repack(self):
-        """Incrementally re-pack the dirty pairs (no-op when clean)."""
+        """Incrementally re-pack the dirty groups (no-op when clean)."""
         idx = np.nonzero(self._dirty)[0]
         if idx.size == 0:
             return
         w = int(idx.size)
         enabled = self.enabled()
         idx_j = jnp.asarray(idx, jnp.int32)
-        pairs = self.pages_view().reshape(
-            self.batch, self.n_pairs, 2, self.page, self.n_kv, self.d2)
-        win = pairs[:, idx_j]                         # (B, W, 2, page, ...)
-        a, b = win[:, :, 0], win[:, :, 1]
+        groups = self.pages_view().reshape(
+            self.batch, self.n_groups, self.group_lanes, self.page,
+            self.n_kv, self.d2)
+        win = groups[:, idx_j]                # (B, W, lanes, page, ...)
+        slots_w, over_w, strips_w, lay, fit = self._pack_window(
+            win, idx_j, enabled)
         if self.policy == "off":
-            slots_w, over_w, strips_w, lay, fit = kops.raw_window(a, b)
             self.stats.pack_skipped_dynamic += self.batch * w
         else:
-            slots_w, over_w, strips_w, lay, fit = kops.pack_window(
-                a, b, self._marker_lanes[idx_j], jnp.asarray(enabled),
-                interpret=self.interpret)
             self.stats.pack_attempts += self.batch * w
             self.stats.pack_skipped_dynamic += int((~enabled).sum()) * w
         st = self.state
@@ -198,12 +239,12 @@ class CRAMKVCache:
         self.stats.packed_pairs += lay_n
         self.stats.raw_pairs += self.batch * w - lay_n
         # §VI cost/benefit: fitness of *complete, not-yet-counted* repacked
-        # pairs drives the per-sequence counter — measured even while
+        # groups drives the per-sequence counter — measured even while
         # disabled (the zeroed layout mask no longer feeds the update), so
         # the gate can re-enable once compressible traffic returns.  Each
-        # pair is counted exactly once, when it completes: gate-flip
-        # re-dirt re-lays pairs out but never re-counts their fitness.
-        complete = (idx + 1) * 2 * self.page <= self.tokens
+        # group is counted exactly once, when it completes: gate-flip
+        # re-dirt re-lays groups out but never re-counts their fitness.
+        complete = (idx + 1) * self.group_lanes * self.page <= self.tokens
         if self.policy == "dynamic":
             countable = jnp.asarray(complete & self._uncounted[idx])
             fit_n = (fit & countable[None, :]).sum(1)
@@ -219,24 +260,30 @@ class CRAMKVCache:
             # gate changed for some sequence: its whole layout must be
             # rebuilt under the new gate at the next repack (keeps the
             # incremental state equal to a full rebuild).
-            self._dirty[: self.n_active_pairs] = True
+            self._dirty[: self.n_active_groups] = True
 
     def reference_rebuild(self) -> dict:
-        """From-scratch full pack of the active pairs, per sequence, under
+        """From-scratch full pack of the active groups, per sequence, under
         the gate applied at the last repack — the bit-exactness oracle for
         the incremental path (compare with `active_state`)."""
-        n2 = 2 * self.n_active_pairs
+        lanes = self.group_lanes
+        n2 = lanes * self.n_active_groups
         pages = self.pages_view()[:, :n2]
+        build = (kops.build_cram_cache if self.packing == "pair"
+                 else kops.build_cram_cache_quad)
         out = []
         for bi in range(self.batch):
             if self._last_enabled[bi]:
-                c = kops.build_cram_cache(pages[bi], key=self.key,
-                                          interpret=self.interpret)
+                c = build(pages[bi], key=self.key, interpret=self.interpret)
             else:
-                n = n2 // 2
+                n = n2 // lanes
+                grouped = pages[bi].reshape(
+                    n, lanes, self.page, self.n_kv, self.d2)
+                over = (grouped[:, 1] if self.packing == "pair"
+                        else grouped[:, 1:])
                 c = {
-                    "slots": pages[bi, 0::2],
-                    "slots_overflow": pages[bi, 1::2],
+                    "slots": grouped[:, 0],
+                    "slots_overflow": over,
                     "strips": jnp.zeros(
                         (n, self.n_kv, self.d2 + MARKER_LANES), jnp.int16),
                     "markers": self.state["markers"][:n],
@@ -245,28 +292,20 @@ class CRAMKVCache:
             out.append(c)
         keys = ("slots", "slots_overflow", "strips", "packed_mask")
         ref = {k: jnp.stack([c[k] for c in out]) for k in keys}
-        ref["markers"] = self.state["markers"][: n2 // 2]
+        ref["markers"] = self.state["markers"][: n2 // lanes]
         return ref
 
     def active_state(self) -> dict:
-        """The physical cache restricted to the active pair prefix."""
-        n = self.n_active_pairs
-        st = self.state
-        return {
-            "slots": st["slots"][:, :n],
-            "slots_overflow": st["slots_overflow"][:, :n],
-            "strips": st["strips"][:, :n],
-            "packed_mask": st["packed_mask"][:, :n],
-            "markers": st["markers"][:n],
-        }
+        """The physical cache restricted to the active group prefix."""
+        return self._kernel_cache(self.n_active_groups)
 
     # -------------------------------------------------------------- attend
     def _active_bucket(self) -> int:
-        """Active pair count rounded up to a power of two: the decode grid
+        """Active group count rounded up to a power of two: the decode grid
         walks O(sequence) slots, not O(capacity), while the pow2 bucketing
         bounds retraces to log2(capacity) shapes as the sequence grows."""
-        n = max(1, self.n_active_pairs)
-        return min(1 << (n - 1).bit_length(), self.n_pairs)
+        n = max(1, self.n_active_groups)
+        return min(1 << (n - 1).bit_length(), self.n_groups)
 
     def _kernel_cache(self, n: int) -> dict:
         st = self.state
@@ -280,28 +319,31 @@ class CRAMKVCache:
         """One decode step's bandwidth accounting + LLP predictor update.
 
         Charges the CRAM byte model (incl. the mispredict re-probe against
-        the pair-indexed predictor), tallies predictor hits/misses on live
-        pairs, then lets the predictor observe the actual layout.
+        the group-indexed predictor), tallies predictor hits/misses on live
+        groups, then lets the predictor observe the actual layout.
         """
         self.repack()
         return self._account()
 
     def _account(self) -> dict:
         st = self.state
+        lanes = self.group_lanes
         n = self._active_bucket()
-        valid = self.valid_per_page()[:, : 2 * n]
+        valid = self.valid_per_page()[:, : lanes * n]
         bw = kops.hbm_bytes_moved(self._kernel_cache(n), valid,
-                                  predictor=st["predictor"][:, :n])
-        live = valid.reshape(self.batch, n, 2).sum(-1) > 0
+                                  predictor=st["predictor"][:, :n],
+                                  lanes=lanes)
+        live = valid.reshape(self.batch, n, lanes).sum(-1) > 0
         mis = (np.asarray(st["predictor"][:, :n])
                != np.asarray(st["packed_mask"][:, :n]))
         self.stats.predictor_misses += int((mis & live).sum())
         self.stats.predictor_hits += int((~mis & live).sum())
         self.stats.raw_bytes += bw["raw_bytes"]
         self.stats.cram_bytes += bw["cram_bytes"]
-        # copy, not alias: packed_mask's buffer is donated at the next
-        # repack scatter and the predictor must survive it
-        st["predictor"] = jnp.copy(st["packed_mask"])
+        # last-layout predictor observation (copy, not alias: packed_mask's
+        # buffer is donated at the next repack scatter and the predictor
+        # must survive it)
+        st["predictor"] = observe_layout(st["packed_mask"])
         return bw
 
     def attend(self, q, *, account: bool = True):
@@ -313,8 +355,11 @@ class CRAMKVCache:
         if q.ndim == 2:
             q = q[None]
         n = self._active_bucket()
-        out = kops.decode_attention_batched(
-            q, self._kernel_cache(n), self.valid_per_page()[:, : 2 * n],
+        decode = (kops.decode_attention_batched if self.packing == "pair"
+                  else kops.decode_attention_quad_batched)
+        out = decode(
+            q, self._kernel_cache(n),
+            self.valid_per_page()[:, : self.group_lanes * n],
             interpret=self.interpret)
         if account:
             self._account()   # bytes for the layout the kernel walked
@@ -327,8 +372,11 @@ class CRAMKVCache:
         if q.ndim == 2:
             q = q[None]
         n = self._active_bucket()
-        return kops.decode_attention_ref_batched(
-            q, self._kernel_cache(n), self.valid_per_page()[:, : 2 * n])
+        decode = (kops.decode_attention_ref_batched
+                  if self.packing == "pair"
+                  else kops.decode_attention_quad_ref_batched)
+        return decode(q, self._kernel_cache(n),
+                      self.valid_per_page()[:, : self.group_lanes * n])
 
     def saving(self) -> float:
         return 1.0 - self.stats.cram_bytes / max(self.stats.raw_bytes, 1)

@@ -30,7 +30,7 @@ import jax
 
 from .. import configs
 from ..models import SHAPES_BY_NAME, STANDARD_SHAPES, count_params, active_params
-from ..runtime.sharding import RuleSet, activation_sharding
+from ..runtime.sharding import activation_sharding
 from .hlo_analysis import analyze_compiled
 from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS, make_production_mesh, mesh_chip_count
 from .steps import build_cell

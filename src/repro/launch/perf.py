@@ -12,7 +12,7 @@ import argparse
 import json
 from pathlib import Path
 
-from .dryrun import OUT_DIR, run_cell
+from .dryrun import run_cell
 
 LOG = Path(__file__).resolve().parents[3] / "experiments" / "perf_log.json"
 

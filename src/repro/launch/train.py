@@ -23,7 +23,7 @@ import numpy as np
 from .. import configs
 from ..data import DataConfig, make_batch_iterator
 from ..models import ModelConfig, build, count_params, smoke_config
-from ..optim.adamw import TrainState, adamw_init, make_train_step
+from ..optim.adamw import adamw_init, make_train_step
 from ..runtime.ft import LoopConfig, SimulatedFault, run_with_restarts
 
 PRESETS = {

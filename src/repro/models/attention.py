@@ -15,8 +15,6 @@ optimization variant (see launch/dryrun.py --variant flags).
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
@@ -119,8 +117,8 @@ def blockwise_attention(
     return out.astype(q.dtype)
 
 
-def decode_attention(q, k_cache, v_cache, length, k_chunk: int = 2048,
-                     unroll: bool = False):
+def chunked_decode_attention(q, k_cache, v_cache, length,
+                             k_chunk: int = 2048, unroll: bool = False):
     """Single-token decode: q (B,Hq,D) against cache (B,T,Hkv,D).
 
     `length` is the number of valid cache positions (scalar or (B,)).
@@ -201,7 +199,7 @@ def attention_apply(
         kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, cache_index, 1)
         vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, cache_index, 1)
         new_cache = {"k": kc, "v": vc}
-        out = decode_attention(
+        out = chunked_decode_attention(
             q[:, 0], kc, vc, length=cache_index + S,
             k_chunk=cfg.attn_k_chunk, unroll=cfg.unroll,
         )[:, None]

@@ -154,7 +154,7 @@ def whisper_prefill_cross(params, cfg, enc_out, cache):
 
 def whisper_decode_step(params, cfg: ModelConfig, token, cache, index):
     """token (B,1); returns (logits (B,V), new_cache)."""
-    from .attention import decode_attention
+    from .attention import chunked_decode_attention
 
     B = token.shape[0]
     hd, Hkv, Hq = cfg.hd, cfg.n_kv_heads, cfg.n_heads
@@ -170,14 +170,16 @@ def whisper_decode_step(params, cfg: ModelConfig, token, cache, index):
         v = (h @ p["self"]["wv"].astype(x.dtype)).reshape(B, 1, Hkv, hd)
         kc = jax.lax.dynamic_update_slice_in_dim(kc, k, index, 1)
         vc = jax.lax.dynamic_update_slice_in_dim(vc, v, index, 1)
-        a = decode_attention(q[:, 0], kc, vc, length=index + 1,
-                             k_chunk=cfg.attn_k_chunk, unroll=cfg.unroll)
+        a = chunked_decode_attention(
+            q[:, 0], kc, vc, length=index + 1,
+            k_chunk=cfg.attn_k_chunk, unroll=cfg.unroll)
         x = x + a.reshape(B, 1, Hq * hd) @ p["self"]["wo"].astype(x.dtype)
         # cross attention against the precomputed encoder KV
         h = _ln(x, p["ln2"])
         q = (h @ p["cross"]["wq"].astype(x.dtype)).reshape(B, 1, Hq, hd)
-        a = decode_attention(q[:, 0], xk, xv, length=xk.shape[1],
-                             k_chunk=cfg.attn_k_chunk, unroll=cfg.unroll)
+        a = chunked_decode_attention(
+            q[:, 0], xk, xv, length=xk.shape[1],
+            k_chunk=cfg.attn_k_chunk, unroll=cfg.unroll)
         x = x + a.reshape(B, 1, Hq * hd) @ p["cross"]["wo"].astype(x.dtype)
         x = x + mlp_apply(p["mlp"], _ln(x, p["ln3"]), cfg.mlp_act)
         return x, (kc, vc)

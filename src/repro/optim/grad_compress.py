@@ -1,13 +1,14 @@
 """Dynamic compressed gradient collectives (the paper's §VI applied to DP).
 
 int8 per-tensor quantization with error feedback around an explicit psum
-(shard_map path).  A Dynamic-CRAM-style saturating counter gates the
-mechanism at runtime: benefit = bytes saved on the wire, cost = quality
-signal (relative quantization error) — if the gradient distribution makes
-int8 too lossy, compression turns itself off, exactly like the paper's
-compression gate.  Lossless CRAM/BDI line packing is also measured on the
-gradient bytes (reported by benchmarks; real bf16 gradients rarely pack,
-which is itself a finding consistent with Fig. 4's data-dependence).
+(shard_map path).  THE Dynamic-CRAM saturating counter
+(repro.compression.gate) gates the mechanism at runtime: benefit = bytes
+saved on the wire, cost = quality signal (relative quantization error) — if
+the gradient distribution makes int8 too lossy, compression turns itself
+off, exactly like the paper's compression gate.  Lossless CRAM/BDI line
+packing is also measured on the gradient bytes (reported by benchmarks;
+real bf16 gradients rarely pack, which is itself a finding consistent with
+Fig. 4's data-dependence).
 """
 
 from __future__ import annotations
@@ -15,8 +16,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-COUNTER_MAX = (1 << 12) - 1
-ENABLE = 1 << 11
+from ..compression.gate import (  # noqa: F401  (COUNTER_MAX re-exported)
+    COUNTER_MAX,
+    ENABLE_THRESHOLD,
+    counter_step,
+)
+
+ENABLE = ENABLE_THRESHOLD  # legacy alias
 
 
 def quantize_int8(g):
@@ -59,11 +65,11 @@ def gate_update(counter, rel_err, *, err_budget: float = 0.05,
     """Saturating-counter gate: wire-bytes saved vs quality cost."""
     benefit = jnp.int32(bytes_saving * 16)
     cost = jnp.where(rel_err > err_budget, jnp.int32(64), jnp.int32(0))
-    return jnp.clip(counter + benefit - cost, 0, COUNTER_MAX)
+    return counter_step(counter, cost, benefit, jnp)
 
 
 def gate_enabled(counter):
-    return counter >= ENABLE
+    return counter >= ENABLE_THRESHOLD
 
 
 def make_dp_compressed_step(model, mesh, *, lr=1e-3):
@@ -74,8 +80,6 @@ def make_dp_compressed_step(model, mesh, *, lr=1e-3):
     grad-compression benchmark; the pjit path keeps XLA-inserted
     collectives.
     """
-    from functools import partial
-
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 

@@ -5,7 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.models.attention import blockwise_attention, decode_attention
+from repro.models.attention import (blockwise_attention,
+                                    chunked_decode_attention)
 
 
 def naive_attention(q, k, v, causal, kv_length=None):
@@ -61,7 +62,7 @@ def test_decode_attention_matches_masked_naive():
     k = jax.random.normal(jax.random.key(7), (B, T, Hkv, D))
     v = jax.random.normal(jax.random.key(8), (B, T, Hkv, D))
     length = 57
-    out = decode_attention(q, k, v, length=length, k_chunk=32)
+    out = chunked_decode_attention(q, k, v, length=length, k_chunk=32)
     ref = naive_attention(q[:, None], k, v, causal=False,
                           kv_length=length)[:, 0]
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),

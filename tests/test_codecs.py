@@ -1,10 +1,13 @@
-"""FPC / BDI / hybrid codec properties: exact round-trips + size laws."""
+"""FPC / BDI / hybrid codec properties: exact round-trips + size laws +
+numpy/jax.numpy backend parity (property-based; see test_codec_registry.py
+for the deterministic cross-backend suite)."""
 
 import numpy as np
 import pytest
 from hypothesis import given, strategies as st
 
-from repro.core import bdi, compress, fpc
+from repro.compression import bdi, fpc
+from repro.compression import hybrid as compress
 
 LINE = 64
 
@@ -117,8 +120,71 @@ def test_jnp_size_path_matches_numpy():
     assert np.array_equal(np.asarray(nb[0]), np.asarray(jb[0]))
 
 
+# ----------------------------------------------------- xp-parity (property)
+# Adversarial word menu: each 32-bit word is drawn to sit ON a pattern/size
+# boundary (sign flips, exact range edges, zero-run splice points), the
+# places where a vectorized size law and a bit-exact packer most easily
+# disagree.
+
+_WORD_MENU = (
+    0, 1, 7, 8, -8 & 0xFFFFFFFF, -9 & 0xFFFFFFFF,           # se4 edges
+    127, 128, -128 & 0xFFFFFFFF, -129 & 0xFFFFFFFF,         # se8 edges
+    32767, 32768, -32768 & 0xFFFFFFFF, -32769 & 0xFFFFFFFF,  # se16 edges
+    0x00010000, 0xFFFF0000, 0x7FFF0000,                     # pad16
+    0x00800080, 0x7F807F80, 0x0080FF80,                     # half_se8 edges
+    0xABABABAB, 0x01010101,                                 # repeated bytes
+    0xDEADBEEF, 0x80000000, 0x7FFFFFFF,                     # raw
+)
+
+
+def adversarial_lines():
+    """Lines assembled word-by-word from boundary values + random words."""
+    word = st.one_of(st.sampled_from(_WORD_MENU),
+                     st.integers(0, 2**32 - 1))
+    return st.lists(word, min_size=16, max_size=16).map(
+        lambda ws: np.asarray(ws, dtype="<u4").view(np.uint8).copy())
+
+
+@given(adversarial_lines())
+def test_xp_parity_sizes_vs_exact_pack(line):
+    """fpc_size_bits / compressed_sizes agree between the numpy and
+    jax.numpy backends AND with the exact bit-level packers."""
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    arr = line.reshape(1, LINE)
+    words = arr.view("<u4").reshape(1, 16)
+    np_bits = int(fpc.fpc_size_bits(words)[0])
+    np_hybrid = int(compress.compressed_sizes(arr)[0])
+    with enable_x64():
+        j_bits = int(np.asarray(
+            fpc.fpc_size_bits(jnp.asarray(words), xp=jnp))[0])
+        j_hybrid = int(np.asarray(
+            compress.compressed_sizes(jnp.asarray(arr), xp=jnp))[0])
+    assert np_bits == j_bits
+    assert np_hybrid == j_hybrid
+    # the exact packers pin the vectorized size laws
+    assert len(fpc.fpc_pack(line)) == (np_bits + 7) // 8
+    assert len(compress.compress_line(line)) == np_hybrid
+    assert np.array_equal(fpc.fpc_unpack(fpc.fpc_pack(line)), line)
+
+
+@given(adversarial_lines())
+def test_xp_parity_bdi_sizes(line):
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    arr = line.reshape(1, LINE)
+    ns, nm = bdi.bdi_sizes(arr)
+    with enable_x64():
+        js, jm = bdi.bdi_sizes(jnp.asarray(arr), xp=jnp)
+    assert int(ns[0]) == int(js[0]) and int(nm[0]) == int(jm[0])
+    payload = bdi.bdi_pack_batch(arr, int(nm[0]))
+    assert payload.shape[1] == int(ns[0])
+
+
 def test_group_packing():
-    from repro.core.marker import MarkerSpec
+    from repro.compression.marker import MarkerSpec
 
     spec = MarkerSpec()
     lines = [np.zeros(LINE, np.uint8),

@@ -73,19 +73,19 @@ def test_pjit_train_step_dp_tp():
 def test_sp_decode_kv_sharded_matches_single_device():
     out = run_py("""
         from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-        from repro.models.attention import decode_attention
+        from repro.models.attention import chunked_decode_attention
 
         mesh = jax.make_mesh((8, 1), ("data", "model"))
         B, T, Hq, Hkv, D = 2, 256, 4, 2, 16
         q = jax.random.normal(jax.random.key(0), (B, Hq, D))
         k = jax.random.normal(jax.random.key(1), (B, T, Hkv, D))
         v = jax.random.normal(jax.random.key(2), (B, T, Hkv, D))
-        ref = decode_attention(q, k, v, length=199, k_chunk=32)
+        ref = chunked_decode_attention(q, k, v, length=199, k_chunk=32)
         kv_shard = NamedSharding(mesh, P(None, "data"))
         k_s = jax.device_put(k, kv_shard)
         v_s = jax.device_put(v, kv_shard)
         with mesh:
-            out = jax.jit(lambda q, k, v: decode_attention(
+            out = jax.jit(lambda q, k, v: chunked_decode_attention(
                 q, k, v, length=199, k_chunk=32))(q, k_s, v_s)
         err = float(jnp.max(jnp.abs(out - ref)))
         assert err < 1e-4, err

@@ -1,21 +1,22 @@
 """Batched incremental CRAM-KV cache: bit-exactness vs full rebuild,
-dynamic-gate re-enable, mispredict bandwidth charges, and the no-pack
-guarantee of `policy="off"` (ISSUE 3 regression suite)."""
+dynamic-gate re-enable, mispredict bandwidth charges, the no-pack
+guarantee of `policy="off"` (ISSUE 3 regression suite), and the
+registry-provided 4:1 quad packing layout (ISSUE 4)."""
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.dynamic import ENABLE_THRESHOLD
+from repro.compression.gate import ENABLE_THRESHOLD
 from repro.kernels import ops
 from repro.kv import CRAMKVCache, synthetic_kv_stream
 
 PAGE, HKV, HD = 8, 1, 16
 
 
-def _stream(rng, batch, n_tokens, compressible=True):
+def _stream(rng, batch, n_tokens, compressible=True, scale=2e-3):
     return synthetic_kv_stream(rng, batch, n_tokens, HKV, HD,
-                               compressible=compressible)
+                               compressible=compressible, scale=scale)
 
 
 def _assert_state_equals_rebuild(cache):
@@ -191,6 +192,100 @@ def test_cache_charges_reprobe_on_layout_change():
     bw = cache.account_step()                # predictor has learned
     assert bw["cram_bytes"] == slot + strip
     assert cache.stats.predictor_misses == 1
+
+
+# ------------------------------------------------------------- quad layout
+def _quad_cache(batch=2, policy="static", max_pages=16, **kw):
+    return CRAMKVCache(max_pages=max_pages, page=PAGE, n_kv=HKV, head_dim=HD,
+                       batch=batch, policy=policy, packing="quad", **kw)
+
+
+@pytest.mark.parametrize("policy", ["static", "dynamic", "off"])
+def test_quad_incremental_matches_full_rebuild(policy):
+    """The int4-delta/KV_QUAD registry policy keeps the same incremental ==
+    from-scratch-rebuild contract as the pair layout."""
+    rng = np.random.default_rng(42)
+    cache = _quad_cache(policy=policy)
+    pattern = (4 * PAGE, 3, 1, 4 * PAGE - 4, PAGE)
+    for i, t in enumerate(pattern):
+        # alternate compressibility so both layouts appear
+        cache.append(*_stream(rng, 2, t, compressible=(i % 2 == 0),
+                              scale=2e-4))
+        cache.repack()
+        _assert_state_equals_rebuild(cache)
+
+
+def test_quad_packs_and_attends_end_to_end():
+    """Compressible traffic quad-packs (4 pages -> ONE slot) and the fused
+    decode kernel walks the packed layout correctly."""
+    rng = np.random.default_rng(9)
+    cache = _quad_cache(batch=2)
+    cache.append(*_stream(rng, 2, 8 * PAGE, scale=2e-4))
+    cache.repack()
+    pm = np.asarray(cache.state["packed_mask"])
+    assert pm[:, :2].all(), "compressible quads must pack 4:1"
+    q = jnp.asarray(rng.standard_normal((2, 2, HD)), jnp.float32)
+    out = cache.attend(q)
+    ref = cache.attend_ref(q)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-2, rtol=2e-2)
+    # 4:1 bandwidth: a packed quad group moves one slot + strip instead of
+    # four raw slots
+    slot = PAGE * HKV * (2 * HD) * 2
+    strip = HKV * (2 * HD + 2) * 2
+    bw = cache.account_step()
+    assert bw["cram_bytes"] == 2 * 2 * (slot + strip)   # B=2 x 2 groups
+    assert bw["raw_bytes"] == 2 * 8 * slot              # B=2 x 8 live pages
+    # cumulative saving includes the first step's predictor-miss re-probes
+    # (the LLP lag), still well above the 2:1 pair ceiling of ~0.5
+    assert cache.saving() > 0.55
+
+
+def test_quad_raw_layout_attends_correctly():
+    """Incompressible quads stay raw (4 slots/group) and still decode."""
+    rng = np.random.default_rng(10)
+    cache = _quad_cache(batch=1)
+    cache.append(*_stream(rng, 1, 5 * PAGE + 3, compressible=False))
+    cache.repack()
+    assert not np.asarray(cache.state["packed_mask"]).any()
+    q = jnp.asarray(rng.standard_normal((1, 2, HD)), jnp.float32)
+    np.testing.assert_allclose(np.asarray(cache.attend(q)),
+                               np.asarray(cache.attend_ref(q)),
+                               atol=2e-2, rtol=2e-2)
+    _assert_state_equals_rebuild(cache)
+
+
+def test_quad_dynamic_gate_disables_on_incompressible():
+    rng = np.random.default_rng(11)
+    cache = _quad_cache(batch=1, policy="dynamic", max_pages=32,
+                        counter_init=ENABLE_THRESHOLD + 2)
+    for _ in range(4):
+        cache.append(*_stream(rng, 1, 4 * PAGE, compressible=False))
+        cache.repack()
+    assert not cache.enabled().any()
+    assert np.asarray(cache.state["packed_mask"]).sum() == 0
+    _assert_state_equals_rebuild(cache)
+
+
+def test_quad_hbm_bytes_pinned():
+    """Exact quad byte counts per (packed, predicted, live) combination."""
+    n, page, hkv, d2 = 3, 4, 1, 8
+    slot = page * hkv * d2 * 2                # 64
+    strip = hkv * (d2 + 2) * 2                # 20
+    cache = {
+        "slots": jnp.zeros((n, page, hkv, d2), jnp.int16),
+        "packed_mask": jnp.asarray([True, True, False]),
+    }
+    predictor = jnp.asarray([True, False, False])
+    # group 0: packed, 4 live; group 1: packed, mispredicted, 4 live;
+    # group 2: raw, 3 live pages
+    valid = jnp.asarray([page] * 4 + [page] * 4 + [page] * 3 + [0],
+                        jnp.int32)
+    bw = ops.hbm_bytes_moved(cache, valid, predictor=predictor, lanes=4)
+    assert bw["raw_bytes"] == 11 * slot
+    assert bw["cram_bytes"] == ((slot + strip)
+                                + (slot + strip) + slot
+                                + 3 * (slot + strip))
 
 
 # ----------------------------------------------------------------- off path
