@@ -3,12 +3,14 @@
 Sweep mode (the fast path — ONE batched jitted dispatch per section):
 
     python benchmarks/run.py --sweep all            # memsim + compress + serve
-                                                    #   + codecs
+                                                    #   + codecs + policy
     python benchmarks/run.py --sweep memsim         # Fig. 12/15/16/18, Table V
     python benchmarks/run.py --sweep compress       # Pallas image scan (Fig. 4)
     python benchmarks/run.py --sweep serve          # CRAM-KV decode curves
     python benchmarks/run.py --sweep codecs         # codec x layout registry
                                                     #   table
+    python benchmarks/run.py --sweep policy         # AutoTuner chosen-vs-best-
+                                                    #   static (no-slowdown)
 
 Sweep flags:
     --events N        trace length per workload   (default $REPRO_BENCH_EVENTS
@@ -48,8 +50,10 @@ The consolidated JSON report written by --sweep has this schema:
         "lines_scanned", "wall_s"
       },
       "serve": {                        # present for --sweep serve/all
-        "curves":    [per (policy x batch x compressibility) decode curve:
-                      seq_len / pack_pairs_per_step / bytes per step...],
+        "curves":    [per (packing x policy x batch x compressibility)
+                      decode curve: seq_len / pack_pairs_per_step / bytes
+                      per step / fit_rate / pages_per_slot...],
+        "quad":      {curve: {int4_fit_rate, pages_per_slot, saving}},
         "pack_work": {"mean_pack_pairs_per_step", "mean_total_pairs",
                       "full_rebuild_work_ratio"},   # incremental-repack win
         "static_compressible_saving",
@@ -62,6 +66,16 @@ The consolidated JSON report written by --sweep has this schema:
         "kv_pages": {stream: {page_codec: {fit_rate, layout,
                       pages_per_slot}}},
         "tensors":  {tensor: {codec: ratio}}       # ckpt/gradient bytes
+      },
+      "policy": {                       # present for --sweep policy/all
+        "kv":         {stream: {chosen, bytes: {off/pair/quad/auto},
+                       best_static, regret_vs_best,
+                       auto_not_worse_than_off}},
+        "checkpoint": {tensor: {chosen, stored: {codec: bytes, auto},
+                       best_static, auto_not_worse_than_off}},
+        "grad":       {profile: {chosen, rel_err, wire_bytes,
+                       auto_not_worse_than_off}},
+        "guarantee":  bool              # auto never worse than static-off
       }
     }
 
@@ -86,6 +100,7 @@ for _p in (str(_ROOT), str(_ROOT / "src")):
 
 MODULES = [
     "codec_sweep",
+    "policy_sweep",
     "fig4_compressibility",
     "fig12_speedup",
     "fig14_llp",
@@ -167,6 +182,13 @@ def _sweep_codecs(args) -> dict:
     return sweep(workloads=workloads)
 
 
+def _sweep_policy(args) -> dict:
+    """AutoTuner chosen-vs-best-static audit (the no-slowdown guarantee)."""
+    from benchmarks.policy_sweep import sweep
+
+    return sweep(decode_steps=args.serve_steps)
+
+
 def run_sweep(args) -> None:
     # --events/--workloads/--schemes only shape the memsim section; the
     # compress scan always covers the fixed Fig. 4 corpus, so record the
@@ -215,6 +237,22 @@ def run_sweep(args) -> None:
               f"(full rebuild would be {pw['mean_total_pairs']:.1f}), "
               f"static saving={report['serve']['static_compressible_saving']:.3f}, "
               f"incr==rebuild={pr['incremental_equals_rebuild']}")
+        q = report["serve"]["quad"]
+        if q:
+            print("serve quad:",
+                  {k: f"pps={d['pages_per_slot']:.2f}"
+                      f"/fit={d['int4_fit_rate']:.2f}"
+                   for k, d in q.items()})
+    if args.sweep in ("policy", "all"):
+        report["policy"] = _sweep_policy(args)
+        pol = report["policy"]
+        chosen = {s: {n: r["chosen"] for n, r in pol[s].items()}
+                  for s in ("kv", "checkpoint", "grad")}
+        print("policy chosen:", chosen)
+        print(f"policy guarantee (auto never worse than off): "
+              f"{pol['guarantee']}")
+        if not pol["guarantee"]:
+            print("POLICY GUARANTEE VIOLATED", file=sys.stderr)
     out_path = Path(args.out) if args.out else (
         _ROOT / "experiments" / "sweep_report.json")
     out_path.parent.mkdir(parents=True, exist_ok=True)
@@ -253,7 +291,8 @@ def main() -> None:
     ap.add_argument("modules", nargs="*",
                     help="legacy mode: per-figure modules to run")
     ap.add_argument("--sweep",
-                    choices=("all", "memsim", "compress", "serve", "codecs"),
+                    choices=("all", "memsim", "compress", "serve", "codecs",
+                             "policy"),
                     help="batched sweep mode; emits one JSON report")
     ap.add_argument("--serve-steps", type=int, default=32,
                     help="decode steps per serve-bench curve")

@@ -1,5 +1,6 @@
 """CRAM-KV serving bench: decode-bandwidth / packing-work curves vs
-sequence length and batch size through the batched incremental cache.
+sequence length, batch size, and packing layout (pair 2:1 / quad 4:1)
+through the batched incremental cache.
 
 Each curve prefills a batch of sequences, then decodes token by token,
 recording per step: the pairs actually re-packed (the incremental-repack
@@ -30,20 +31,24 @@ from repro.kv import CRAMKVCache, synthetic_kv_stream  # noqa: E402
 PAGE, HKV, HD = 8, 1, 32
 
 
-def _stream(rng, batch, n_tokens, compressible=True):
+def _stream(rng, batch, n_tokens, compressible=True, scale=2e-3):
     return synthetic_kv_stream(rng, batch, n_tokens, HKV, HD,
-                               compressible=compressible)
+                               compressible=compressible, scale=scale)
 
 
 def decode_curve(policy="static", batch=1, prefill_pages=4, decode_steps=32,
-                 compressible=True, seed=0) -> dict:
+                 compressible=True, seed=0, packing="pair") -> dict:
     """One decode trajectory; per-step pack work and bandwidth."""
     rng = np.random.default_rng(seed)
     prefill = prefill_pages * PAGE
     total = prefill + decode_steps + 1           # +1 warm-up step
     n_need = (total + PAGE - 1) // PAGE
-    cache = CRAMKVCache(max_pages=n_need + (n_need % 2), page=PAGE,
-                        n_kv=HKV, head_dim=HD, batch=batch, policy=policy)
+    lanes = 2 if packing == "pair" else 4
+    cache = CRAMKVCache(max_pages=n_need, page=PAGE, n_kv=HKV, head_dim=HD,
+                        batch=batch, policy=policy, packing=packing)
+    # SAME stream for both packings (2e-3 fits int8 pairs AND int4 quads
+    # at this geometry), so pair-vs-quad curves in one report compare the
+    # layouts, not the data
     cache.append(*_stream(rng, batch, prefill, compressible))
     cache.account_step()
     # one untimed decode step compiles the W=1 pack window and the T=1
@@ -64,8 +69,18 @@ def decode_curve(policy="static", batch=1, prefill_pages=4, decode_steps=32,
     wall = time.perf_counter() - t0
     mean_pack = float(np.mean(pack_pairs))
     mean_total = float(np.mean(total_pairs))
+    # packing efficiency of the FINAL layout (transient partially-filled
+    # groups re-pack raw many times; what matters is what the sequence
+    # reached): pages_per_slot == lanes iff every active group packs
+    pm = np.asarray(cache.state["packed_mask"][:, :cache.n_active_groups])
+    fit_rate = float(pm.mean())
+    pages_per_slot = float(lanes * pm.size
+                           / (pm.sum() + lanes * (~pm).sum()))
     return {
         "policy": policy, "batch": batch, "compressible": compressible,
+        "packing": packing,
+        "fit_rate": round(fit_rate, 4),
+        "pages_per_slot": round(pages_per_slot, 4),
         "prefill_tokens": prefill, "decode_steps": decode_steps,
         "seq_len": seq_len,
         "pack_pairs_per_step": pack_pairs,
@@ -102,17 +117,23 @@ def _parity_check(seed=0) -> dict:
 
 
 def sweep(policies=("static", "dynamic", "off"), batches=(1, 4),
-          prefill_pages=4, decode_steps=32, seed=0) -> dict:
+          prefill_pages=4, decode_steps=32, seed=0,
+          packings=("pair", "quad")) -> dict:
     curves = []
-    for policy in policies:
-        for batch in batches:
-            for compressible in (True, False):
-                curves.append(decode_curve(
-                    policy=policy, batch=batch, prefill_pages=prefill_pages,
-                    decode_steps=decode_steps, compressible=compressible,
-                    seed=seed))
-    static_comp = [c for c in curves
-                   if c["policy"] == "static" and c["compressible"]]
+    for packing in packings:
+        for policy in policies:
+            for batch in batches:
+                for compressible in (True, False):
+                    curves.append(decode_curve(
+                        policy=policy, batch=batch,
+                        prefill_pages=prefill_pages,
+                        decode_steps=decode_steps,
+                        compressible=compressible, seed=seed,
+                        packing=packing))
+    static_comp = [c for c in curves if c["policy"] == "static"
+                   and c["compressible"] and c["packing"] == "pair"]
+    quad_static = [c for c in curves if c["policy"] == "static"
+                   and c["packing"] == "quad"]
     return {
         "page": PAGE, "n_kv": HKV, "head_dim": HD,
         "curves": curves,
@@ -127,6 +148,16 @@ def sweep(policies=("static", "dynamic", "off"), batches=(1, 4),
         },
         "static_compressible_saving": float(np.mean(
             [c["cumulative_saving"] for c in static_comp])),
+        # quad axis: pages-per-slot the 4:1 layout actually reached vs the
+        # int4-delta fit rate on the same stream (ROADMAP item)
+        "quad": {
+            f"{'comp' if c['compressible'] else 'rand'}_b{c['batch']}": {
+                "int4_fit_rate": c["fit_rate"],
+                "pages_per_slot": c["pages_per_slot"],
+                "saving": round(c["cumulative_saving"], 4),
+            }
+            for c in quad_static
+        },
         "parity": _parity_check(seed),
     }
 
@@ -136,7 +167,7 @@ def run() -> list[tuple]:
     rep = sweep(batches=(1, 2), decode_steps=12)
     rows = []
     for c in rep["curves"]:
-        name = (f"serve/{c['policy']}_b{c['batch']}"
+        name = (f"serve/{c['packing']}_{c['policy']}_b{c['batch']}"
                 f"_{'comp' if c['compressible'] else 'rand'}")
         us = c["decode_wall_s"] / max(c["decode_steps"], 1) * 1e6
         rows.append((name, us,

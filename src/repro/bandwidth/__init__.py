@@ -1,0 +1,58 @@
+"""repro.bandwidth — THE traffic-accounting and policy subsystem.
+
+  ledger   — typed traffic events (read/write/probe/repack/spill, raw vs
+             compressed bytes, per consumer and tensor class) with a host
+             accumulator and a jit-safe device accumulator
+  adapters — each consumer's legacy counters expressed as ledger rows
+             (engine STATs, KV decode/repack, checkpoint manifests,
+             gradient wire bytes); the only place consumer byte math lives
+  autotune — the §VI saturating-counter gate generalized into a policy
+             engine: picks KV packing, checkpoint codec, and grad codec
+             from ledger telemetry + `--sweep codecs` tables, exposed as
+             `policy="auto"` across the consumers
+
+See DESIGN.md §8.
+"""
+
+from .adapters import (
+    checkpoint_leaf_event,
+    checkpoint_restore_event,
+    classify_tensor,
+    engine_traffic,
+    grad_wire_event,
+    int8_wire_bytes,
+    kv_decode_event,
+    kv_repack_event,
+    tree_wire_bytes,
+)
+from .autotune import (
+    KV_PACKINGS,
+    AutoTuner,
+    PolicyChoice,
+    kv_expected_bytes_per_page,
+    probe_kv_fit_rates,
+)
+from .ledger import (
+    EV_PROBE,
+    EV_READ,
+    EV_REPACK,
+    EV_SPILL,
+    EV_WRITE,
+    EVENT_NAMES,
+    N_EVENTS,
+    Ledger,
+    device_record,
+    device_totals,
+    event_id,
+)
+
+__all__ = [
+    "Ledger", "device_totals", "device_record", "event_id",
+    "EV_READ", "EV_WRITE", "EV_PROBE", "EV_REPACK", "EV_SPILL",
+    "N_EVENTS", "EVENT_NAMES",
+    "engine_traffic", "kv_decode_event", "kv_repack_event",
+    "classify_tensor", "checkpoint_leaf_event", "checkpoint_restore_event",
+    "tree_wire_bytes", "int8_wire_bytes", "grad_wire_event",
+    "AutoTuner", "PolicyChoice", "KV_PACKINGS",
+    "kv_expected_bytes_per_page", "probe_kv_fit_rates",
+]

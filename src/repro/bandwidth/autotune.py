@@ -1,0 +1,278 @@
+"""Registry-driven autotune policy layer — THE §VI gate, generalized.
+
+Dynamic-CRAM (§VI) enables or disables one mechanism (line compression) by
+weighing measured bandwidth benefit against measured cost in a saturating
+counter.  The AutoTuner generalizes that decision rule across the whole
+registry: given ledger telemetry and/or the `--sweep codecs`
+ratio/throughput tables, it selects
+
+  * the KV packing layout per stream  — "off" | "pair" | "quad",
+  * the checkpoint line codec per tensor class — "raw" | "bdi" | "fpc"
+    | "hybrid" (any registered line64 codec),
+  * the gradient-collective page codec — "off" | "int8",
+
+each exposed as `policy="auto"` on the corresponding consumer (KV cache,
+checkpoint writer, grad collective) and swept by
+`benchmarks/run.py --sweep policy`.
+
+Decision rule (the paper's "no slowdown" guarantee, Fig. 18): a candidate
+is chosen only when its *expected* bytes-per-access beat the uncompressed
+baseline by at least `margin`; ties and losses fall back to "off"/"raw".
+On top of the expectation model, `observe(ledger)` runs the literal §VI
+saturating counter per decision key over *measured* savings, so a consumer
+whose live traffic stops compressing gets gated off even if the static
+tables said otherwise — and can re-enable when compressible traffic
+returns, exactly like the hardware gate.
+
+Everything here is deterministic: the same telemetry produces the same
+choices (tests/test_bandwidth.py pins a golden decision table).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..compression import codecs as _codecs
+from ..compression.framing import LINE_BYTES
+from ..compression.gate import (
+    COUNTER_INIT,
+    ENABLE_THRESHOLD,
+    counter_enabled,
+    counter_step,
+)
+from .ledger import Ledger
+
+KV_PACKINGS = ("off", "pair", "quad")
+# page codec backing each packing choice (registry names)
+KV_PAGE_CODEC = {"pair": "int8-delta", "quad": "int4-delta"}
+# ledger-gate scaling: one observation window is worth this many counter
+# ticks (the trace engine ticks per sampled event; the tuner ticks per
+# absorbed telemetry window, so a handful of bad windows flips the MSB)
+OBSERVE_TICKS = 256
+
+
+@dataclass(frozen=True)
+class PolicyChoice:
+    """One autotune decision with its evidence, JSON-ready."""
+
+    target: str                    # "kv" | "checkpoint" | "grad"
+    choice: str                    # selected registry entry / packing
+    expected: dict = field(default_factory=dict)   # candidate -> bytes/unit
+    basis: str = "tables"          # "tables" | "probe" | "ledger"
+
+    def as_dict(self) -> dict:
+        return {"target": self.target, "choice": self.choice,
+                "expected": dict(self.expected), "basis": self.basis}
+
+
+def kv_expected_bytes_per_page(fit_rate: float, lanes: int,
+                               slot_bytes: float = 1.0,
+                               strip_bytes: float | None = None) -> float:
+    """Expected decode bytes per page under a packing layout, in the
+    `kernels/ops.hbm_bytes_moved` model: a packed group costs one slot +
+    strip for all `lanes` pages; an unpacked group costs slot + strip per
+    page (the in-band metadata overhead).  Baseline ("off") is exactly
+    `slot_bytes` per page."""
+    if strip_bytes is None:
+        strip_bytes = slot_bytes / 8.0   # strip ~ one row of a page-8 slot
+    packed_group = slot_bytes + strip_bytes
+    raw_group = lanes * (slot_bytes + strip_bytes)
+    return (fit_rate * packed_group + (1.0 - fit_rate) * raw_group) / lanes
+
+
+def probe_kv_fit_rates(k, v, *, page: int, max_groups: int = 64) -> dict:
+    """Measure pair/quad pack-fit rates on a sample KV stream.
+
+    k/v: (B, T, Hkv, D) float arrays (or (T, Hkv, D)); the same bf16
+    bit-pattern view the cache stores.  Returns {"pair": r, "quad": r}.
+    """
+    k = np.asarray(k, np.float32)
+    v = np.asarray(v, np.float32)
+    if k.ndim == 3:
+        k, v = k[None], v[None]
+    kv = np.concatenate([k, v], axis=-1)
+    bf16 = np.ascontiguousarray(
+        (kv.view("<u4") >> 16).astype("<u2")).view("<i2")
+    b, t = bf16.shape[:2]
+    n_pages = t // page
+    # group pages PER SEQUENCE, exactly as the cache lays them out — a
+    # flat view would form probe groups spanning sequence boundaries
+    # (different per-sequence bases) and under-report the fit
+    pages = bf16[:, : n_pages * page].reshape(
+        b, n_pages, page, *bf16.shape[2:])
+    rates = {}
+    for packing, lanes in (("pair", 2), ("quad", 4)):
+        codec = _codecs.get_codec(KV_PAGE_CODEC[packing])
+        fits = []
+        for bi in range(b):
+            for gi in range(n_pages // lanes):
+                if len(fits) >= max_groups:
+                    break
+                grp = pages[bi, gi * lanes:(gi + 1) * lanes]
+                ok, _, _ = codec.pack_pages(*grp, xp=np)
+                fits.append(bool(ok))
+        rates[packing] = float(np.mean(fits)) if fits else 0.0
+    return rates
+
+
+class AutoTuner:
+    """Policy engine over the codec/layout registry (module docstring)."""
+
+    def __init__(self, *, tables: dict | None = None, margin: float = 0.02,
+                 counter_init: int = COUNTER_INIT):
+        self.tables = tables or {}
+        self.margin = float(margin)
+        self._counter_init = int(counter_init)
+        self._counters: dict[str, int] = {}   # §VI counter per decision key
+        # per-key ledger snapshot: observe() judges the traffic since the
+        # LAST observation, not the ledger's lifetime totals (a long-lived
+        # ledger would otherwise dilute a regime change into invisibility)
+        self._last_totals: dict[str, tuple[int, int]] = {}
+
+    @classmethod
+    def from_codec_sweep(cls, report: dict, **kw) -> "AutoTuner":
+        """Build from a `--sweep codecs` report (or its "codecs" section)."""
+        return cls(tables=report.get("codecs", report), **kw)
+
+    # ------------------------------------------------ §VI ledger-driven gate
+    def observe(self, ledger: Ledger, *, key: str, consumer=None,
+                tensor_class=None, event=None) -> int:
+        """Run one saturating-counter step for `key` from the traffic
+        recorded since the previous observe() of that key (the observation
+        window): benefit when the window saved at least `margin`, cost
+        when compression *cost* bytes (negative saving).  An empty window
+        leaves the counter untouched.  Returns the counter."""
+        t = ledger.total(event, consumer=consumer, tensor_class=tensor_class)
+        raw, comp = t["raw_bytes"], t["compressed_bytes"]
+        last_raw, last_comp = self._last_totals.get(key, (0, 0))
+        self._last_totals[key] = (raw, comp)
+        raw_d, comp_d = raw - last_raw, comp - last_comp
+        c = self._counters.get(key, self._counter_init)
+        if raw_d <= 0:
+            self._counters[key] = c
+            return c
+        saving = 1.0 - comp_d / raw_d
+        benefit = OBSERVE_TICKS if saving >= self.margin else 0
+        cost = OBSERVE_TICKS if saving < 0.0 else 0
+        c = int(counter_step(np.int64(c), cost, benefit, np))
+        self._counters[key] = c
+        return c
+
+    def gate_enabled(self, key: str) -> bool:
+        """Counter MSB for a decision key (enabled until proven harmful)."""
+        return bool(counter_enabled(
+            self._counters.get(key, self._counter_init)))
+
+    def counter(self, key: str) -> int:
+        return self._counters.get(key, self._counter_init)
+
+    # --------------------------------------------------------- KV packing
+    def choose_kv_packing(self, fit_rates: dict | None = None, *,
+                          k=None, v=None, page: int | None = None,
+                          slot_bytes: float = 1.0,
+                          strip_bytes: float | None = None,
+                          stream: str | None = None,
+                          gate_key: str = "kv") -> PolicyChoice:
+        """Pick off/pair/quad from fit rates (given, probed from a k/v
+        sample, or read from the codec-sweep kv_pages tables)."""
+        basis = "tables"
+        if fit_rates is None and k is not None:
+            assert page is not None, "probe needs the page size"
+            fit_rates = probe_kv_fit_rates(k, v, page=page)
+            basis = "probe"
+        if fit_rates is None:
+            row = self.tables.get("kv_pages", {}).get(stream or "", {})
+            fit_rates = {
+                p: float(row.get(KV_PAGE_CODEC[p], {}).get("fit_rate", 0.0))
+                for p in ("pair", "quad")
+            }
+        expected = {"off": float(slot_bytes)}
+        for packing, lanes in (("pair", 2), ("quad", 4)):
+            expected[packing] = kv_expected_bytes_per_page(
+                float(fit_rates.get(packing, 0.0)), lanes,
+                slot_bytes, strip_bytes)
+        choice = min(expected, key=lambda p: (expected[p],
+                                              KV_PACKINGS.index(p)))
+        # no-slowdown guarantee: a packing must beat "off" by the margin,
+        # and a disabled §VI gate (measured harm) forces "off"
+        if (expected[choice] > expected["off"] * (1.0 - self.margin)
+                or not self.gate_enabled(gate_key)):
+            choice = "off"
+        return PolicyChoice("kv", choice, expected, basis)
+
+    # --------------------------------------------------- checkpoint codec
+    def choose_ckpt_codec(self, sample_lines=None, *,
+                          tensor_class: str | None = None,
+                          max_lines: int = 4096,
+                          gate_key: str = "checkpoint") -> PolicyChoice:
+        """Pick the line codec whose measured mean compressed size over a
+        sample of the tensor's 64-byte lines is smallest; "raw" unless the
+        winner beats raw by the margin.  With no sample, falls back to the
+        codec-sweep `tensors` ratio table for the tensor class."""
+        names = [n for n in _codecs.codec_names("line64")]
+        if sample_lines is not None:
+            lines = np.asarray(sample_lines, np.uint8).reshape(-1, LINE_BYTES)
+            if lines.shape[0] > max_lines:
+                stride = lines.shape[0] // max_lines
+                lines = lines[::stride][:max_lines]
+            expected = {
+                n: float(np.asarray(
+                    _codecs.get_codec(n).sizes(lines)).mean())
+                for n in names
+            }
+            basis = "probe"
+        else:
+            row = self.tables.get("tensors", {}).get(tensor_class or "", {})
+            expected = {
+                n: LINE_BYTES / float(row[n]) if n in row else
+                float(LINE_BYTES)
+                for n in names
+            }
+            basis = "tables"
+        choice = min(expected, key=lambda n: (expected[n], names.index(n)))
+        if (expected[choice] > expected["raw"] * (1.0 - self.margin)
+                or not self.gate_enabled(gate_key)):
+            choice = "raw"
+        return PolicyChoice("checkpoint", choice, expected, basis)
+
+    # ------------------------------------------------------- grad codec
+    def choose_grad_codec(self, rel_err: float, *,
+                          err_budget: float = 0.05,
+                          bytes_saving: float = 0.75,
+                          gate_key: str = "grad") -> PolicyChoice:
+        """int8 collective iff the measured relative quantization error is
+        within budget (the runtime gate then keeps watching, §VI)."""
+        expected = {"off": 1.0, "int8": 1.0 - float(bytes_saving)}
+        ok = (float(rel_err) <= float(err_budget)
+              and self.gate_enabled(gate_key))
+        return PolicyChoice("grad", "int8" if ok else "off", expected,
+                            "probe")
+
+    # ----------------------------------------------------------- combined
+    def choose(self, telemetry: dict) -> dict:
+        """Full policy from a telemetry dict.  Recognized keys:
+        kv_fit_rates | (kv_sample_k, kv_sample_v, page); ckpt_samples
+        ({tensor_class: lines}); grad_rel_err.  Deterministic: the golden
+        autotuner test pins `choose(t) == choose(t)` and exact choices."""
+        out: dict = {}
+        if "kv_fit_rates" in telemetry:
+            out["kv"] = self.choose_kv_packing(telemetry["kv_fit_rates"])
+        elif "kv_sample_k" in telemetry:
+            out["kv"] = self.choose_kv_packing(
+                k=telemetry["kv_sample_k"], v=telemetry["kv_sample_v"],
+                page=telemetry["page"])
+        for tc, lines in telemetry.get("ckpt_samples", {}).items():
+            out[f"checkpoint:{tc}"] = self.choose_ckpt_codec(
+                lines, tensor_class=tc)
+        if "grad_rel_err" in telemetry:
+            out["grad"] = self.choose_grad_codec(telemetry["grad_rel_err"])
+        return out
+
+
+__all__ = [
+    "AutoTuner", "PolicyChoice", "KV_PACKINGS", "KV_PAGE_CODEC",
+    "kv_expected_bytes_per_page", "probe_kv_fit_rates",
+    "COUNTER_INIT", "ENABLE_THRESHOLD",
+]

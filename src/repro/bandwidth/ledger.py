@@ -1,0 +1,198 @@
+"""THE traffic ledger: one accounting of every byte the system moves.
+
+CRAM's evaluation is an economy of memory accesses per category (§VI and
+the Fig. 8/15 breakdowns): compression is enabled or disabled by weighing
+the bandwidth cost of storing compressed lines against the benefit of
+fetching them.  Before this module, five consumers each kept a private
+version of that economy (engine STAT counters, `kernels/ops` byte dicts,
+`kv/cache.saving()`, checkpoint `raw_bytes/stored_bytes` manifests, the
+gradient collective's inline wire-byte constants).  The ledger is the one
+place those flows land:
+
+  event    — what moved: read / write / probe / repack / spill
+  consumer — who moved it: "engine", "kv", "checkpoint", "grad", "serve"…
+  tensor_class — what kind of data: "kv", "weights", "moments", "grads"…
+
+Every row accumulates (raw_bytes, compressed_bytes, count): raw is what an
+uncompressed system would have moved for the same work, compressed is what
+actually moved — so `saving()` is the paper's bandwidth win and a negative
+saving is the §VI cost signal the AutoTuner gates on.
+
+Two accumulation paths:
+
+  * host path — `Ledger.record(...)`: plain-int accumulation, used by the
+    non-jitted consumers (checkpoint writer, serve loop, KV step boundary).
+  * device path — `device_totals()` / `device_record(...)`: a jit-safe
+    (N_EVENTS, 3) int32 array that lives inside a jitted step (pytree
+    leaf, scan carry, shard_map output) and is folded into the host ledger
+    afterwards with `Ledger.absorb(...)`.  int32 bounds one absorb window
+    at 2 GiB per event class; long-running consumers absorb per step, so
+    the host-side totals (python ints) never overflow.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# traffic event kinds (stable ids: the device accumulator indexes by them)
+EV_READ, EV_WRITE, EV_PROBE, EV_REPACK, EV_SPILL, N_EVENTS = range(6)
+EVENT_NAMES = ("read", "write", "probe", "repack", "spill")
+_EVENT_BY_NAME = {n: i for i, n in enumerate(EVENT_NAMES)}
+
+
+def event_id(event) -> int:
+    """Accept an EV_* id or an event name; return the stable id."""
+    if isinstance(event, str):
+        try:
+            return _EVENT_BY_NAME[event]
+        except KeyError:
+            raise KeyError(f"unknown traffic event {event!r}; "
+                           f"valid: {EVENT_NAMES}") from None
+    e = int(event)
+    if not 0 <= e < N_EVENTS:
+        raise KeyError(f"event id {e} out of range 0..{N_EVENTS - 1}")
+    return e
+
+
+class Ledger:
+    """Host-side traffic accumulator keyed by (consumer, tensor_class, event).
+
+    Rows are created on first record; values are python ints (no overflow).
+    A ledger can carry a default consumer so call sites inside one
+    subsystem stay terse (`ledger.record(EV_READ, raw=..., compressed=...)`).
+    """
+
+    __slots__ = ("consumer", "_rows")
+
+    def __init__(self, consumer: str = "anon"):
+        self.consumer = consumer
+        # (consumer, tensor_class, event_id) -> [raw, compressed, count]
+        self._rows: dict[tuple[str, str, int], list[int]] = {}
+
+    # ------------------------------------------------------------ recording
+    def record(self, event, *, raw, compressed=None, count: int = 1,
+               tensor_class: str = "default",
+               consumer: str | None = None) -> tuple[int, int]:
+        """Record one traffic flow; returns the (raw, compressed) ints it
+        booked, so call sites that need the numbers (e.g. checkpoint
+        manifests) read them back from the ledger rather than re-deriving
+        them."""
+        e = event_id(event)
+        raw_i = int(raw)
+        comp_i = raw_i if compressed is None else int(compressed)
+        key = (consumer or self.consumer, tensor_class, e)
+        row = self._rows.get(key)
+        if row is None:
+            row = self._rows[key] = [0, 0, 0]
+        row[0] += raw_i
+        row[1] += comp_i
+        row[2] += int(count)
+        return raw_i, comp_i
+
+    def absorb(self, totals, *, tensor_class: str = "default",
+               consumer: str | None = None) -> None:
+        """Fold a device accumulator (see `device_totals`) into this ledger."""
+        t = np.asarray(totals)
+        assert t.shape == (N_EVENTS, 3), t.shape
+        for e in range(N_EVENTS):
+            raw, comp, cnt = (int(t[e, 0]), int(t[e, 1]), int(t[e, 2]))
+            if raw or comp or cnt:
+                self.record(e, raw=raw, compressed=comp, count=cnt,
+                            tensor_class=tensor_class, consumer=consumer)
+
+    def merge(self, other: "Ledger") -> "Ledger":
+        """Add every row of `other` into this ledger (consumers preserved)."""
+        for (cons, tc, e), (raw, comp, cnt) in other._rows.items():
+            self.record(e, raw=raw, compressed=comp, count=cnt,
+                        tensor_class=tc, consumer=cons)
+        return self
+
+    # -------------------------------------------------------------- queries
+    def _select(self, event=None, consumer=None, tensor_class=None):
+        e = None if event is None else event_id(event)
+        for (cons, tc, ev), row in self._rows.items():
+            if e is not None and ev != e:
+                continue
+            if consumer is not None and cons != consumer:
+                continue
+            if tensor_class is not None and tc != tensor_class:
+                continue
+            yield (cons, tc, ev), row
+
+    def total(self, event=None, *, consumer=None,
+              tensor_class=None) -> dict:
+        raw = comp = cnt = 0
+        for _, (r, c, n) in self._select(event, consumer, tensor_class):
+            raw += r
+            comp += c
+            cnt += n
+        return {"raw_bytes": raw, "compressed_bytes": comp, "count": cnt}
+
+    def raw_bytes(self, event=None, **kw) -> int:
+        return self.total(event, **kw)["raw_bytes"]
+
+    def compressed_bytes(self, event=None, **kw) -> int:
+        return self.total(event, **kw)["compressed_bytes"]
+
+    def saving(self, event=None, **kw) -> float:
+        """1 - compressed/raw over the selected rows (the paper's bandwidth
+        win; negative when compression *cost* bytes — the §VI signal)."""
+        t = self.total(event, **kw)
+        return 1.0 - t["compressed_bytes"] / max(t["raw_bytes"], 1)
+
+    def consumers(self) -> tuple[str, ...]:
+        return tuple(sorted({c for c, _, _ in self._rows}))
+
+    def tensor_classes(self, consumer=None) -> tuple[str, ...]:
+        return tuple(sorted({tc for c, tc, _ in self._rows
+                             if consumer is None or c == consumer}))
+
+    def as_dict(self) -> dict:
+        """{consumer: {tensor_class: {event: {raw, compressed, count}}}} —
+        the JSON view benchmark reports embed."""
+        out: dict = {}
+        for (cons, tc, e), (raw, comp, cnt) in sorted(self._rows.items()):
+            out.setdefault(cons, {}).setdefault(tc, {})[EVENT_NAMES[e]] = {
+                "raw_bytes": raw, "compressed_bytes": comp, "count": cnt,
+            }
+        return out
+
+    def __len__(self) -> int:
+        return len(self._rows)
+
+    def __repr__(self) -> str:
+        t = self.total()
+        return (f"Ledger({self.consumer!r}, rows={len(self._rows)}, "
+                f"raw={t['raw_bytes']}, compressed={t['compressed_bytes']})")
+
+
+# --------------------------------------------------------- device accumulator
+
+def device_totals(xp=None):
+    """A fresh jit-safe accumulator: (N_EVENTS, 3) int32 zeros of
+    [raw_bytes, compressed_bytes, count] — a plain array, so it is a valid
+    pytree leaf for scan carries / shard_map outputs / donated buffers."""
+    if xp is None:
+        import jax.numpy as xp
+    return xp.zeros((N_EVENTS, 3), xp.int32)
+
+
+def device_record(totals, event, raw, compressed=None, count=1):
+    """Functional update of a device accumulator (usable under jit/vmap).
+
+    `event` must be a static EV_* id (it indexes the row); raw/compressed/
+    count may be traced scalars."""
+    import jax.numpy as jnp
+
+    e = event_id(event)
+    comp = raw if compressed is None else compressed
+    delta = jnp.stack([jnp.asarray(raw, jnp.int32),
+                       jnp.asarray(comp, jnp.int32),
+                       jnp.asarray(count, jnp.int32)])
+    return totals.at[e].add(delta)
+
+
+__all__ = [
+    "EV_READ", "EV_WRITE", "EV_PROBE", "EV_REPACK", "EV_SPILL", "N_EVENTS",
+    "EVENT_NAMES", "event_id", "Ledger", "device_totals", "device_record",
+]

@@ -25,7 +25,12 @@ import jax
 import msgpack
 import numpy as np
 
-from .codec import cram_compress_bytes, cram_decompress_bytes
+from ..bandwidth import AutoTuner, Ledger
+from ..bandwidth.adapters import (
+    checkpoint_leaf_event,
+    checkpoint_restore_event,
+)
+from .codec import cram_compress_bytes, cram_decompress_bytes, pad_to_lines
 
 
 def _leaves_with_paths(tree):
@@ -38,9 +43,27 @@ def _leaves_with_paths(tree):
     return out, treedef
 
 
+def _line_codec_of(codec: str) -> str:
+    """'cram' -> 'bdi' (the historical default), 'cram:<name>' -> name."""
+    return codec.split(":", 1)[1] if ":" in codec else "bdi"
+
+
 def save_checkpoint(directory, step: int, tree, *, codec: str = "cram",
-                    blocking: bool = True) -> Path:
-    """codec: 'raw' | 'cram' | 'cram+zstd'."""
+                    blocking: bool = True, ledger: Ledger | None = None,
+                    tuner: AutoTuner | None = None) -> Path:
+    """codec: 'raw' | 'cram[:line-codec][+zstd]' | 'auto'.
+
+    'cram' streams every leaf through one registered line codec (default
+    bdi; 'cram:fpc' / 'cram:hybrid' pick another).  'auto' lets the
+    bandwidth AutoTuner pick the line codec PER LEAF from a sample of its
+    64-byte lines (raw when nothing beats raw — the no-slowdown rule);
+    each blob is self-describing, so restore needs no policy knowledge.
+
+    Byte accounting goes through the bandwidth ledger: manifest
+    raw/stored entries are read back from the ledger booking, and the
+    save's traffic view is embedded as manifest["traffic"].  Pass a shared
+    `ledger` to fold this save into a launcher-wide accounting.
+    """
     directory = Path(directory)
     final = directory / f"step_{step:08d}"
     tmp = directory / f".tmp_step_{step:08d}"
@@ -48,22 +71,52 @@ def save_checkpoint(directory, step: int, tree, *, codec: str = "cram",
         shutil.rmtree(tmp)
     tmp.mkdir(parents=True)
     leaves, _ = _leaves_with_paths(tree)
-    manifest = {"step": step, "codec": codec, "leaves": []}
+    local = Ledger("checkpoint")
+    auto = codec == "auto"
+    if auto and tuner is None:
+        tuner = AutoTuner()
+    zstd = codec.endswith("+zstd")
+    base = codec[: -len("+zstd")] if zstd else codec
+    manifest = {"step": step,
+                "codec": "cram:auto" if auto else codec, "leaves": []}
     for i, (key, leaf) in enumerate(leaves):
         arr = np.asarray(jax.device_get(leaf))
         raw = arr.tobytes()
-        if codec.startswith("cram"):
-            blob = cram_compress_bytes(raw, use_zstd=codec.endswith("zstd"))
+        if auto:
+            choice = tuner.choose_ckpt_codec(pad_to_lines(raw),
+                                             tensor_class=key)
+            leaf_codec = choice.choice
+            # the raw fallback stores the PLAIN blob — auto must never
+            # cost more than the static raw writer, not even the CRAM
+            # stream's header + line padding
+            blob = (raw if leaf_codec == "raw"
+                    else cram_compress_bytes(raw, codec=leaf_codec))
+            if len(blob) >= len(raw):
+                # hard per-leaf no-slowdown: the codec won on sampled line
+                # sizes but the stream framing ate the win (tiny leaves)
+                leaf_codec, blob = "raw", raw
+        elif base.startswith("cram"):
+            leaf_codec = _line_codec_of(base)
+            blob = cram_compress_bytes(raw, use_zstd=zstd, codec=leaf_codec)
         else:
+            leaf_codec = "raw"
             blob = raw
+        framed = blob is not raw
         fname = f"leaf_{i:05d}.bin"
         (tmp / fname).write_bytes(blob)
+        raw_n, stored_n = checkpoint_leaf_event(
+            local, key=key, raw_len=len(raw), stored_len=len(blob),
+            dtype=arr.dtype)
         manifest["leaves"].append({
             "key": key, "file": fname, "shape": list(arr.shape),
-            "dtype": str(arr.dtype), "raw_bytes": len(raw),
-            "stored_bytes": len(blob),
+            "dtype": str(arr.dtype), "raw_bytes": raw_n,
+            "stored_bytes": stored_n, "codec": leaf_codec,
+            "framed": framed,
             "sha1": hashlib.sha1(blob).hexdigest(),
         })
+    manifest["traffic"] = local.as_dict()
+    if ledger is not None:
+        ledger.merge(local)
     (tmp / "manifest.msgpack").write_bytes(msgpack.packb(manifest))
     (tmp / "COMMIT").write_text("ok")
     if final.exists():
@@ -72,8 +125,10 @@ def save_checkpoint(directory, step: int, tree, *, codec: str = "cram",
     return final
 
 
-def load_checkpoint(directory, step: int | None, tree_like):
-    """Restore into the structure of `tree_like` (shapes must match)."""
+def load_checkpoint(directory, step: int | None, tree_like, *,
+                    ledger: Ledger | None = None):
+    """Restore into the structure of `tree_like` (shapes must match).
+    A `ledger` books the restore read traffic (raw vs stored bytes)."""
     directory = Path(directory)
     if step is None:
         step = latest_step(directory)
@@ -89,8 +144,13 @@ def load_checkpoint(directory, step: int | None, tree_like):
         blob = (d / m["file"]).read_bytes()
         assert hashlib.sha1(blob).hexdigest() == m["sha1"], \
             f"checksum mismatch for {key}"
-        raw = (cram_decompress_bytes(blob)
-               if manifest["codec"].startswith("cram") else blob)
+        # per-leaf framed flag (auto stores raw-fallback leaves plain);
+        # pre-flag manifests decide by the checkpoint-wide codec string
+        framed = m.get("framed", manifest["codec"].startswith("cram"))
+        raw = cram_decompress_bytes(blob) if framed else blob
+        if ledger is not None:
+            checkpoint_restore_event(ledger, key=key, raw_len=len(raw),
+                                     stored_len=len(blob), dtype=m["dtype"])
         arr = np.frombuffer(raw, dtype=np.dtype(m["dtype"])).reshape(
             m["shape"]).copy()
         out.append(arr)
@@ -109,10 +169,14 @@ def latest_step(directory) -> int | None:
 class CheckpointManager:
     """Async writer with bounded retention."""
 
-    def __init__(self, directory, *, keep: int = 3, codec: str = "cram"):
+    def __init__(self, directory, *, keep: int = 3, codec: str = "cram",
+                 ledger: Ledger | None = None,
+                 tuner: AutoTuner | None = None):
         self.directory = Path(directory)
         self.keep = keep
         self.codec = codec
+        self.ledger = ledger if ledger is not None else Ledger("checkpoint")
+        self.tuner = tuner
         self._thread: threading.Thread | None = None
 
     def save_async(self, step: int, tree) -> None:
@@ -122,7 +186,8 @@ class CheckpointManager:
 
         def work():
             save_checkpoint(self.directory, step, host_tree,
-                            codec=self.codec)
+                            codec=self.codec, ledger=self.ledger,
+                            tuner=self.tuner)
             self._gc()
 
         self._thread = threading.Thread(target=work, daemon=True)

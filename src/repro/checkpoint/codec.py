@@ -9,12 +9,13 @@ side table — only the line count, exactly like the memory image.  An
 optional zstd outer layer stacks generic entropy coding on top (off by
 default; CRAM is the claim under test).
 
-The default "bdi" codec keeps the fully vectorized batch path (group lines
-by mode, scatter payloads by offset) — FPC/hybrid bit-granular packing is
-exact but per-line Python, usable for small tensors and measured by the
-codec sweep; measured compression ratios per dtype land in EXPERIMENTS.md
-(momentum/zero-heavy tensors compress well, live bf16 weights poorly — the
-Dynamic-CRAM story again).
+Every registered line codec packs through its vectorized batch path
+(`Codec.pack_batch`: numpy batch over lines, byte-identical to the
+per-line exact packers) — including the bit-granular FPC/hybrid streams —
+so multi-GB checkpoints can use the better-ratio codecs; measured
+compression ratios per dtype land in EXPERIMENTS.md (momentum/zero-heavy
+tensors compress well, live bf16 weights poorly — the Dynamic-CRAM story
+again).
 """
 
 from __future__ import annotations
@@ -37,30 +38,15 @@ _CODEC_IDS = {"bdi": 0, "hybrid": 1, "fpc": 2, "raw": 3}
 _CODEC_BY_ID = {v: k for k, v in _CODEC_IDS.items()}
 
 
-def _pad_to_lines(raw: bytes) -> np.ndarray:
+def pad_to_lines(raw: bytes) -> np.ndarray:
+    """(len,) bytes -> (N, 64) uint8 lines, zero-padded to a line multiple
+    — THE line framing both the stored stream and the AutoTuner's codec
+    probes use (probe on anything else and the choice is made on
+    differently-framed data than what gets packed)."""
     n = (len(raw) + LINE - 1) // LINE * LINE
     buf = np.zeros(n, np.uint8)
     buf[: len(raw)] = np.frombuffer(raw, np.uint8)
     return buf.reshape(-1, LINE)
-
-
-def _bdi_pack_stream(lines: np.ndarray) -> bytes:
-    """Vectorized BDI stream: per line, 1 mode byte + payload."""
-    sizes, modes = bdi.bdi_sizes(lines)
-    modes_np = np.asarray(modes)
-    size_table = np.asarray([bdi.PAYLOAD_BYTES[m] for m in range(9)],
-                            np.int64)
-    per_line = 1 + size_table[modes_np]
-    offsets = np.concatenate([[0], np.cumsum(per_line)])
-    buf = np.zeros(int(offsets[-1]), np.uint8)
-    buf[offsets[:-1]] = modes_np.astype(np.uint8)
-    for m in np.unique(modes_np):
-        idxs = np.flatnonzero(modes_np == m)
-        payload = bdi.bdi_pack_batch(lines[idxs], int(m))
-        if payload.shape[1]:
-            pos = offsets[idxs][:, None] + 1 + np.arange(payload.shape[1])
-            buf[pos] = payload
-    return buf.tobytes()
 
 
 def _bdi_unpack_stream(view: np.ndarray, n_lines: int) -> np.ndarray:
@@ -96,17 +82,16 @@ def cram_compress_bytes(raw: bytes, use_zstd: bool = False,
         raise ValueError(
             f"unknown checkpoint codec {codec!r}; valid: {sorted(_CODEC_IDS)}"
             f" (registered line codecs: {sorted(codec_names('line64'))})")
-    lines = _pad_to_lines(raw)
+    lines = pad_to_lines(raw)
     n_lines = lines.shape[0]
     out = io.BytesIO()
     out.write(_MAGIC)
     out.write(struct.pack("<QQBB", len(raw), n_lines,
                           1 if use_zstd else 0, _CODEC_IDS[codec]))
-    if codec == "bdi":
-        body_b = _bdi_pack_stream(lines)
-    else:
-        pack_line = get_codec(codec).pack_line
-        body_b = b"".join(pack_line(line) for line in lines)
+    # every registered codec carries a vectorized exact pack stream (numpy
+    # batch over lines, byte-identical to per-line pack_line joins), so
+    # multi-GB checkpoints can use the better-ratio fpc/hybrid codecs too
+    body_b = get_codec(codec).pack_batch(lines).tobytes()
     if use_zstd:
         import zstandard as zstd
 

@@ -51,6 +51,10 @@ class Codec:
     size_fn: Callable | None = None            # (lines_bytes, xp) -> sizes
     pack_line: Callable | None = None          # (line64,) -> bytes
     unpack_line: Callable | None = None        # (data, ofs) -> (line, next)
+    # vectorized exact pack: (N,64) uint8 -> 1-D uint8 concatenated stream,
+    # byte-identical to b"".join(pack_line(l) for l in lines) — the batch
+    # path checkpoint streaming uses (no per-line Python loop)
+    pack_batch: Callable | None = None
     # page contract
     group_lanes: int = 0                       # pages packed per slot
     pack_pages: Callable | None = None         # (*pages, xp) -> (ok, packed, base)
@@ -146,16 +150,44 @@ def _fpc_unpack(data: bytes, offset: int = 0):
     return line, offset + nbytes
 
 
+def _raw_pack_batch(lines: np.ndarray) -> np.ndarray:
+    return np.ascontiguousarray(lines, dtype=np.uint8).reshape(-1)
+
+
+def _bdi_pack_batch(lines: np.ndarray) -> np.ndarray:
+    """Vectorized BDI stream: per line, 1 mode byte + payload (identical to
+    per-line `_bdi_pack` joins; payloads scatter by mode group)."""
+    lines = np.ascontiguousarray(lines, dtype=np.uint8).reshape(
+        -1, LINE_BYTES)
+    sizes, modes = _bdi.bdi_sizes(lines)
+    modes_np = np.asarray(modes)
+    size_table = np.asarray([_bdi.PAYLOAD_BYTES[m] for m in range(9)],
+                            np.int64)
+    per_line = 1 + size_table[modes_np]
+    offsets = np.cumsum(per_line) - per_line
+    buf = np.zeros(int(per_line.sum()), np.uint8)
+    buf[offsets] = modes_np.astype(np.uint8)
+    for m in np.unique(modes_np):
+        idxs = np.flatnonzero(modes_np == m)
+        payload = _bdi.bdi_pack_batch(lines[idxs], int(m))
+        if payload.shape[1]:
+            buf[offsets[idxs][:, None] + 1 + np.arange(payload.shape[1])] \
+                = payload
+    return buf
+
+
 register_codec(Codec(
     name="raw", unit="line64",
     description="identity (uncompressed 64B line)",
     size_fn=_raw_sizes, pack_line=_raw_pack, unpack_line=_raw_unpack,
+    pack_batch=_raw_pack_batch,
 ))
 
 register_codec(Codec(
     name="bdi", unit="line64",
     description="Base-Delta-Immediate [PACT 2012]; 1-byte mode header",
     size_fn=_bdi_sizes, pack_line=_bdi_pack, unpack_line=_bdi_unpack,
+    pack_batch=_bdi_pack_batch,
     pallas_scan="repro.kernels.compress_scan:compress_scan",
     scan_field="bdi",
 ))
@@ -165,6 +197,7 @@ register_codec(Codec(
     description="Frequent Pattern Compression [ISCA 2004]; self-terminating",
     size_fn=lambda lines, xp=np: _fpc.fpc_size_bytes(lines, xp=xp),
     pack_line=_fpc.fpc_pack, unpack_line=_fpc_unpack,
+    pack_batch=_fpc.fpc_pack_batch,
     pallas_scan="repro.kernels.compress_scan:compress_scan",
     scan_field="fpc",
 ))
@@ -175,6 +208,7 @@ register_codec(Codec(
                 "the paper's line codec",
     size_fn=lambda lines, xp=np: _hybrid.compressed_sizes(lines, xp=xp),
     pack_line=_hybrid.compress_line, unpack_line=_hybrid.decompress_line,
+    pack_batch=_hybrid.compress_batch,
     pallas_scan="repro.kernels.compress_scan:compress_scan",
     scan_field="sizes",
 ))

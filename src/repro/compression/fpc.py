@@ -174,6 +174,80 @@ def fpc_pack(line_bytes: np.ndarray | bytes) -> bytes:
     return bw.getvalue()
 
 
+def fpc_pack_batch(lines_bytes: np.ndarray) -> np.ndarray:
+    """Vectorized exact FPC encoding of (N, 64) lines.
+
+    Returns the 1-D uint8 concatenation of the per-line streams,
+    byte-identical to ``b"".join(fpc_pack(line) for line in lines)`` but
+    with no per-line Python loop (numpy batch over lines; the only loops
+    are over the 16 word positions) — the path that lets multi-GB
+    checkpoints use the FPC/hybrid codecs (tests pin the parity).
+    """
+    lines = np.ascontiguousarray(lines_bytes, dtype=np.uint8).reshape(
+        -1, WORDS_PER_LINE * 4)
+    n = lines.shape[0]
+    if n == 0:
+        return np.zeros(0, np.uint8)
+    words = bytes_to_u32(lines).astype(np.int64)
+    u = words & 0xFFFFFFFF
+    w_signed = (u ^ 0x80000000) - 0x80000000
+    zero = w_signed == 0
+    pats = np.asarray(_classify_nonzero(w_signed, np))
+
+    # zero-run chunking: a token is emitted at every run position that is
+    # ≡ 0 (mod 8) within its run, covering min(remaining zeros, 8) words —
+    # exactly the scalar packer's greedy 8-cap RLE.
+    idx = np.arange(WORDS_PER_LINE)
+    prev = np.concatenate([np.zeros((n, 1), bool), zero[:, :-1]], axis=1)
+    start = zero & ~prev
+    last_start = np.maximum.accumulate(np.where(start, idx, -1), axis=1)
+    pos_in_run = idx[None, :] - last_start
+    czl = np.zeros((n, WORDS_PER_LINE), np.int32)   # zeros from i rightward
+    czl[:, -1] = zero[:, -1]
+    for i in range(WORDS_PER_LINE - 2, -1, -1):
+        czl[:, i] = np.where(zero[:, i], czl[:, i + 1] + 1, 0)
+    chunk_start = zero & (pos_in_run % 8 == 0)
+    chunk_len = np.minimum(czl, 8)
+
+    # per-position token (value, nbits), MSB-first prefix+payload combined
+    pb = _payload_bits_table(np)[pats].astype(np.int64)
+    payload = np.zeros((n, WORDS_PER_LINE), np.int64)
+    payload = np.where(pats == P_SE4, u & 0xF, payload)
+    payload = np.where(pats == P_SE8, u & 0xFF, payload)
+    payload = np.where(pats == P_SE16, u & 0xFFFF, payload)
+    payload = np.where(pats == P_PAD16, (u >> 16) & 0xFFFF, payload)
+    payload = np.where(pats == P_HALF_SE8,
+                       ((u & 0xFF) << 8) | ((u >> 16) & 0xFF), payload)
+    payload = np.where(pats == P_REPB, u & 0xFF, payload)
+    payload = np.where(pats == P_RAW, u, payload)
+    tok = ~zero | chunk_start
+    val = np.where(zero, (P_ZRUN << 3) | (chunk_len - 1),
+                   (pats.astype(np.int64) << pb) | payload)
+    nbits = np.where(zero, PREFIX_BITS + 3, PREFIX_BITS + pb) * tok
+
+    # bit assembly: exclusive per-line offsets, scatter MSB-first bits
+    MAXB = PREFIX_BITS + 32                       # widest token (raw word)
+    LINE_BITS = WORDS_PER_LINE * MAXB
+    off = np.cumsum(nbits, axis=1) - nbits
+    total_bits = off[:, -1] + nbits[:, -1]
+    j = np.arange(MAXB)
+    bits = ((val[:, :, None] >> np.maximum(
+        nbits[:, :, None] - 1 - j, 0)) & 1).astype(np.uint8)
+    valid = tok[:, :, None] & (j < nbits[:, :, None])
+    pos = off[:, :, None] + j
+    buf = np.zeros((n, LINE_BITS), np.uint8)
+    flat = (np.arange(n)[:, None, None] * LINE_BITS + pos)[valid]
+    buf.reshape(-1)[flat] = bits[valid]
+    packed = np.packbits(buf, axis=1)             # MSB-first, as BitWriter
+
+    line_nbytes = ((total_bits + 7) // 8).astype(np.int64)
+    out_off = np.cumsum(line_nbytes) - line_nbytes
+    total = int(out_off[-1] + line_nbytes[-1])
+    which = np.repeat(np.arange(n), line_nbytes)
+    intra = np.arange(total) - np.repeat(out_off, line_nbytes)
+    return packed[which, intra]
+
+
 def fpc_unpack(data: bytes) -> np.ndarray:
     """Decode FPC bytes back to a (64,) uint8 line."""
     br = BitReader(data)

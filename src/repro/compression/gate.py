@@ -70,3 +70,23 @@ def counter_step(counter, cost, benefit, xp):
 
 def counter_enabled(counter):
     return counter >= ENABLE_THRESHOLD
+
+
+# --------------------------------------------------------------- wire gate
+# §VI applied to the gradient collective (optim.grad_compress): benefit is
+# the fraction of wire bytes the int8 collective saves, cost is a quality
+# penalty when the relative quantization error exceeds its budget.  The
+# scaling constants live HERE so every §VI threshold has one home.
+WIRE_BENEFIT_SCALE = 16      # counter ticks per unit fraction of bytes saved
+WIRE_COST_OVER_BUDGET = 64   # ticks charged when quality is over budget
+
+
+def wire_counter_step(counter, bytes_saving, over_budget, xp):
+    """One wire-gate update: `bytes_saving` is the fractional wire-byte win
+    (e.g. 0.75 for fp32 -> int8), `over_budget` a (traceable) bool.  Same
+    saturating semantics as every other §VI counter."""
+    benefit = (xp.asarray(bytes_saving, xp.float32)
+               * WIRE_BENEFIT_SCALE).astype(xp.int32)
+    cost = xp.where(over_budget, xp.int32(WIRE_COST_OVER_BUDGET),
+                    xp.int32(0))
+    return counter_step(counter, cost, benefit, xp)

@@ -175,7 +175,12 @@ def speedup(baseline_accesses: int, scheme_accesses: int, f: float) -> float:
 def summarize_workload(name: str, f: float, results: dict[str, SimResult],
                        baseline_accesses: int) -> dict:
     """Per-workload summary dict (shared between the scalar and batched
-    drivers so their reports are field-for-field comparable)."""
+    drivers so their reports are field-for-field comparable).  Each
+    scheme's STAT counters also land as bandwidth-ledger rows ("traffic",
+    repro.bandwidth.adapters.engine_traffic) — the adapter view the
+    policy layer and cross-consumer parity tests read."""
+    from ..bandwidth.adapters import engine_traffic
+
     summary = {
         sch: {
             "accesses": r.accesses,
@@ -183,6 +188,7 @@ def summarize_workload(name: str, f: float, results: dict[str, SimResult],
             "llp_accuracy": r.llp_accuracy,
             "meta_hit_rate": r.meta_hit_rate,
             "breakdown": r.bandwidth_breakdown(),
+            "traffic": engine_traffic(r.stats).as_dict(),
         }
         for sch, r in results.items()
     }

@@ -43,6 +43,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..bandwidth import Ledger
+from ..bandwidth.adapters import kv_decode_event, kv_repack_event
 from ..compression.framing import DOMAIN_PAIR, DOMAIN_QUAD
 from ..compression.gate import COUNTER_INIT, COUNTER_MAX, ENABLE_THRESHOLD
 from ..compression.predictor import observe_layout
@@ -52,8 +54,10 @@ from ..kernels.ref import MARKER_LANES, marker_to_lanes, slot_markers
 
 @dataclass
 class KVStats:
-    raw_bytes: int = 0
-    cram_bytes: int = 0
+    """Pack/predictor event counters.  Byte accounting is NOT here: every
+    byte a decode step or repack moves lands in the cache's `ledger`
+    (repro.bandwidth), under consumer "kv"."""
+
     packed_pairs: int = 0
     raw_pairs: int = 0
     predictor_hits: int = 0
@@ -88,12 +92,17 @@ class CRAMKVCache:
                  *, batch: int = 1, policy: str = "dynamic",
                  packing: str = "pair", key: int = 0x5EED,
                  counter_init: int = COUNTER_INIT,
-                 interpret: bool | None = None):
-        assert policy in ("dynamic", "static", "off")
+                 interpret: bool | None = None,
+                 ledger: Ledger | None = None):
+        # "auto": the AutoTuner picked the packing (see `CRAMKVCache.auto`);
+        # at runtime it is the §VI dynamic gate over that layout.
+        assert policy in ("dynamic", "static", "off", "auto")
         assert packing in ("pair", "quad")
         self.packing = packing
         self.group_lanes = 2 if packing == "pair" else 4
-        assert max_pages % self.group_lanes == 0
+        # capacity rounds UP to a whole number of page groups: callers ask
+        # for the pages they need, the layout owns its own granularity
+        max_pages = -(-max_pages // self.group_lanes) * self.group_lanes
         self.page, self.n_kv, self.d = page, n_kv, head_dim
         self.d2 = 2 * head_dim
         self.max_pages = max_pages
@@ -132,6 +141,31 @@ class CRAMKVCache:
         self._uncounted = np.zeros(self.n_groups, bool)
         self._last_enabled = np.full(batch, policy != "off", bool)
         self.stats = KVStats()
+        # traffic lands here (consumer "kv"); pass a shared ledger to fold
+        # this cache's flows into a launcher-wide accounting
+        self.ledger = ledger if ledger is not None else Ledger("kv")
+        self.slot_bytes = page * n_kv * self.d2 * 2
+        self.strip_bytes = n_kv * (self.d2 + MARKER_LANES) * 2
+
+    @classmethod
+    def auto(cls, tuner, k_sample, v_sample, *, max_pages: int, page: int,
+             n_kv: int, head_dim: int, **kw):
+        """`policy="auto"`: let an `bandwidth.AutoTuner` pick the packing
+        layout (off / pair / quad) from a sample of the KV stream, then run
+        the §VI dynamic gate over the chosen layout.  Returns (cache,
+        PolicyChoice)."""
+        d2 = 2 * head_dim
+        choice = tuner.choose_kv_packing(
+            k=k_sample, v=v_sample, page=page,
+            slot_bytes=page * n_kv * d2 * 2,
+            strip_bytes=n_kv * (d2 + MARKER_LANES) * 2)
+        if choice.choice == "off":
+            cache = cls(max_pages, page, n_kv, head_dim,
+                        policy="off", packing="pair", **kw)
+        else:
+            cache = cls(max_pages, page, n_kv, head_dim, policy="auto",
+                        packing=choice.choice, **kw)
+        return cache, choice
 
     # legacy pair-era aliases (the default packing is the 2:1 pair layout)
     @property
@@ -238,6 +272,9 @@ class CRAMKVCache:
         lay_n = int(np.asarray(lay).sum())
         self.stats.packed_pairs += lay_n
         self.stats.raw_pairs += self.batch * w - lay_n
+        kv_repack_event(self.ledger, groups=self.batch * w, packed=lay_n,
+                        lanes=self.group_lanes, slot_bytes=self.slot_bytes,
+                        strip_bytes=self.strip_bytes)
         # §VI cost/benefit: fitness of *complete, not-yet-counted* repacked
         # groups drives the per-sequence counter — measured even while
         # disabled (the zeroed layout mask no longer feeds the update), so
@@ -245,7 +282,7 @@ class CRAMKVCache:
         # group is counted exactly once, when it completes: gate-flip
         # re-dirt re-lays groups out but never re-counts their fitness.
         complete = (idx + 1) * self.group_lanes * self.page <= self.tokens
-        if self.policy == "dynamic":
+        if self.policy in ("dynamic", "auto"):
             countable = jnp.asarray(complete & self._uncounted[idx])
             fit_n = (fit & countable[None, :]).sum(1)
             unfit_n = ((~fit) & countable[None, :]).sum(1)
@@ -338,8 +375,7 @@ class CRAMKVCache:
                != np.asarray(st["packed_mask"][:, :n]))
         self.stats.predictor_misses += int((mis & live).sum())
         self.stats.predictor_hits += int((~mis & live).sum())
-        self.stats.raw_bytes += bw["raw_bytes"]
-        self.stats.cram_bytes += bw["cram_bytes"]
+        kv_decode_event(self.ledger, bw)
         # last-layout predictor observation (copy, not alias: packed_mask's
         # buffer is donated at the next repack scatter and the predictor
         # must survive it)
@@ -379,4 +415,6 @@ class CRAMKVCache:
                       self.valid_per_page()[:, : self.group_lanes * n])
 
     def saving(self) -> float:
-        return 1.0 - self.stats.cram_bytes / max(self.stats.raw_bytes, 1)
+        """Cumulative decode-bandwidth saving, read from the ledger (the
+        "kv" consumer's read rows: raw layout bytes vs CRAM bytes)."""
+        return self.ledger.saving("read", consumer="kv")

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .. import configs
+from ..bandwidth import AutoTuner, Ledger
 from ..kv import CRAMKVCache
 from ..models import build, smoke_config
 from .steps import make_serve_step
@@ -35,7 +36,11 @@ def main(argv=None) -> dict:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--kv-policy", default="dynamic",
-                    choices=["dynamic", "static", "off"])
+                    choices=["dynamic", "static", "off", "auto"])
+    ap.add_argument("--kv-packing", default="pair",
+                    choices=["pair", "quad"],
+                    help="packing layout (ignored with --kv-policy auto, "
+                         "where the AutoTuner picks it)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -71,9 +76,11 @@ def main(argv=None) -> dict:
 
     # CRAM-KV mirror of one attention layer's real decode traffic: every
     # batch sequence streams through the batched cache, prefill in one
-    # vectorized append, then token-by-token (the incremental-repack path)
+    # vectorized append, then token-by-token (the incremental-repack path).
+    # All KV traffic lands in one serve-wide bandwidth ledger.
     page = 16
     kv_stats = None
+    ledger = Ledger("serve")
     if cfg.family in ("dense", "moe", "vlm", "hybrid"):
         hkv, hd = cfg.n_kv_heads, cfg.hd
         spec_key = next((k for k in sorted(cache) if k.startswith("b")
@@ -81,12 +88,21 @@ def main(argv=None) -> dict:
         if spec_key is not None:
             T = P + G - 1
             n_need = (T + page - 1) // page
-            max_pages = n_need + (n_need % 2)
-            kvc = CRAMKVCache(max_pages=max(max_pages, 2), page=page,
-                              n_kv=hkv, head_dim=hd, batch=B,
-                              policy=args.kv_policy)
             kcache = np.asarray(cache[spec_key]["attn"]["k"])[0]  # (B,T,..)
             vcache = np.asarray(cache[spec_key]["attn"]["v"])[0]
+            policy_choice = None
+            if args.kv_policy == "auto":
+                # AutoTuner picks the packing layout from the prefill KV
+                kvc, choice = CRAMKVCache.auto(
+                    AutoTuner(), kcache[:, :P], vcache[:, :P],
+                    max_pages=max(n_need, 2), page=page, n_kv=hkv,
+                    head_dim=hd, batch=B, ledger=ledger)
+                policy_choice = choice.as_dict()
+            else:
+                kvc = CRAMKVCache(max_pages=max(n_need, 2), page=page,
+                                  n_kv=hkv, head_dim=hd, batch=B,
+                                  policy=args.kv_policy,
+                                  packing=args.kv_packing, ledger=ledger)
             kvc.append(kcache[:, :P], vcache[:, :P])
             kvc.account_step()
             pairs_before_decode = kvc.stats.pack_pairs_processed
@@ -112,6 +128,8 @@ def main(argv=None) -> dict:
                           + kvc.stats.predictor_misses, 1), 4),
                 "kernel_vs_oracle_err": err,
                 "policy": args.kv_policy,
+                "packing": kvc.packing if kvc.policy != "off" else "off",
+                "policy_choice": policy_choice,
             }
 
     out = {
@@ -119,6 +137,7 @@ def main(argv=None) -> dict:
         "tokens_per_s": round(B * G / wall, 1),
         "sample": gen[0][:16].tolist(),
         "cram_kv": kv_stats,
+        "traffic": ledger.as_dict(),
     }
     print(json.dumps(out, indent=2))
     return out

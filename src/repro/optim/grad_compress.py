@@ -15,11 +15,18 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from ..bandwidth.adapters import (
+    grad_wire_event,
+    int8_wire_bytes,
+    tree_wire_bytes,
+)
 from ..compression.gate import (  # noqa: F401  (COUNTER_MAX re-exported)
     COUNTER_MAX,
     ENABLE_THRESHOLD,
     counter_step,
+    wire_counter_step,
 )
 
 ENABLE = ENABLE_THRESHOLD  # legacy alias
@@ -62,26 +69,36 @@ def compress_tree(grads, err):
 
 def gate_update(counter, rel_err, *, err_budget: float = 0.05,
                 bytes_saving: float = 0.75):
-    """Saturating-counter gate: wire-bytes saved vs quality cost."""
-    benefit = jnp.int32(bytes_saving * 16)
-    cost = jnp.where(rel_err > err_budget, jnp.int32(64), jnp.int32(0))
-    return counter_step(counter, cost, benefit, jnp)
+    """Saturating-counter gate: wire-bytes saved vs quality cost.  The
+    scaling constants live in compression.gate (§VI thresholds have one
+    home); `bytes_saving` is the measured fractional wire-byte win."""
+    return wire_counter_step(counter, bytes_saving, rel_err > err_budget,
+                             jnp)
 
 
 def gate_enabled(counter):
     return counter >= ENABLE_THRESHOLD
 
 
-def make_dp_compressed_step(model, mesh, *, lr=1e-3):
+def make_dp_compressed_step(model, mesh, *, lr=1e-3,
+                            policy: str = "dynamic", ledger=None):
     """Explicit-collective DP train step with gated int8 grad compression.
 
     shard_map over the 'data' axis: per-shard grads -> (optionally
     quantized) psum -> AdamW-style SGD update.  Used by tests and the
     grad-compression benchmark; the pjit path keeps XLA-inserted
     collectives.
+
+    policy: "dynamic" (the §VI gate; "auto" is an alias — the AutoTuner's
+    runtime decision rule IS the gate), "static" (always quantize), "off"
+    (plain collectives).  A bandwidth `ledger` books each step's wire
+    bytes (raw vs what the gate actually sent) under consumer "grad".
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
+
+    assert policy in ("dynamic", "static", "off", "auto")
+    dynamic = policy in ("dynamic", "auto")
 
     def step(params, err, counter, batch):
         def shard_fn(params, err, counter, batch):
@@ -97,7 +114,10 @@ def make_dp_compressed_step(model, mesh, *, lr=1e-3):
                     lambda x: jax.lax.pmean(x, "data"), dq)
                 return summed, new_e, rel
 
-            enabled = gate_enabled(counter)
+            if dynamic:
+                enabled = gate_enabled(counter)
+            else:
+                enabled = jnp.asarray(policy == "static")
             dq, new_err, rel = reduce_q(grads, err)
             plain = reduce_plain(grads)
             grads_out = jax.tree.map(
@@ -105,7 +125,11 @@ def make_dp_compressed_step(model, mesh, *, lr=1e-3):
             new_err = jax.tree.map(
                 lambda e, z: jnp.where(enabled, e, z * 0.0),
                 new_err, new_err)
-            counter_new = gate_update(counter, rel)
+            # measured wire-byte win of the int8 collective for THIS tree
+            # (adapters own the byte math), fed to the §VI counter
+            saving = 1.0 - int8_wire_bytes(grads) / tree_wire_bytes(grads)
+            counter_new = (gate_update(counter, rel, bytes_saving=saving)
+                           if dynamic else counter)
             new_params = jax.tree.map(
                 lambda p, g: (p.astype(jnp.float32)
                               - lr * g.astype(jnp.float32)).astype(p.dtype),
@@ -120,4 +144,16 @@ def make_dp_compressed_step(model, mesh, *, lr=1e-3):
             check_rep=False,
         )(params, err, counter, batch)
 
-    return jax.jit(step)
+    jit_step = jax.jit(step)
+    if ledger is None:
+        return jit_step
+
+    def step_with_ledger(params, err, counter, batch):
+        # the counter entering the step is what gated this step's wire
+        enabled = (bool(np.asarray(counter) >= ENABLE_THRESHOLD)
+                   if dynamic else policy == "static")
+        out = jit_step(params, err, counter, batch)
+        grad_wire_event(ledger, params, enabled=enabled)
+        return out
+
+    return step_with_ledger

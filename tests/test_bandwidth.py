@@ -1,0 +1,420 @@
+"""Bandwidth ledger + autotune policy layer (ISSUE 5).
+
+Cross-consumer parity: the ledger adapter views must reproduce each
+consumer's legacy counters exactly (engine STAT accesses, KV byte dicts,
+checkpoint manifests, gradient wire math).  AutoTuner: deterministic
+golden decision table, the no-slowdown fallback, and the §VI
+ledger-driven gate.  Plus the vectorized fpc/hybrid exact pack paths
+(byte-identical to the per-line packers) that `codec="auto"` relies on.
+
+Deliberately hypothesis-free: these run in tier-1 from a clean checkout.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.bandwidth import (
+    EV_READ,
+    EV_WRITE,
+    AutoTuner,
+    Ledger,
+    device_record,
+    device_totals,
+    engine_traffic,
+    probe_kv_fit_rates,
+)
+from repro.bandwidth.adapters import (
+    classify_tensor,
+    int8_wire_bytes,
+    tree_wire_bytes,
+)
+from repro.compression import codecs as codecs_reg
+from repro.compression.framing import LINE_BYTES
+from repro.kv import CRAMKVCache, synthetic_kv_stream
+
+PAGE, HKV, HD = 8, 1, 32
+
+
+def _adversarial_lines(n_random=40, seed=0):
+    rng = np.random.default_rng(seed)
+    blocks = [
+        rng.integers(0, 256, (n_random, 64)).astype(np.uint8),
+        np.zeros((4, 64), np.uint8),
+        rng.integers(-8, 8, (12, 16)).astype("<i4").view(np.uint8)
+        .reshape(-1, 64),
+        np.tile(rng.integers(0, 256, (6, 1)).astype(np.uint8), (1, 64)),
+        rng.integers(0, 2 ** 16, (12, 16)).astype("<i4").view(np.uint8)
+        .reshape(-1, 64),
+    ]
+    z = rng.integers(0, 256, (8, 64)).astype(np.uint8)
+    z[:, 12:52] = 0                      # interior zero runs (RLE chunking)
+    blocks.append(z)
+    lines = np.concatenate(blocks)
+    rng.shuffle(lines)
+    return lines
+
+
+# ------------------------------------------------------------------ ledger
+
+def test_ledger_record_totals_and_saving():
+    led = Ledger("kv")
+    led.record(EV_READ, raw=100, compressed=60)
+    led.record(EV_READ, raw=50, compressed=50, tensor_class="other")
+    led.record("write", raw=10)          # name form; compressed defaults raw
+    t = led.total()
+    assert (t["raw_bytes"], t["compressed_bytes"], t["count"]) == (160, 120, 3)
+    assert led.total(EV_READ, tensor_class="default")["raw_bytes"] == 100
+    assert led.saving(EV_READ, tensor_class="default") == pytest.approx(0.4)
+    with pytest.raises(KeyError):
+        led.record("bogus", raw=1)
+
+
+def test_ledger_merge_and_as_dict_roundtrip():
+    a, b = Ledger("one"), Ledger("two")
+    a.record(EV_READ, raw=10, compressed=5)
+    b.record(EV_WRITE, raw=7, compressed=7, tensor_class="weights")
+    a.merge(b)
+    d = a.as_dict()
+    assert d["one"]["default"]["read"]["raw_bytes"] == 10
+    assert d["two"]["weights"]["write"]["compressed_bytes"] == 7
+    assert a.consumers() == ("one", "two")
+
+
+def test_device_accumulator_absorbs_into_host_ledger():
+    tot = device_totals(jnp)
+    tot = device_record(tot, EV_READ, 128, 64)
+    tot = device_record(tot, EV_READ, 128, 64, count=2)
+    led = Ledger("dev")
+    led.absorb(tot)
+    t = led.total(EV_READ)
+    assert (t["raw_bytes"], t["compressed_bytes"], t["count"]) == (256, 128, 3)
+
+
+def test_device_record_traceable_under_jit():
+    @jax.jit
+    def step(tot, nbytes):
+        return device_record(tot, EV_WRITE, nbytes, nbytes // 2)
+
+    tot = device_totals(jnp)
+    for _ in range(3):
+        tot = step(tot, jnp.int32(100))
+    led = Ledger()
+    led.absorb(tot)
+    assert led.total(EV_WRITE)["raw_bytes"] == 300
+
+
+# ------------------------------------------------- engine adapter parity
+
+def test_engine_ledger_matches_legacy_access_count():
+    from repro.core.memsim import simulate
+    from repro.core.traces import build_workload
+
+    _, a, w, pab, pcd, pq, _ = build_workload("libq", 4000, seed=3)
+    for scheme in ("baseline", "cram", "dynamic", "explicit"):
+        r = simulate(scheme, a, w, pab, pcd, pq)
+        led = engine_traffic(r.stats)
+        assert led.total()["raw_bytes"] == r.accesses * LINE_BYTES
+        assert led.total()["compressed_bytes"] == r.accesses * LINE_BYTES
+        # category rows partition the access count exactly
+        assert led.total()["count"] == r.accesses
+
+
+def test_engine_ledger_category_partition():
+    stats = dict.fromkeys(
+        ("demand_reads", "read_probes", "wb_dirty", "wb_clean", "il_writes",
+         "meta_reads", "meta_wb", "pf_extra_access"), 0)
+    stats.update(demand_reads=10, read_probes=12, wb_dirty=3, meta_reads=2)
+    led = engine_traffic(stats)
+    assert led.total("read", tensor_class="lines")["count"] == 10
+    assert led.total("probe", tensor_class="lines")["count"] == 2
+    assert led.total("write", tensor_class="lines")["count"] == 3
+    assert led.total(tensor_class="metadata")["count"] == 2
+    # the untagged aggregate equals the access count — no summary rows
+    assert led.total()["raw_bytes"] == 17 * LINE_BYTES
+
+
+# ----------------------------------------------------- KV adapter parity
+
+def test_kv_ledger_matches_per_step_byte_dicts():
+    rng = np.random.default_rng(0)
+    cache = CRAMKVCache(max_pages=8, page=PAGE, n_kv=HKV, head_dim=HD,
+                        batch=2, policy="static")
+    raw_sum = cram_sum = 0
+    for t in (2 * PAGE, 3, PAGE, 1):
+        cache.append(*synthetic_kv_stream(rng, 2, t, HKV, HD))
+        bw = cache.account_step()
+        raw_sum += bw["raw_bytes"]
+        cram_sum += bw["cram_bytes"]
+    tot = cache.ledger.total("read", consumer="kv")
+    assert tot["raw_bytes"] == raw_sum
+    assert tot["compressed_bytes"] == cram_sum
+    assert cache.saving() == pytest.approx(1 - cram_sum / raw_sum)
+    # repack write traffic booked too, raw == groups * lanes * slot bytes
+    rp = cache.ledger.total("repack", consumer="kv")
+    assert rp["raw_bytes"] == (cache.stats.pack_pairs_processed
+                               * cache.group_lanes * cache.slot_bytes)
+
+
+def test_kv_shared_ledger_keeps_consumer_rows():
+    led = Ledger("serve")
+    rng = np.random.default_rng(1)
+    cache = CRAMKVCache(max_pages=4, page=PAGE, n_kv=HKV, head_dim=HD,
+                        policy="static", ledger=led)
+    cache.append(*synthetic_kv_stream(rng, 1, 2 * PAGE, HKV, HD))
+    cache.account_step()
+    assert led.total("read", consumer="kv")["raw_bytes"] > 0
+    assert led is cache.ledger
+
+
+# --------------------------------------------- checkpoint adapter parity
+
+def test_checkpoint_manifest_equals_ledger(tmp_path):
+    pytest.importorskip("msgpack")
+    from repro.checkpoint import load_checkpoint, save_checkpoint
+
+    rng = np.random.default_rng(0)
+    tree = {"w": rng.standard_normal((32, 64)).astype(np.float32),
+            "opt/moments": np.zeros((64, 64), np.float32)}
+    led = Ledger("train")
+    save_checkpoint(tmp_path, 1, tree, codec="cram", ledger=led)
+    out, man = load_checkpoint(tmp_path, 1, jax.tree.map(np.zeros_like,
+                                                         tree))
+    t = led.total("write")
+    assert t["raw_bytes"] == sum(m["raw_bytes"] for m in man["leaves"])
+    assert t["compressed_bytes"] == sum(m["stored_bytes"]
+                                        for m in man["leaves"])
+    # the embedded traffic view agrees with the shared ledger
+    embedded = man["traffic"]["checkpoint"]
+    total_raw = sum(ev["raw_bytes"] for tc in embedded.values()
+                    for ev in tc.values())
+    assert total_raw == t["raw_bytes"]
+    # tensor classes split by the taxonomy
+    assert led.total("write", tensor_class="moments")["raw_bytes"] > 0
+    assert classify_tensor("opt/moments") == "moments"
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+        assert np.array_equal(a, b)
+
+
+def test_checkpoint_auto_roundtrip_and_never_worse_than_raw(tmp_path):
+    pytest.importorskip("msgpack")
+    from repro.checkpoint import load_checkpoint, save_checkpoint
+
+    rng = np.random.default_rng(0)
+    tree = {"weights": rng.standard_normal(4096).astype(np.float32),
+            "opt/moments": np.zeros(8192, np.float32),
+            "misc": rng.integers(0, 256, 512, dtype=np.uint8),
+            "step": np.int32(7)}   # tiny leaf: framing must not inflate it
+    led_auto, led_raw = Ledger(), Ledger()
+    save_checkpoint(tmp_path / "auto", 1, tree, codec="auto",
+                    ledger=led_auto)
+    save_checkpoint(tmp_path / "raw", 1, tree, codec="raw", ledger=led_raw)
+    out, man = load_checkpoint(tmp_path / "auto", 1,
+                               jax.tree.map(np.zeros_like, tree))
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+        assert np.array_equal(a, b)
+    # per-leaf codecs recorded; zero-heavy moments leaf must compress
+    by_key = {m["key"]: m for m in man["leaves"]}
+    assert by_key["opt/moments"]["codec"] != "raw"
+    assert by_key["opt/moments"]["stored_bytes"] < \
+        by_key["opt/moments"]["raw_bytes"] / 4
+    # per-leaf no-slowdown: no leaf — scalar included — stores more than
+    # the plain raw writer would (stream framing must not eat the win)
+    for m in man["leaves"]:
+        assert m["stored_bytes"] <= m["raw_bytes"], m
+    assert (led_auto.total("write")["compressed_bytes"]
+            <= led_raw.total("write")["compressed_bytes"])
+
+
+# ------------------------------------------------- gradient wire parity
+
+def test_grad_wire_bytes_adapters():
+    tree = {"a": jnp.zeros((16, 16), jnp.float32),
+            "b": jnp.zeros((8,), jnp.bfloat16)}
+    assert tree_wire_bytes(tree) == 16 * 16 * 4 + 8 * 2
+    assert int8_wire_bytes(tree) == 16 * 16 + 4 + 8 + 4
+
+
+def test_dp_step_books_wire_bytes_per_policy():
+    from repro.optim.grad_compress import make_dp_compressed_step
+
+    class _Quad:
+        def loss(self, params, batch):
+            return jnp.mean((params["w"] - batch) ** 2)
+
+    mesh = jax.make_mesh((1,), ("data",))
+    params = {"w": jnp.ones((8, 8), jnp.float32)}
+    err = jax.tree.map(jnp.zeros_like, params)
+    batch = jnp.zeros((1, 8, 8), jnp.float32)
+    raw = tree_wire_bytes(params)
+    for policy, want_comp in (("static", int8_wire_bytes(params)),
+                              ("off", raw), ("auto", int8_wire_bytes(params))):
+        led = Ledger()
+        step = make_dp_compressed_step(_Quad(), mesh, policy=policy,
+                                       ledger=led)
+        from repro.compression.gate import COUNTER_INIT
+        counter = jnp.int32(COUNTER_INIT)
+        p, e, counter, loss = step(params, err, counter, batch)
+        t = led.total("write", consumer="grad")
+        assert t["raw_bytes"] == raw
+        assert t["compressed_bytes"] == want_comp
+        assert np.isfinite(float(loss))
+
+
+def test_gate_update_routes_through_shared_wire_gate():
+    from repro.compression import gate
+    from repro.optim import grad_compress as gc
+
+    c = jnp.int32(gate.ENABLE_THRESHOLD + 10)
+    # defaults reproduce the historical inline constants: +12 / -64
+    c1 = gc.gate_update(c, jnp.float32(0.01))
+    assert int(c1) == int(c) + int(0.75 * gate.WIRE_BENEFIT_SCALE)
+    c2 = gc.gate_update(c, jnp.float32(0.5))
+    assert int(c2) == int(c) + int(0.75 * gate.WIRE_BENEFIT_SCALE) \
+        - gate.WIRE_COST_OVER_BUDGET
+
+
+# ------------------------------------------------------------- autotuner
+
+def test_autotuner_golden_decision_table():
+    tuner = AutoTuner()
+    table = {
+        # (pair_fit, quad_fit) -> packing the §VI economy must pick
+        (0.0, 0.0): "off",
+        (0.95, 0.0): "pair",
+        (0.9, 0.85): "quad",
+        (0.1, 0.05): "off",     # below breakeven (~0.22): strip overhead
+                                # of the unpacked groups beats the fits
+    }
+    for (p, q), want in table.items():
+        got = tuner.choose_kv_packing({"pair": p, "quad": q})
+        assert got.choice == want, (p, q, got)
+        # deterministic: same telemetry, same decision
+        again = tuner.choose_kv_packing({"pair": p, "quad": q})
+        assert got.choice == again.choice and got.expected == again.expected
+
+
+def test_autotuner_ckpt_codec_probe():
+    tuner = AutoTuner()
+    zeros = np.zeros((64, 64), np.uint8)
+    rand = np.random.default_rng(0).integers(0, 256, (64, 64),
+                                             dtype=np.uint8)
+    assert tuner.choose_ckpt_codec(zeros).choice in ("bdi", "hybrid", "fpc")
+    assert tuner.choose_ckpt_codec(rand).choice == "raw"
+    # expected sizes cover every registered line codec
+    got = tuner.choose_ckpt_codec(zeros)
+    assert set(got.expected) == set(codecs_reg.codec_names("line64"))
+
+
+def test_autotuner_ledger_gate_disables_and_reenables():
+    """observe() judges each WINDOW of new traffic: a regime change flips
+    the gate within a bounded number of windows regardless of how much
+    history the long-lived ledger has accumulated."""
+    tuner = AutoTuner()
+    led = Ledger("kv")
+    # long compressible history: counter saturates enabled
+    for _ in range(50):
+        led.record(EV_READ, raw=100, compressed=50)
+        tuner.observe(led, key="kv", consumer="kv")
+    assert tuner.gate_enabled("kv")
+    # an empty window is a no-op, not a benefit
+    before = tuner.counter("kv")
+    tuner.observe(led, key="kv", consumer="kv")
+    assert tuner.counter("kv") == before
+    # regime change: compression starts HURTING; despite the cumulative
+    # saving still being positive, the per-window costs flip the MSB fast
+    flips = 0
+    while tuner.gate_enabled("kv"):
+        led.record(EV_READ, raw=100, compressed=130)
+        tuner.observe(led, key="kv", consumer="kv")
+        flips += 1
+        assert flips < 40, "gate failed to disable on bad windows"
+    assert led.saving(EV_READ) > 0          # lifetime totals still look good
+    choice = tuner.choose_kv_packing({"pair": 1.0, "quad": 1.0})
+    assert choice.choice == "off"                     # forced by the gate
+    # compressible traffic returns: §VI re-enable
+    flips = 0
+    while not tuner.gate_enabled("kv"):
+        led.record(EV_READ, raw=100, compressed=40)
+        tuner.observe(led, key="kv", consumer="kv")
+        flips += 1
+        assert flips < 40, "gate failed to re-enable on good windows"
+
+
+def test_kv_cache_auto_constructor():
+    rng = np.random.default_rng(0)
+    tight = synthetic_kv_stream(rng, 1, 6 * PAGE, HKV, HD, scale=2e-4)
+    noise = synthetic_kv_stream(rng, 1, 6 * PAGE, HKV, HD,
+                                compressible=False)
+    cache, choice = CRAMKVCache.auto(AutoTuner(), *tight, max_pages=8,
+                                     page=PAGE, n_kv=HKV, head_dim=HD)
+    assert choice.choice in ("pair", "quad")
+    assert cache.policy == "auto" and cache.packing == choice.choice
+    cache_off, choice_off = CRAMKVCache.auto(AutoTuner(), *noise,
+                                             max_pages=8, page=PAGE,
+                                             n_kv=HKV, head_dim=HD)
+    assert choice_off.choice == "off" and cache_off.policy == "off"
+    # the auto cache runs end-to-end
+    cache.append(*tight)
+    bw = cache.account_step()
+    assert bw["cram_bytes"] < bw["raw_bytes"]
+
+
+def test_kv_cache_auto_runs_the_dynamic_gate():
+    """policy="auto" is the §VI gate over the tuner-chosen layout: when
+    the live stream stops compressing, the counter must actually move and
+    disable packing (regression: the repack counter update used to fire
+    only for policy=="dynamic", leaving auto permanently static)."""
+    from repro.compression.gate import ENABLE_THRESHOLD
+
+    rng = np.random.default_rng(0)
+    tight = synthetic_kv_stream(rng, 1, 4 * PAGE, HKV, HD, scale=2e-4)
+    cache, choice = CRAMKVCache.auto(
+        AutoTuner(), *tight, max_pages=32, page=PAGE, n_kv=HKV,
+        head_dim=HD, counter_init=ENABLE_THRESHOLD + 1)
+    assert cache.policy == "auto" and choice.choice != "off"
+    cache.append(*tight)
+    cache.repack()
+    assert cache.enabled().all()
+    # incompressible traffic must drag the counter below the MSB (each
+    # complete unfit group costs one tick; the prefill credited a few)
+    noise = synthetic_kv_stream(rng, 1, 16 * PAGE, HKV, HD,
+                                compressible=False)
+    cache.append(*noise)
+    cache.repack()
+    assert not cache.enabled().any()
+
+
+def test_probe_kv_fit_rates_orders_compressibility():
+    rng = np.random.default_rng(0)
+    tight = synthetic_kv_stream(rng, 1, 8 * PAGE, HKV, HD, scale=2e-4)
+    noise = synthetic_kv_stream(rng, 1, 8 * PAGE, HKV, HD,
+                                compressible=False)
+    rt = probe_kv_fit_rates(*tight, page=PAGE)
+    rn = probe_kv_fit_rates(*noise, page=PAGE)
+    assert rt["pair"] > 0.9 and rt["quad"] > 0.9
+    assert rn["pair"] == 0.0 and rn["quad"] == 0.0
+
+
+# ------------------------------------- vectorized exact pack path parity
+
+@pytest.mark.parametrize("codec", ["raw", "bdi", "fpc", "hybrid"])
+def test_pack_batch_bit_identical_to_per_line(codec):
+    lines = _adversarial_lines()
+    c = codecs_reg.get_codec(codec)
+    ref = b"".join(bytes(c.pack_line(line)) for line in lines)
+    got = np.asarray(c.pack_batch(lines)).tobytes()
+    assert got == ref
+
+
+@pytest.mark.parametrize("codec", ["fpc", "hybrid"])
+def test_checkpoint_stream_roundtrip_vectorized(codec):
+    from repro.checkpoint.codec import (
+        cram_compress_bytes,
+        cram_decompress_bytes,
+    )
+
+    raw = _adversarial_lines(seed=7).tobytes() + b"tail-bytes"
+    blob = cram_compress_bytes(raw, codec=codec)
+    assert cram_decompress_bytes(blob) == raw
