@@ -1,8 +1,13 @@
 """Figs. 8/15: bandwidth breakdown (data / metadata / mispredict /
 clean-writeback+invalidate), normalized to the uncompressed baseline.
 
-Breakdowns are computed once by sweep_report.bandwidth_breakdowns from the
-batched suite sweep; this module only formats them as CSV rows.
+Breakdowns are computed once by sweep_report.bandwidth_breakdowns from
+each scheme's bandwidth-ledger rows (`engine_traffic` -> the embedded
+"traffic" dicts, re-categorized by `engine_breakdown`); this module only
+formats them as CSV rows.  The figure therefore reads the SAME byte
+accounting the autotune policy layer does — the legacy private counters
+are no longer in the render path (pinned equal by
+tests/test_benchmarks.py).
 """
 
 from __future__ import annotations

@@ -11,6 +11,8 @@ Sweep mode (the fast path — ONE batched jitted dispatch per section):
                                                     #   table
     python benchmarks/run.py --sweep policy         # AutoTuner chosen-vs-best-
                                                     #   static (no-slowdown)
+    python benchmarks/run.py --sweep serve-spill    # continuous-batching churn
+                                                    #   + compressed KV spill
 
 Sweep flags:
     --events N        trace length per workload   (default $REPRO_BENCH_EVENTS
@@ -66,6 +68,15 @@ The consolidated JSON report written by --sweep has this schema:
         "kv_pages": {stream: {page_codec: {fit_rate, layout,
                       pages_per_slot}}},
         "tensors":  {tensor: {codec: ratio}}       # ckpt/gradient bytes
+      },
+      "serve_spill": {                  # present for --sweep serve-spill/all
+        "curves":      {spill_packing: churn curve — spill/ledger/decode
+                        summaries, wall_s, wake_state_parity},
+        "incompressible_quad": same curve on a noise stream,
+        "spill_bytes": {spill_packing: {raw, stored, saving}},
+        "guarantee":   {same_schedule_across_packings,
+                        compressed_moves_fewer_bytes, spill_no_slowdown,
+                        wake_state_parity}      # the flags CI enforces
       },
       "policy": {                       # present for --sweep policy/all
         "kv":         {stream: {chosen, bytes: {off/pair/quad/auto},
@@ -189,6 +200,14 @@ def _sweep_policy(args) -> dict:
     return sweep(decode_steps=args.serve_steps)
 
 
+def _sweep_serve_spill(args) -> dict:
+    """Continuous-batching churn with compressed KV spill: same schedule
+    under spill packing off/pair/quad + the no-slowdown guarantee flags."""
+    from benchmarks.serve_bench import spill_sweep
+
+    return spill_sweep(steps=args.serve_steps)
+
+
 def run_sweep(args) -> None:
     # --events/--workloads/--schemes only shape the memsim section; the
     # compress scan always covers the fixed Fig. 4 corpus, so record the
@@ -243,6 +262,15 @@ def run_sweep(args) -> None:
                   {k: f"pps={d['pages_per_slot']:.2f}"
                       f"/fit={d['int4_fit_rate']:.2f}"
                    for k, d in q.items()})
+    if args.sweep in ("serve-spill", "all"):
+        report["serve_spill"] = _sweep_serve_spill(args)
+        sb = report["serve_spill"]["spill_bytes"]
+        print("serve-spill savings:",
+              " ".join(f"{spk}={d['saving']:.4f}" for spk, d in sb.items()))
+        flags = report["serve_spill"]["guarantee"]
+        print("serve-spill guarantee:", flags)
+        if not all(flags.values()):
+            print("SERVE-SPILL GUARANTEE VIOLATED", file=sys.stderr)
     if args.sweep in ("policy", "all"):
         report["policy"] = _sweep_policy(args)
         pol = report["policy"]
@@ -292,7 +320,7 @@ def main() -> None:
                     help="legacy mode: per-figure modules to run")
     ap.add_argument("--sweep",
                     choices=("all", "memsim", "compress", "serve", "codecs",
-                             "policy"),
+                             "policy", "serve-spill"),
                     help="batched sweep mode; emits one JSON report")
     ap.add_argument("--serve-steps", type=int, default=32,
                     help="decode steps per serve-bench curve")

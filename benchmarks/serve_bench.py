@@ -10,6 +10,14 @@ step), the CRAM vs raw bytes a decode step DMAs, and the bandwidth saving.
 Sweep mode (`benchmarks/run.py --sweep serve`) emits the JSON curves plus
 an incremental-vs-full-rebuild parity check; legacy mode
 (`benchmarks/run.py serve_bench`) prints summary rows.
+
+The churn tier (`--sweep serve-spill`, committed snapshot
+BENCH_serve.json): a continuous-batching ServeLoop under sequence churn —
+staggered admits into fewer slots than live sequences, so cold sequences
+spill compressed to the host tier and wake on their next step.  Running
+the SAME schedule under spill packing "off" vs "quad" isolates the link
+bytes the compressed spill saves; the report carries the no-slowdown
+flags CI enforces.
 """
 
 from __future__ import annotations
@@ -162,6 +170,135 @@ def sweep(policies=("static", "dynamic", "off"), batches=(1, 4),
     }
 
 
+def churn_spill_curve(*, spill_packing="quad", slots=3, n_seqs=10,
+                      max_pages=8, steps=48, admit_every=3,
+                      policy="static", packing="pair", compressible=True,
+                      seed=0) -> dict:
+    """One continuous-batching churn trajectory with compressed spill.
+
+    Every `admit_every` steps a new sequence joins (evicting the coldest
+    to the spill tier when no slot is free); each step decodes one token
+    for a seeded ~70% subset of live sequences (spilled ones wake first);
+    sequences retire at their own target length.  The spill packing is
+    the independent axis: the schedule (and therefore the raw-byte duals)
+    is identical across packings for a fixed seed, so stored-byte deltas
+    measure the LINK win alone."""
+    from repro.serving import ServeLoop
+
+    rng = np.random.default_rng(seed)
+    loop = ServeLoop(slots=slots, max_pages=max_pages, page=PAGE, n_kv=HKV,
+                     head_dim=HD, policy=policy, packing=packing,
+                     spill_packing=spill_packing)
+    tokens, target, stream, next_sid = {}, {}, {}, 0
+    t0 = time.perf_counter()
+    for step_i in range(steps):
+        if step_i % admit_every == 0 and next_sid < n_seqs:
+            t = int(rng.integers(PAGE, 3 * PAGE))
+            tgt = int(rng.integers(4 * PAGE, (max_pages - 1) * PAGE))
+            # one draw per sequence: a real sequence's KV hovers around
+            # ITS OWN base, so its whole stream comes from one generator
+            # call (per-step draws would redraw the base every token and
+            # no page could delta-pack)
+            ks, vs = _stream(rng, 1, tgt, compressible)
+            loop.admit(next_sid, ks[0, :t], vs[0, :t])
+            tokens[next_sid], target[next_sid] = t, tgt
+            stream[next_sid] = (ks[0], vs[0])
+            next_sid += 1
+        live = sorted(loop.seqs)
+        if not live:
+            continue
+        ids = [sid for sid in live if rng.random() < 0.7] or live[:1]
+        kvs = {}
+        for sid in ids:
+            ks, vs = stream[sid]
+            pos = tokens[sid]
+            kvs[sid] = (ks[pos:pos + 1], vs[pos:pos + 1])
+        loop.step(kvs)                       # wakes spilled ids first
+        for sid in ids:
+            tokens[sid] += 1
+            if tokens[sid] >= target[sid]:
+                loop.retire(sid)
+                del stream[sid]
+    wall = time.perf_counter() - t0
+    # wake-state parity: every surviving active slot must equal its own
+    # rebuild oracle (spill round-trips included — the serve-tier analog
+    # of incremental_equals_rebuild)
+    loop.cache.repack()
+    parity = all(
+        all(bool(jnp.array_equal(a[kk], b[kk])) for kk in a)
+        for a, b in (
+            (loop.cache.slot_physical_state(loop.seqs[sid].slot),
+             loop.cache.slot_reference_state(loop.seqs[sid].slot))
+            for sid in loop.active_seqs())
+    )
+    sp = loop.spill.summary()
+    return {
+        "spill_packing": spill_packing, "slots": slots, "n_seqs": n_seqs,
+        "steps": steps, "compressible": compressible, "policy": policy,
+        "hot_packing": packing,
+        **{f"count_{k}": v for k, v in loop.counts.items()},
+        "spill": sp,
+        "spill_events": {
+            "evict": loop.ledger.total("spill", consumer="kv",
+                                       tensor_class="kv-evict"),
+            "restore": loop.ledger.total("spill", consumer="kv",
+                                         tensor_class="kv-restore"),
+        },
+        "decode_saving": round(loop.ledger.saving("read", consumer="kv"), 4),
+        "wake_state_parity": parity,
+        "wall_s": round(wall, 4),
+    }
+
+
+def spill_sweep(spill_packings=("off", "pair", "quad"), steps=48,
+                seed=0) -> dict:
+    """The serve-spill report: one churn schedule per spill packing (same
+    seed => same schedule => same raw-byte duals), plus the guarantee
+    flags CI enforces:
+
+      * compressed_moves_fewer_bytes — quad stored < off stored;
+      * spill_no_slowdown            — stored never exceeds the raw dual
+                                       by more than the fit-bitmap epsilon
+                                       (holds on the INCOMPRESSIBLE churn
+                                       too: raw groups cross untouched);
+      * wake_state_parity            — every wake resurrected its slot
+                                       bit-identical to the rebuild oracle.
+    """
+    curves = {spk: churn_spill_curve(spill_packing=spk, steps=steps,
+                                     seed=seed)
+              for spk in spill_packings}
+    noise = churn_spill_curve(spill_packing="quad", steps=steps, seed=seed,
+                              compressible=False)
+    base = curves[spill_packings[0]]["spill"]
+    same_schedule = all(
+        c["spill"]["raw_bytes"] == base["raw_bytes"]
+        and c["spill"]["spills"] == base["spills"]
+        for c in curves.values())
+    eps = 1.001                       # fit bitmap: 1 byte per spill group
+    flags = {
+        "same_schedule_across_packings": same_schedule,
+        "compressed_moves_fewer_bytes":
+            curves["quad"]["spill"]["stored_bytes"]
+            < curves["off"]["spill"]["stored_bytes"]
+            if {"off", "quad"} <= set(curves) else None,
+        "spill_no_slowdown": all(
+            c["spill"]["stored_bytes"] <= c["spill"]["raw_bytes"] * eps
+            for c in (*curves.values(), noise)),
+        "wake_state_parity": all(
+            c["wake_state_parity"] for c in (*curves.values(), noise)),
+    }
+    return {
+        "page": PAGE, "n_kv": HKV, "head_dim": HD,
+        "curves": curves,
+        "incompressible_quad": noise,
+        "spill_bytes": {spk: {"raw": c["spill"]["raw_bytes"],
+                              "stored": c["spill"]["stored_bytes"],
+                              "saving": c["spill"]["saving"]}
+                        for spk, c in curves.items()},
+        "guarantee": flags,
+    }
+
+
 def run() -> list[tuple]:
     """Legacy-mode rows for benchmarks/run.py."""
     rep = sweep(batches=(1, 2), decode_steps=12)
@@ -177,4 +314,14 @@ def run() -> list[tuple]:
     rows.append(("serve/parity", 0.0,
                  f"incr_eq_rebuild={p['incremental_equals_rebuild']} "
                  f"err={p['kernel_vs_oracle_err']:.1e}"))
+    sp = spill_sweep(steps=16)
+    for spk, b in sp["spill_bytes"].items():
+        rows.append((f"serve/spill_{spk}", 0.0,
+                     f"raw={b['raw']} stored={b['stored']} "
+                     f"saving={b['saving']:.3f}"))
+    g = sp["guarantee"]
+    rows.append(("serve/spill_guarantee", 0.0,
+                 f"fewer_bytes={g['compressed_moves_fewer_bytes']} "
+                 f"no_slowdown={g['spill_no_slowdown']} "
+                 f"wake_parity={g['wake_state_parity']}"))
     return rows

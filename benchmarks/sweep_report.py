@@ -62,21 +62,31 @@ def speedup_aggregates(workloads: dict, include=None) -> dict:
 
 def bandwidth_breakdowns(workloads: dict,
                          schemes=("explicit", "cram")) -> dict:
-    """Fig. 8/15 per-workload bandwidth breakdowns normalized to baseline."""
+    """Fig. 8/15 per-workload bandwidth breakdowns normalized to baseline.
+
+    Computed from each scheme's embedded bandwidth-ledger rows
+    ("traffic", `repro.bandwidth.adapters.engine_traffic`) via
+    `engine_breakdown` — NOT from the legacy private counters — so the
+    figures and the policy layer consume one view of the engine's byte
+    economy.  tests/test_benchmarks.py pins this view equal to the
+    legacy `SimResult.bandwidth_breakdown` category math."""
+    from repro.bandwidth.adapters import engine_breakdown
+
     out: dict[str, dict] = {sch: {} for sch in schemes}
     for wl, r in sorted(workloads.items()):
         base = r["baseline_accesses"]
         for sch in schemes:
             if sch not in r["schemes"]:
                 continue
-            b = r["schemes"][sch]["breakdown"]
-            norm = {k: v / base for k, v in b.items()}
+            b = engine_breakdown(r["schemes"][sch]["traffic"])
             out[sch][wl] = {
-                "data": norm["data_reads"] + norm["wb_dirty"],
-                "metadata": norm["metadata"],
-                "mispredict": norm["mispredict_extra"],
-                "wbclean+inv": norm["wb_clean+invalidate"],
-                "total": r["schemes"][sch]["accesses"] / base,
+                "data": b["data"] / base,
+                "metadata": b["metadata"] / base,
+                "mispredict": b["mispredict"] / base,
+                "wbclean+inv": b["wbclean+inv"] / base,
+                # the ledger rows partition the access count exactly, so
+                # the normalized total IS accesses/baseline
+                "total": b["total"] / base,
             }
     return out
 

@@ -18,11 +18,13 @@ from .adapters import (
     checkpoint_leaf_event,
     checkpoint_restore_event,
     classify_tensor,
+    engine_breakdown,
     engine_traffic,
     grad_wire_event,
     int8_wire_bytes,
     kv_decode_event,
     kv_repack_event,
+    kv_spill_event,
     tree_wire_bytes,
 )
 from .autotune import (
@@ -30,6 +32,7 @@ from .autotune import (
     AutoTuner,
     PolicyChoice,
     kv_expected_bytes_per_page,
+    kv_spill_bytes_per_page,
     probe_kv_fit_rates,
 )
 from .ledger import (
@@ -50,9 +53,11 @@ __all__ = [
     "Ledger", "device_totals", "device_record", "event_id",
     "EV_READ", "EV_WRITE", "EV_PROBE", "EV_REPACK", "EV_SPILL",
     "N_EVENTS", "EVENT_NAMES",
-    "engine_traffic", "kv_decode_event", "kv_repack_event",
+    "engine_traffic", "engine_breakdown",
+    "kv_decode_event", "kv_repack_event", "kv_spill_event",
     "classify_tensor", "checkpoint_leaf_event", "checkpoint_restore_event",
     "tree_wire_bytes", "int8_wire_bytes", "grad_wire_event",
     "AutoTuner", "PolicyChoice", "KV_PACKINGS",
-    "kv_expected_bytes_per_page", "probe_kv_fit_rates",
+    "kv_expected_bytes_per_page", "kv_spill_bytes_per_page",
+    "probe_kv_fit_rates",
 ]

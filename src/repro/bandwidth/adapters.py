@@ -14,7 +14,7 @@ from __future__ import annotations
 import numpy as np
 
 from ..compression.framing import LINE_BYTES
-from .ledger import EV_PROBE, EV_READ, EV_REPACK, EV_WRITE, Ledger
+from .ledger import EV_PROBE, EV_READ, EV_REPACK, EV_SPILL, EV_WRITE, Ledger
 
 # ---------------------------------------------------------------- trace engine
 
@@ -27,7 +27,10 @@ def engine_traffic(stats: dict, *, consumer: str = "engine") -> Ledger:
       probe  — extra LLP probes (`read_probes - demand_reads`) on data
                lines; metadata-cache fills/writebacks on the "metadata"
                tensor class
-      write  — dirty + clean + invalidate writebacks
+      write  — dirty writebacks on "lines"; clean writebacks + invalidate
+               line writes on "lines-clean" (split so the Fig. 8/15
+               breakdown's data vs wbclean+inv categories are derivable
+               from ledger rows alone — see `engine_breakdown`)
       spill  — next-line prefetch extra accesses (`pf_extra_access`)
 
     Invariant (pinned by tests, and holding for EVERY call — no summary
@@ -46,12 +49,36 @@ def engine_traffic(stats: dict, *, consumer: str = "engine") -> Ledger:
 
     put(EV_READ, stats["demand_reads"], "lines")
     put(EV_PROBE, stats["read_probes"] - stats["demand_reads"], "lines")
-    put(EV_WRITE,
-        stats["wb_dirty"] + stats["wb_clean"] + stats["il_writes"], "lines")
+    put(EV_WRITE, stats["wb_dirty"], "lines")
+    put(EV_WRITE, stats["wb_clean"] + stats["il_writes"], "lines-clean")
     put("spill", stats["pf_extra_access"], "lines")
     put(EV_READ, stats["meta_reads"], "metadata")
     put(EV_WRITE, stats["meta_wb"], "metadata")
     return led
+
+
+def engine_breakdown(traffic: dict, *, consumer: str = "engine") -> dict:
+    """Fig. 8/15 access categories re-derived from `engine_traffic` ledger
+    rows, in line counts — so figures and the policy layer consume ONE
+    view of the engine's byte economy instead of parallel private
+    counters.  `traffic` is the `Ledger.as_dict()` form the workload
+    summaries embed ("traffic"); equality with the legacy
+    `SimResult.bandwidth_breakdown` counters is pinned by
+    tests/test_benchmarks.py."""
+    rows = traffic.get(consumer, {})
+
+    def cnt(tensor_class, event):
+        return rows.get(tensor_class, {}).get(event, {}).get("count", 0)
+
+    return {
+        "data": cnt("lines", "read") + cnt("lines", "write"),
+        "metadata": cnt("metadata", "read") + cnt("metadata", "write"),
+        "mispredict": cnt("lines", "probe"),
+        "wbclean+inv": cnt("lines-clean", "write"),
+        "prefetch": cnt("lines", "spill"),
+        "total": sum(v["count"] for events in rows.values()
+                     for v in events.values()),
+    }
 
 
 # ------------------------------------------------------------------- KV cache
@@ -77,6 +104,21 @@ def kv_repack_event(ledger: Ledger, *, groups: int, packed: int, lanes: int,
             + (groups - packed) * lanes * slot_bytes)
     ledger.record(EV_REPACK, raw=raw, compressed=comp, count=groups,
                   tensor_class=tensor_class, consumer="kv")
+
+
+def kv_spill_event(ledger: Ledger, *, raw: int, compressed: int,
+                   direction: str = "evict",
+                   tensor_class: str | None = None) -> tuple[int, int]:
+    """One sequence crossing the HBM<->host spill link still compressed
+    (serving.SpillStore): raw = what evicting the decompressed KV pages
+    would have moved, compressed = the packed payload bytes that actually
+    crossed.  Exactly ONE spill event per evict and per restore (pinned by
+    tests/test_bandwidth.py); `direction` tags the tensor class so the two
+    flows stay separately queryable under consumer "kv"."""
+    assert direction in ("evict", "restore"), direction
+    return ledger.record(EV_SPILL, raw=raw, compressed=compressed, count=1,
+                         tensor_class=tensor_class or f"kv-{direction}",
+                         consumer="kv")
 
 
 # ----------------------------------------------------------------- checkpoint
@@ -141,7 +183,8 @@ def grad_wire_event(ledger: Ledger, tree, *, enabled: bool,
 
 
 __all__ = [
-    "engine_traffic", "kv_decode_event", "kv_repack_event",
+    "engine_traffic", "engine_breakdown",
+    "kv_decode_event", "kv_repack_event", "kv_spill_event",
     "classify_tensor", "checkpoint_leaf_event", "checkpoint_restore_event",
     "tree_wire_bytes", "int8_wire_bytes", "grad_wire_event",
 ]

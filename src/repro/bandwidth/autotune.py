@@ -82,6 +82,27 @@ def kv_expected_bytes_per_page(fit_rate: float, lanes: int,
     return (fit_rate * packed_group + (1.0 - fit_rate) * raw_group) / lanes
 
 
+def kv_spill_bytes_per_page(fit_rate: float, lanes: int,
+                            slot_bytes: float = 1.0,
+                            strip_bytes: float | None = None) -> float:
+    """Expected bytes per page crossing the HBM<->host spill link per
+    evict/restore (the `serving.SpillStore` payload model): a fitting
+    group moves one packed slot plus its base row; an unfitting group
+    moves its `lanes` pages raw with NO strip — the spill payload stores
+    raw groups without in-band metadata, unlike the hot decode path where
+    every resident group carries a strip.  Baseline ("off") spills every
+    page raw: exactly `slot_bytes` per page.
+
+    The missing per-raw-group strip term is why the two tiers genuinely
+    diverge: at mid fit rates, packing can LOSE on the hot decode path
+    (strips on every group) while still winning on the spill link."""
+    if strip_bytes is None:
+        strip_bytes = slot_bytes / 8.0
+    packed_group = slot_bytes + strip_bytes
+    raw_group = lanes * slot_bytes
+    return (fit_rate * packed_group + (1.0 - fit_rate) * raw_group) / lanes
+
+
 def probe_kv_fit_rates(k, v, *, page: int, max_groups: int = 64) -> dict:
     """Measure pair/quad pack-fit rates on a sample KV stream.
 
@@ -174,9 +195,22 @@ class AutoTuner:
                           slot_bytes: float = 1.0,
                           strip_bytes: float | None = None,
                           stream: str | None = None,
-                          gate_key: str = "kv") -> PolicyChoice:
+                          tier: str = "hot",
+                          gate_key: str | None = None) -> PolicyChoice:
         """Pick off/pair/quad from fit rates (given, probed from a k/v
-        sample, or read from the codec-sweep kv_pages tables)."""
+        sample, or read from the codec-sweep kv_pages tables).
+
+        `tier` makes packing a per-tier policy axis: "hot" judges
+        candidates under the decode DMA model (`kv_expected_bytes_per_page`
+        — strips on every resident group), "spill" under the spill-link
+        model (`kv_spill_bytes_per_page` — strip only on packed groups),
+        and each tier carries its own §VI ledger gate key ("kv" vs
+        "kv-spill") so observe() windows are judged per tier."""
+        assert tier in ("hot", "spill"), tier
+        if gate_key is None:
+            gate_key = "kv" if tier == "hot" else "kv-spill"
+        model = (kv_expected_bytes_per_page if tier == "hot"
+                 else kv_spill_bytes_per_page)
         basis = "tables"
         if fit_rates is None and k is not None:
             assert page is not None, "probe needs the page size"
@@ -190,7 +224,7 @@ class AutoTuner:
             }
         expected = {"off": float(slot_bytes)}
         for packing, lanes in (("pair", 2), ("quad", 4)):
-            expected[packing] = kv_expected_bytes_per_page(
+            expected[packing] = model(
                 float(fit_rates.get(packing, 0.0)), lanes,
                 slot_bytes, strip_bytes)
         choice = min(expected, key=lambda p: (expected[p],
@@ -200,7 +234,8 @@ class AutoTuner:
         if (expected[choice] > expected["off"] * (1.0 - self.margin)
                 or not self.gate_enabled(gate_key)):
             choice = "off"
-        return PolicyChoice("kv", choice, expected, basis)
+        target = "kv" if tier == "hot" else "kv-spill"
+        return PolicyChoice(target, choice, expected, basis)
 
     # --------------------------------------------------- checkpoint codec
     def choose_ckpt_codec(self, sample_lines=None, *,
@@ -273,6 +308,7 @@ class AutoTuner:
 
 __all__ = [
     "AutoTuner", "PolicyChoice", "KV_PACKINGS", "KV_PAGE_CODEC",
-    "kv_expected_bytes_per_page", "probe_kv_fit_rates",
+    "kv_expected_bytes_per_page", "kv_spill_bytes_per_page",
+    "probe_kv_fit_rates",
     "COUNTER_INIT", "ENABLE_THRESHOLD",
 ]

@@ -1,12 +1,21 @@
-"""Serving launcher: batched greedy decoding + CRAM-KV bandwidth accounting.
+"""Serving launcher: model decode + continuous-batching CRAM-KV tier.
 
-Runs a reduced model end-to-end: prefill via teacher-forced forward, then
-step decoding with the dense cache, while mirroring one layer's KV stream
-through the CRAM-KV paged cache (kernels path) to report the compression /
-bandwidth profile of real decode traffic.
+Runs a reduced model end-to-end (prefill via teacher-forced forward, then
+step decoding with the dense cache) and mirrors one layer's REAL KV
+stream through the production serve tier (`repro.serving.ServeLoop`):
+a fixed pool of `--slots` batch lanes with slot reuse, staggered admits
+every `--admit-rate` steps, and a compressed host spill tier behind them
+(`--spill-pages` caps it).  With `--slots` smaller than the batch, cold
+sequences spill COMPRESSED and wake on their next decode step — every
+crossing books a ledger `spill` event with compressed duals, so the
+printed traffic is the serve tier's whole byte story.
+
+This module is deliberately thin: scheduling, spill, sharded attend and
+per-tier autotuning all live in `repro.serving`; the launcher only maps
+CLI flags onto one ServeLoop and feeds it the model's KV traffic.
 
   python -m repro.launch.serve --arch phi4_mini_3_8b --smoke \
-      --batch 4 --prompt-len 32 --gen 32
+      --batch 4 --slots 2 --admit-rate 4 --kv-policy auto
 """
 
 from __future__ import annotations
@@ -21,10 +30,69 @@ import numpy as np
 
 from .. import configs
 from ..bandwidth import AutoTuner, Ledger
-from ..kv import CRAMKVCache
 from ..models import build, smoke_config
+from ..serving import ServeLoop
 from .steps import make_serve_step
 from .train import PRESETS
+
+
+def _serve_tier(args, cfg, cache, ledger, *, prompt_len, total_tokens):
+    """Continuous-batching mirror of one layer's KV stream: staggered
+    admits into `--slots` lanes, per-step decode appends, retire at end
+    of stream — spill crossings happen whenever live > slots."""
+    hkv, hd = cfg.n_kv_heads, cfg.hd
+    spec_key = next((k for k in sorted(cache) if k.startswith("b")
+                     and "attn" in cache[k]), None)
+    if spec_key is None:
+        return None, ledger
+    page = 16
+    P, T = prompt_len, total_tokens
+    kcache = np.asarray(cache[spec_key]["attn"]["k"])[0]   # (B, T, hkv, hd)
+    vcache = np.asarray(cache[spec_key]["attn"]["v"])[0]
+    B = kcache.shape[0]
+    n_need = -(-T // page)
+    kw = dict(slots=args.slots or B, max_pages=max(n_need, 2), page=page,
+              n_kv=hkv, head_dim=hd, spill_pages=args.spill_pages,
+              ledger=ledger)
+    choices = None
+    if args.kv_policy == "auto":
+        # auto picks BOTH tiers' packings; --spill-packing only applies
+        # to the explicit-policy path
+        loop, ch = ServeLoop.auto(AutoTuner(), kcache[:, :P],
+                                  vcache[:, :P], **kw)
+        choices = {tier: c.as_dict() for tier, c in ch.items()}
+    else:
+        loop = ServeLoop(policy=args.kv_policy, packing=args.kv_packing,
+                         spill_packing=args.spill_packing, **kw)
+
+    admit_every = max(args.admit_rate, 1)
+    admit_at = {i: i * admit_every for i in range(B)}
+    fed: dict[int, int] = {}                  # seq -> tokens consumed
+    step_no = 0
+    while len(fed) < B or any(t < T for t in fed.values()):
+        for i in range(B):
+            if admit_at[i] == step_no:
+                loop.admit(i, kcache[i, :P], vcache[i, :P])
+                fed[i] = P
+        kvs = {i: (kcache[i, fed[i]:fed[i] + 1],
+                   vcache[i, fed[i]:fed[i] + 1])
+               for i in loop.seqs if fed[i] < T}
+        if kvs:
+            loop.step(kvs)          # wakes spilled seqs named this step
+            for i in kvs:
+                fed[i] += 1
+                if fed[i] >= T:
+                    loop.retire(i)
+        step_no += 1
+    obs = loop.observe_tiers()
+    stats = {
+        **loop.summary(),
+        "serve_steps": step_no,
+        "policy": args.kv_policy,
+        "policy_choice": choices,
+        "tier_observations": obs or None,   # per-tier §VI counters
+    }
+    return stats, ledger
 
 
 def main(argv=None) -> dict:
@@ -35,12 +103,24 @@ def main(argv=None) -> dict:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--slots", type=int, default=0,
+                    help="serve-tier batch lanes (0 = one per sequence; "
+                         "fewer than --batch exercises the spill tier)")
+    ap.add_argument("--spill-pages", type=int, default=None,
+                    help="host spill-tier capacity in pages (default "
+                         "unbounded)")
+    ap.add_argument("--admit-rate", type=int, default=1,
+                    help="admit one new sequence every N serve steps "
+                         "(staggered continuous batching)")
     ap.add_argument("--kv-policy", default="dynamic",
                     choices=["dynamic", "static", "off", "auto"])
     ap.add_argument("--kv-packing", default="pair",
                     choices=["pair", "quad"],
-                    help="packing layout (ignored with --kv-policy auto, "
-                         "where the AutoTuner picks it)")
+                    help="hot-tier packing (ignored with --kv-policy "
+                         "auto, where the AutoTuner picks per tier)")
+    ap.add_argument("--spill-packing", default="quad",
+                    choices=["off", "pair", "quad"],
+                    help="spill-tier packing (auto overrides it)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -74,69 +154,18 @@ def main(argv=None) -> dict:
     wall = time.time() - t0
     gen = np.stack(generated, 1)
 
-    # CRAM-KV mirror of one attention layer's real decode traffic: every
-    # batch sequence streams through the batched cache, prefill in one
-    # vectorized append, then token-by-token (the incremental-repack path).
-    # All KV traffic lands in one serve-wide bandwidth ledger.
-    page = 16
-    kv_stats = None
     ledger = Ledger("serve")
+    kv_stats = None
     if cfg.family in ("dense", "moe", "vlm", "hybrid"):
-        hkv, hd = cfg.n_kv_heads, cfg.hd
-        spec_key = next((k for k in sorted(cache) if k.startswith("b")
-                         and "attn" in cache[k]), None)
-        if spec_key is not None:
-            T = P + G - 1
-            n_need = (T + page - 1) // page
-            kcache = np.asarray(cache[spec_key]["attn"]["k"])[0]  # (B,T,..)
-            vcache = np.asarray(cache[spec_key]["attn"]["v"])[0]
-            policy_choice = None
-            if args.kv_policy == "auto":
-                # AutoTuner picks the packing layout from the prefill KV
-                kvc, choice = CRAMKVCache.auto(
-                    AutoTuner(), kcache[:, :P], vcache[:, :P],
-                    max_pages=max(n_need, 2), page=page, n_kv=hkv,
-                    head_dim=hd, batch=B, ledger=ledger)
-                policy_choice = choice.as_dict()
-            else:
-                kvc = CRAMKVCache(max_pages=max(n_need, 2), page=page,
-                                  n_kv=hkv, head_dim=hd, batch=B,
-                                  policy=args.kv_policy,
-                                  packing=args.kv_packing, ledger=ledger)
-            kvc.append(kcache[:, :P], vcache[:, :P])
-            kvc.account_step()
-            pairs_before_decode = kvc.stats.pack_pairs_processed
-            for t in range(P, T):
-                kvc.append(kcache[:, t:t + 1], vcache[:, t:t + 1])
-                kvc.account_step()
-            decode_pairs = kvc.stats.pack_pairs_processed - pairs_before_decode
-            q = jnp.asarray(rng.standard_normal((B, cfg.n_heads, hd)),
-                            jnp.float32)
-            out_k = kvc.attend(q, account=False)  # parity probe, not a step
-            out_r = kvc.attend_ref(q)
-            err = float(jnp.max(jnp.abs(out_k - out_r)))
-            kv_stats = {
-                "batch_streamed": B,
-                "packed_pairs": kvc.stats.packed_pairs,
-                "raw_pairs": kvc.stats.raw_pairs,
-                "bandwidth_saving": round(kvc.saving(), 4),
-                "pack_pairs_per_decode_step": round(
-                    decode_pairs / max(T - P, 1), 3),
-                "predictor_miss_rate": round(
-                    kvc.stats.predictor_misses
-                    / max(kvc.stats.predictor_hits
-                          + kvc.stats.predictor_misses, 1), 4),
-                "kernel_vs_oracle_err": err,
-                "policy": args.kv_policy,
-                "packing": kvc.packing if kvc.policy != "off" else "off",
-                "policy_choice": policy_choice,
-            }
+        kv_stats, ledger = _serve_tier(args, cfg, cache, ledger,
+                                       prompt_len=P,
+                                       total_tokens=P + G - 1)
 
     out = {
         "name": cfg.name, "batch": B, "prompt_len": P, "generated": G,
         "tokens_per_s": round(B * G / wall, 1),
         "sample": gen[0][:16].tolist(),
-        "cram_kv": kv_stats,
+        "serve_tier": kv_stats,
         "traffic": ledger.as_dict(),
     }
     print(json.dumps(out, indent=2))

@@ -1,0 +1,24 @@
+"""repro.serving — continuous-batching serve tier with compressed KV spill.
+
+  slots — SlotKVCache: the batched CRAM-KV cache with per-slot sequence
+          lifetimes (heterogeneous token counts, slot reset/reuse)
+  spill — SpillStore: host-memory tier holding cold sequences still
+          compressed under its own packing axis; bit-exact resurrection
+  shard — shard_map'd decode-attend over the slot axis (single-device
+          fallback, bit-identical)
+  loop  — ServeLoop: SequenceSlot scheduler (admit / step / retire /
+          evict / wake) + per-tier AutoTuner observation windows
+
+See DESIGN.md §9.
+"""
+
+from .loop import SequenceSlot, ServeLoop
+from .shard import shard_kv_attend
+from .slots import SlotKVCache
+from .spill import SPILL_LANES, SpilledSeq, SpillStore
+
+__all__ = [
+    "ServeLoop", "SequenceSlot", "SlotKVCache",
+    "SpillStore", "SpilledSeq", "SPILL_LANES",
+    "shard_kv_attend",
+]

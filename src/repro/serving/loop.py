@@ -1,0 +1,232 @@
+"""ServeLoop: continuous batching over slot-reused KV lanes + spill tier.
+
+The production serve loop (DESIGN.md §9): a fixed pool of `slots` batch
+lanes in one `SlotKVCache`, a `SequenceSlot` record per live sequence,
+and a compressed `SpillStore` behind them.
+
+  admit   — take the lowest free slot (evicting the coldest active
+            sequence to the spill tier when none is free) and prefill it;
+  step    — one fused decode append for every sequence named this step
+            (spilled ones are woken first), then the batched bandwidth
+            accounting;
+  attend  — one batched decode-attend over the whole slot axis (inactive
+            lanes are masked by their zero valid counts), optionally
+            sharded across devices (`serving.shard`);
+  retire  — reset the lane and hand it to the next admit: the batch axis
+            NEVER grows, slots are reused (tests pin this);
+  evict / wake — explicit spill-tier crossings, each booking exactly one
+            ledger `spill` event with compressed duals.
+
+Per-tier autotuning: `ServeLoop.auto` asks one `AutoTuner` for the hot
+packing (decode DMA model, gate key "kv-hot") and the spill packing
+(spill-link model, gate key "kv-spill") from the same KV sample, and
+`observe_tiers()` feeds each tier's §VI counter from its own ledger rows
+— hot from "read" traffic, spill from "spill" traffic — so a tier whose
+live traffic stops compressing is gated off independently.
+"""
+
+from __future__ import annotations
+
+from bisect import insort
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..bandwidth import AutoTuner, Ledger
+from ..compression.gate import COUNTER_INIT
+from ..kernels.ref import MARKER_LANES
+from .shard import shard_kv_attend
+from .slots import SlotKVCache
+from .spill import SpillStore
+
+
+@dataclass
+class SequenceSlot:
+    """One live sequence's scheduling record."""
+
+    seq_id: int
+    slot: int                  # batch-lane index; -1 while spilled
+    admitted_at: int
+    last_step: int
+    spilled: bool = False
+    meta: dict = field(default_factory=dict)
+
+
+class ServeLoop:
+    """Continuous-batching serve tier over one SlotKVCache + SpillStore."""
+
+    def __init__(self, *, slots: int, max_pages: int, page: int, n_kv: int,
+                 head_dim: int, policy: str = "dynamic",
+                 packing: str = "pair", spill_packing: str = "quad",
+                 spill_pages: int | None = None,
+                 tuner: AutoTuner | None = None,
+                 ledger: Ledger | None = None, key: int = 0x5EED,
+                 counter_init: int = COUNTER_INIT,
+                 interpret: bool | None = None):
+        self.ledger = ledger if ledger is not None else Ledger("serve")
+        self.cache = SlotKVCache(max_pages, page, n_kv, head_dim,
+                                 batch=slots, policy=policy, packing=packing,
+                                 key=key, counter_init=counter_init,
+                                 interpret=interpret, ledger=self.ledger)
+        self.spill = SpillStore(packing=spill_packing,
+                                capacity_pages=spill_pages,
+                                ledger=self.ledger)
+        self.tuner = tuner
+        self.n_slots = slots
+        self._free = list(range(slots))       # kept sorted: lowest first
+        self.seqs: dict[int, SequenceSlot] = {}
+        self.clock = 0
+        self.counts = {"admitted": 0, "retired": 0, "evicted": 0,
+                       "woken": 0}
+        self.choices: dict = {}
+
+    @classmethod
+    def auto(cls, tuner: AutoTuner, k_sample, v_sample, *, slots: int,
+             max_pages: int, page: int, n_kv: int, head_dim: int, **kw):
+        """`--kv-policy auto`: per-tier packing from one KV sample — hot
+        under the decode DMA model, spill under the spill-link model, each
+        with its own gate key.  Returns (loop, {"hot": .., "spill": ..})."""
+        d2 = 2 * head_dim
+        slot_bytes = page * n_kv * d2 * 2
+        strip_bytes = n_kv * (d2 + MARKER_LANES) * 2
+        hot = tuner.choose_kv_packing(
+            k=k_sample, v=v_sample, page=page, slot_bytes=slot_bytes,
+            strip_bytes=strip_bytes, tier="hot", gate_key="kv-hot")
+        spl = tuner.choose_kv_packing(
+            k=k_sample, v=v_sample, page=page, slot_bytes=slot_bytes,
+            strip_bytes=strip_bytes, tier="spill")
+        policy, packing = (("off", "pair") if hot.choice == "off"
+                           else ("auto", hot.choice))
+        loop = cls(slots=slots, max_pages=max_pages, page=page, n_kv=n_kv,
+                   head_dim=head_dim, policy=policy, packing=packing,
+                   spill_packing=spl.choice, tuner=tuner, **kw)
+        loop.choices = {"hot": hot, "spill": spl}
+        return loop, loop.choices
+
+    # --------------------------------------------------------- scheduling
+    def _coldest_active(self) -> SequenceSlot:
+        active = [s for s in self.seqs.values() if not s.spilled]
+        assert active, "no active sequence to evict"
+        return min(active, key=lambda s: (s.last_step, s.admitted_at,
+                                          s.seq_id))
+
+    def _take_slot(self) -> int:
+        if not self._free:
+            self.evict()
+        return self._free.pop(0)
+
+    def admit(self, seq_id, k=None, v=None) -> SequenceSlot:
+        """Join a sequence mid-flight; k/v (T, n_kv, d) prefill its slot.
+        Evicts the coldest active sequence when no slot is free."""
+        assert seq_id not in self.seqs, f"seq {seq_id} already live"
+        slot = self._take_slot()
+        rec = SequenceSlot(seq_id, slot, self.clock, self.clock)
+        self.seqs[seq_id] = rec
+        if k is not None:
+            self.cache.append_slot(slot, k, v)
+        self.counts["admitted"] += 1
+        return rec
+
+    def retire(self, seq_id) -> None:
+        """Finish a sequence: its lane resets and returns to the free pool
+        (or its spill payload is dropped) — the batch axis never grows."""
+        rec = self.seqs.pop(seq_id)
+        if rec.spilled:
+            self.spill.drop(seq_id)
+        else:
+            self.cache.reset_slot(rec.slot)
+            insort(self._free, rec.slot)
+        self.counts["retired"] += 1
+
+    def evict(self, seq_id=None) -> SequenceSlot:
+        """Spill one active sequence (default: the coldest) compressed."""
+        rec = self.seqs[seq_id] if seq_id is not None else (
+            self._coldest_active())
+        self.spill.evict(self.cache, rec.slot, rec.seq_id)  # resets slot
+        insort(self._free, rec.slot)
+        rec.slot, rec.spilled = -1, True
+        self.counts["evicted"] += 1
+        return rec
+
+    def wake(self, seq_id) -> SequenceSlot:
+        """Restore a spilled sequence into a free slot (evicting the
+        coldest active one if needed)."""
+        rec = self.seqs[seq_id]
+        if not rec.spilled:
+            return rec
+        slot = self._take_slot()
+        self.spill.restore(self.cache, slot, seq_id)
+        rec.slot, rec.spilled = slot, False
+        rec.last_step = self.clock
+        self.counts["woken"] += 1
+        return rec
+
+    # ------------------------------------------------------------ serving
+    def step(self, kv_by_seq: dict) -> dict:
+        """One decode step: `{seq_id: (k, v)}` with k/v (T, n_kv, d), all
+        the same T (usually 1).  Spilled sequences named here are woken
+        first; the append is one fused scatter; the batched byte
+        accounting charges the ledger.  Returns {seq_id: slot}."""
+        self.clock += 1
+        ids = sorted(kv_by_seq)
+        for sid in ids:
+            if self.seqs[sid].spilled:
+                self.wake(sid)
+        slot_ids = [self.seqs[sid].slot for sid in ids]
+        k = np.stack([np.asarray(kv_by_seq[sid][0]) for sid in ids])
+        v = np.stack([np.asarray(kv_by_seq[sid][1]) for sid in ids])
+        self.cache.append_active(slot_ids, k, v)
+        self.cache.account_step()
+        for sid in ids:
+            self.seqs[sid].last_step = self.clock
+        return dict(zip(ids, slot_ids))
+
+    def attend(self, q_by_seq: dict, *, shard: "bool | str" = "auto") -> dict:
+        """Batched decode-attend for `{seq_id: q}` with q (Hq, d); one
+        fused (optionally sharded) kernel over the whole slot axis,
+        inactive lanes masked by valid.  Returns {seq_id: (Hq, d)}."""
+        ids = sorted(q_by_seq)
+        for sid in ids:
+            assert not self.seqs[sid].spilled, f"seq {sid} is spilled"
+        q0 = np.asarray(q_by_seq[ids[0]])
+        q = np.zeros((self.n_slots,) + q0.shape, np.float32)
+        for sid in ids:
+            q[self.seqs[sid].slot] = np.asarray(q_by_seq[sid])
+        out = shard_kv_attend(self.cache, q, shard=shard)
+        return {sid: out[self.seqs[sid].slot] for sid in ids}
+
+    # ------------------------------------------------------------- policy
+    def observe_tiers(self) -> dict:
+        """One §VI observation window per tier: hot judged on the decode
+        "read" rows, spill on the "spill" rows — independent counters."""
+        if self.tuner is None:
+            return {}
+        return {
+            "kv-hot": self.tuner.observe(self.ledger, key="kv-hot",
+                                         consumer="kv", event="read"),
+            "kv-spill": self.tuner.observe(self.ledger, key="kv-spill",
+                                           consumer="kv", event="spill"),
+        }
+
+    # ------------------------------------------------------------ queries
+    def active_seqs(self) -> list:
+        return sorted(s for s, r in self.seqs.items() if not r.spilled)
+
+    def spilled_seqs(self) -> list:
+        return sorted(s for s, r in self.seqs.items() if r.spilled)
+
+    def summary(self) -> dict:
+        return {
+            "slots": self.n_slots, "clock": self.clock,
+            "live": len(self.seqs), "active": len(self.active_seqs()),
+            "spilled": len(self.spilled_seqs()),
+            **self.counts,
+            "spill_tier": self.spill.summary(),
+            "hot_packing": (self.cache.packing
+                            if self.cache.policy != "off" else "off"),
+            "decode_saving": round(self.ledger.saving(
+                "read", consumer="kv"), 4),
+        }
+
+
+__all__ = ["ServeLoop", "SequenceSlot"]

@@ -1,0 +1,284 @@
+"""SlotKVCache: the batched CRAM-KV cache with per-slot sequence lifetimes.
+
+`kv.CRAMKVCache` assumes one uniform token count across its batch axis —
+right for offline benches, wrong for serving, where sequences join and
+retire mid-flight.  This subclass turns each batch lane into an
+independently-progressing *slot*:
+
+  * per-slot token counts (`tokens_b`) drive a per-slot `valid_per_page`
+    mask, so the one batched attend/accounting dispatch stays fused while
+    every lane sees only its own live pages;
+  * appends come in three shapes — uniform (`append`, prefill of every
+    slot together), per-slot (`append_slot`, admission prefill), and
+    vectorized per-step (`append_active`: one fused scatter appends one
+    token to an arbitrary subset of slots — no per-slot dispatch in the
+    decode loop);
+  * the dirty/uncounted masks become per-slot (B, n_groups): `repack`
+    re-lays the UNION of dirty columns in one window dispatch (packing is
+    a deterministic function of (pages, gate, markers), so re-laying a
+    clean slot's column is idempotent), while §VI fitness is counted
+    per slot — a group feeds slot b's counter only once b's own tokens
+    complete it, exactly once, as in the base cache;
+  * `reset_slot` returns a lane to pristine state for reuse by the next
+    admitted sequence (continuous batching never grows the batch axis),
+    and `slot_reference_state` is the per-slot rebuild oracle — the base
+    `reference_rebuild` judges a uniform prefix, a slot's parity is
+    judged on ITS OWN active prefix.
+
+The spill tier (`serving.spill.SpillStore`) moves slots out of and back
+into this cache; bit-exact resurrection rides on the pinned
+incremental==rebuild invariant (tests/test_kv_cache.py): restore writes
+the logical pages + gate state and marks the slot dirty, and the next
+repack reproduces the never-spilled physical layout bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..bandwidth import Ledger
+from ..bandwidth.adapters import kv_repack_event
+from ..compression.gate import COUNTER_INIT, COUNTER_MAX, ENABLE_THRESHOLD
+from ..kernels import ops as kops
+from ..kernels.ref import MARKER_LANES
+from ..kv.cache import CRAMKVCache, _scatter_window
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_slot(pages, kv, slot, start):
+    """pages (B, Tmax, Hkv, D2) <- kv (1, T, Hkv, D2) at (slot, start)."""
+    return jax.lax.dynamic_update_slice(pages, kv, (slot, start, 0, 0))
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_active(pages, kv, starts, active):
+    """Per-slot scatter at per-slot offsets: pages (B, Tmax, Hkv, D2) <-
+    kv (B, T, Hkv, D2) row b at token starts[b], where active[b]."""
+    def one(p, s, t0, a):
+        return jnp.where(a, jax.lax.dynamic_update_slice(p, s, (t0, 0, 0)), p)
+    return jax.vmap(one)(pages, kv, starts, active)
+
+
+class SlotKVCache(CRAMKVCache):
+    """CRAMKVCache whose batch lanes are independent sequence slots."""
+
+    def __init__(self, max_pages: int, page: int, n_kv: int, head_dim: int,
+                 *, batch: int = 1, policy: str = "dynamic",
+                 packing: str = "pair", key: int = 0x5EED,
+                 counter_init: int = COUNTER_INIT,
+                 interpret: bool | None = None,
+                 ledger: Ledger | None = None):
+        super().__init__(max_pages, page, n_kv, head_dim, batch=batch,
+                         policy=policy, packing=packing, key=key,
+                         counter_init=counter_init, interpret=interpret,
+                         ledger=ledger)
+        self._counter_init = int(counter_init)
+        # per-slot sequence positions; base `self.tokens` is kept at the
+        # max so the shared pow2 attend bucket covers every live slot
+        self.tokens_b = np.zeros(batch, np.int64)
+        # per-slot dirty / §VI-uncounted group masks (the base cache's
+        # shared 1-D masks assume uniform appends and are superseded here)
+        self._dirty_b = np.zeros((batch, self.n_groups), bool)
+        self._uncounted_b = np.zeros((batch, self.n_groups), bool)
+
+    # ------------------------------------------------------- slot geometry
+    def slot_pages(self, slot: int) -> int:
+        return int(-(-self.tokens_b[slot] // self.page))
+
+    def slot_groups(self, slot: int) -> int:
+        """Active page groups of one slot (its own prefix, not the max)."""
+        return -(-self.slot_pages(slot) // self.group_lanes)
+
+    def valid_per_page(self) -> np.ndarray:
+        v = np.clip(self.tokens_b[:, None]
+                    - np.arange(self.max_pages)[None, :] * self.page,
+                    0, self.page)
+        return v.astype(np.int32)
+
+    # ------------------------------------------------------------- appends
+    def append(self, k, v):
+        """Uniform append to EVERY slot (offline prefill convenience);
+        requires all slots at the same position."""
+        assert (self.tokens_b == self.tokens_b[0]).all(), (
+            "uniform append on heterogeneous slots; use append_slot/"
+            "append_active")
+        t0 = int(self.tokens_b[0])
+        super().append(k, v)            # scatters at t0, updates self.tokens
+        span = self.group_lanes * self.page
+        lo, hi = t0 // span, (self.tokens - 1) // span
+        self._dirty_b[:, lo:hi + 1] = True
+        self._uncounted_b[:, lo:hi + 1] = True
+        self.tokens_b[:] = self.tokens
+
+    def append_slot(self, slot: int, k, v):
+        """k/v (T, n_kv, d): append T tokens to one slot (admission
+        prefill) at its own position."""
+        k = jnp.asarray(k, jnp.bfloat16).view(jnp.int16)
+        v = jnp.asarray(v, jnp.bfloat16).view(jnp.int16)
+        assert k.ndim == 3, "append_slot takes one sequence (T, n_kv, d)"
+        kv = jnp.concatenate([k, v], axis=-1)[None]     # (1, T, Hkv, D2)
+        t = kv.shape[1]
+        start = int(self.tokens_b[slot])
+        assert start + t <= self.max_pages * self.page, "slot full"
+        self.state["pages"] = _scatter_slot(self.state["pages"], kv,
+                                            slot, start)
+        self._mark_dirty(slot, start, t)
+        self.tokens_b[slot] += t
+        self.tokens = int(self.tokens_b.max())
+
+    def append_active(self, slot_ids, k, v):
+        """One decode step for a subset of slots: k/v (S, T, n_kv, d) rows
+        aligned with `slot_ids`, each landing at its slot's own position —
+        ONE fused scatter, no per-slot dispatch."""
+        slot_ids = np.asarray(slot_ids, np.int64)
+        k = jnp.asarray(k, jnp.bfloat16).view(jnp.int16)
+        v = jnp.asarray(v, jnp.bfloat16).view(jnp.int16)
+        kv = jnp.concatenate([k, v], axis=-1)           # (S, T, Hkv, D2)
+        s, t = kv.shape[:2]
+        assert s == slot_ids.size
+        assert (self.tokens_b[slot_ids] + t
+                <= self.max_pages * self.page).all(), "slot full"
+        full = jnp.zeros((self.batch, t) + kv.shape[2:], kv.dtype)
+        full = full.at[jnp.asarray(slot_ids)].set(kv)
+        active = np.zeros(self.batch, bool)
+        active[slot_ids] = True
+        self.state["pages"] = _scatter_active(
+            self.state["pages"], full,
+            jnp.asarray(self.tokens_b, jnp.int32), jnp.asarray(active))
+        for sl in slot_ids:
+            self._mark_dirty(int(sl), int(self.tokens_b[sl]), t)
+        self.tokens_b[slot_ids] += t
+        self.tokens = int(self.tokens_b.max())
+
+    def _mark_dirty(self, slot: int, start: int, t: int):
+        span = self.group_lanes * self.page
+        lo, hi = start // span, (start + t - 1) // span
+        self._dirty_b[slot, lo:hi + 1] = True
+        self._uncounted_b[slot, lo:hi + 1] = True
+
+    # ------------------------------------------------------------- packing
+    def repack(self):
+        """Incrementally re-pack the union of per-slot dirty groups.
+
+        The window dispatch re-lays every slot's version of each union
+        column (idempotent for clean slots — packing is deterministic in
+        (pages, gate, markers)); §VI fitness is counted per slot, only on
+        groups that slot's OWN tokens complete, each exactly once."""
+        idx = np.nonzero(self._dirty_b.any(0))[0]
+        if idx.size == 0:
+            return
+        w = int(idx.size)
+        enabled = self.enabled()
+        idx_j = jnp.asarray(idx, jnp.int32)
+        groups = self.pages_view().reshape(
+            self.batch, self.n_groups, self.group_lanes, self.page,
+            self.n_kv, self.d2)
+        win = groups[:, idx_j]
+        slots_w, over_w, strips_w, lay, fit = self._pack_window(
+            win, idx_j, enabled)
+        if self.policy == "off":
+            self.stats.pack_skipped_dynamic += self.batch * w
+        else:
+            self.stats.pack_attempts += self.batch * w
+            self.stats.pack_skipped_dynamic += int((~enabled).sum()) * w
+        st = self.state
+        (st["slots"], st["slots_overflow"], st["strips"],
+         st["packed_mask"]) = _scatter_window(
+            st["slots"], st["slots_overflow"], st["strips"],
+            st["packed_mask"], idx_j, slots_w, over_w, strips_w, lay)
+        self.stats.pack_calls += 1
+        self.stats.pack_pairs_processed += self.batch * w
+        lay_n = int(np.asarray(lay).sum())
+        self.stats.packed_pairs += lay_n
+        self.stats.raw_pairs += self.batch * w - lay_n
+        kv_repack_event(self.ledger, groups=self.batch * w, packed=lay_n,
+                        lanes=self.group_lanes, slot_bytes=self.slot_bytes,
+                        strip_bytes=self.strip_bytes)
+        # per-slot completeness: group idx[j] is complete FOR SLOT b once
+        # b's own tokens cover it
+        span = self.group_lanes * self.page
+        complete = (idx[None, :] + 1) * span <= self.tokens_b[:, None]
+        if self.policy in ("dynamic", "auto"):
+            countable = jnp.asarray(complete & self._uncounted_b[:, idx])
+            fit_n = (fit & countable).sum(1)
+            unfit_n = ((~fit) & countable).sum(1)
+            st["counter"] = jnp.clip(
+                st["counter"] + (fit_n - unfit_n).astype(jnp.int32),
+                0, COUNTER_MAX)
+        u = self._uncounted_b[:, idx]
+        u[complete] = False
+        self._uncounted_b[:, idx] = u
+        self._dirty_b[:] = False
+        self._last_enabled = enabled
+        flipped = self.enabled() != enabled
+        for bi in np.nonzero(flipped)[0]:
+            # that slot's whole layout rebuilds under the new gate at the
+            # next repack (same invariant as the base cache, per slot)
+            self._dirty_b[bi, : self.slot_groups(int(bi))] = True
+
+    # ------------------------------------------------------ slot lifecycle
+    def reset_slot(self, slot: int):
+        """Return a lane to pristine state for reuse (retire/evict)."""
+        st = self.state
+        for key in ("pages", "slots", "slots_overflow", "strips"):
+            st[key] = st[key].at[slot].set(0)
+        st["packed_mask"] = st["packed_mask"].at[slot].set(False)
+        st["predictor"] = st["predictor"].at[slot].set(False)
+        st["counter"] = st["counter"].at[slot].set(self._counter_init)
+        self.tokens_b[slot] = 0
+        self._dirty_b[slot] = False
+        self._uncounted_b[slot] = False
+        self._last_enabled[slot] = self.policy != "off"
+        self.tokens = int(self.tokens_b.max())
+
+    def slot_enabled_from_counter(self, counter: int) -> bool:
+        """The gate a slot with this counter runs under (policy-resolved)."""
+        if self.policy == "off":
+            return False
+        if self.policy == "static":
+            return True
+        return counter >= ENABLE_THRESHOLD
+
+    def slot_reference_state(self, slot: int) -> dict:
+        """Per-slot from-scratch rebuild over the slot's OWN active prefix,
+        under the gate applied at its last repack — the bit-exactness
+        oracle for slot-level operations (spill round-trips, slot reuse)."""
+        g = self.slot_groups(slot)
+        assert g > 0, "empty slot has no reference state"
+        lanes = self.group_lanes
+        pages = self.pages_view()[slot, : g * lanes]
+        if self._last_enabled[slot]:
+            build = (kops.build_cram_cache if self.packing == "pair"
+                     else kops.build_cram_cache_quad)
+            c = dict(build(pages, key=self.key, interpret=self.interpret))
+        else:
+            grouped = pages.reshape(g, lanes, self.page, self.n_kv, self.d2)
+            over = (grouped[:, 1] if self.packing == "pair"
+                    else grouped[:, 1:])
+            c = {
+                "slots": grouped[:, 0],
+                "slots_overflow": over,
+                "strips": jnp.zeros(
+                    (g, self.n_kv, self.d2 + MARKER_LANES), jnp.int16),
+                "packed_mask": jnp.zeros((g,), bool),
+            }
+        c["markers"] = self.state["markers"][:g]
+        return c
+
+    def slot_physical_state(self, slot: int) -> dict:
+        """The slot's physical rows over its own active prefix (compare
+        against `slot_reference_state`)."""
+        g = self.slot_groups(slot)
+        st = self.state
+        return {"slots": st["slots"][slot, :g],
+                "slots_overflow": st["slots_overflow"][slot, :g],
+                "strips": st["strips"][slot, :g],
+                "packed_mask": st["packed_mask"][slot, :g],
+                "markers": st["markers"][:g]}
+
+
+__all__ = ["SlotKVCache"]

@@ -1,0 +1,258 @@
+"""SpillStore: compressed host-memory tier for cold sequences.
+
+The serving analog of the paper's core move — ship COMPRESSED lines
+across the slow link and expand only at the consumer — mapped onto
+HBM->host KV tiering (the CXL story in PAPERS.md).  Evicting a cold
+sequence does NOT decompress its KV: the store re-encodes the slot's
+logical pages under the SPILL tier's own packing (off / pair / quad, an
+independent `AutoTuner` axis — quad usually wins on the link because raw
+groups cross with no strip), keeping
+
+  * one packed slot per fitting group, plus its base row — the fit
+    decision sees only the COMPLETE live pages (dead lanes and the
+    partially-filled last page ride as base replicas, the partial page
+    crossing raw in `tail`: its zero rows would otherwise poison the
+    whole group),
+  * the raw lanes of unfitting groups (no in-band metadata),
+  * the slot's hot-tier bookkeeping: §VI counter, LLP predictor row, the
+    uncounted-fitness mask, and the token count (the dirty mask is all
+    clear by construction — evict settles the layout first).
+
+Restore is the inverse: decode the payload back to logical pages
+(`compression.pagepack` codecs are exact whenever the fit bit was set),
+write them into a free slot with the saved gate state, mark the slot
+dirty, and repack.  Because the hot cache's incremental layout is pinned
+bit-identical to a from-scratch rebuild (tests/test_kv_cache.py), the
+resurrected physical state — and therefore every subsequent `attend` —
+is bit-identical to the never-spilled execution; tests/test_serving.py
+holds that property across packings, partial pages and gate states.
+
+Every evict and every restore books exactly ONE ledger `spill` event
+(`bandwidth.adapters.kv_spill_event`) with compressed-byte duals: raw is
+what moving the decompressed pages would have cost, compressed is the
+payload that actually crossed.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..bandwidth import Ledger
+from ..bandwidth.adapters import kv_spill_event
+from ..compression import pagepack
+from .slots import SlotKVCache
+
+SPILL_LANES = {"off": 1, "pair": 2, "quad": 4}
+
+
+@dataclass
+class SpilledSeq:
+    """One evicted sequence's payload, still compressed."""
+
+    seq_id: int
+    tokens: int
+    packing: str                 # spill-tier packing the payload uses
+    fit: np.ndarray              # (Gs,) bool — which spill groups packed
+    slots: np.ndarray            # (Gs, page, Hkv, D2) packed slot / lane 0
+    bases: np.ndarray            # (n_fit, Hkv, D2) base rows of fit groups
+    overflow: list               # per raw group: (live-1, page, Hkv, D2)
+                                 # raw lanes, dead tail lanes trimmed
+    tail: "np.ndarray | None"    # the partially-filled last page, raw —
+                                 # only when its group packed without it
+    counter: int                 # hot-tier §VI counter at evict
+    predictor: np.ndarray        # (Gh,) hot-tier LLP predictor row
+    uncounted: np.ndarray        # (Gh,) hot-tier uncounted-fitness mask
+    raw_bytes: int               # decompressed-page cost of this evict
+    stored_bytes: int            # payload bytes that actually moved
+
+    @property
+    def n_groups(self) -> int:
+        return int(self.fit.size)
+
+
+def _payload_bytes(*arrays) -> int:
+    return int(sum(a.nbytes for a in arrays))
+
+
+class SpillStore:
+    """Host-memory spill tier keyed by sequence id.
+
+    `capacity_pages` bounds the tier (None = unbounded); `packing` is the
+    spill-tier layout — independent of the hot cache's, chosen by
+    `AutoTuner.choose_kv_packing(tier="spill")` under the spill-link byte
+    model."""
+
+    def __init__(self, *, packing: str = "quad",
+                 capacity_pages: int | None = None,
+                 ledger: Ledger | None = None):
+        assert packing in SPILL_LANES, packing
+        self.packing = packing
+        self.lanes = SPILL_LANES[packing]
+        self.capacity_pages = capacity_pages
+        self.ledger = ledger if ledger is not None else Ledger("spill")
+        self._store: dict[int, SpilledSeq] = {}
+        self.spills = 0
+        self.restores = 0
+        self.raw_bytes = 0        # cumulative decompressed-page duals
+        self.stored_bytes = 0     # cumulative payload bytes moved out
+
+    def __contains__(self, seq_id) -> bool:
+        return seq_id in self._store
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    # ------------------------------------------------------------- evict
+    def evict(self, cache: SlotKVCache, slot: int, seq_id: int) -> SpilledSeq:
+        """Move one slot out of the hot cache, still compressed; the slot
+        is reset for reuse.  Books one ledger `spill` event."""
+        assert seq_id not in self._store, f"seq {seq_id} already spilled"
+        cache.repack()                    # spill the settled layout
+        tokens = int(cache.tokens_b[slot])
+        assert tokens > 0, "evicting an empty slot"
+        page, hkv, d2 = cache.page, cache.n_kv, cache.d2
+        n_pages = -(-tokens // page)
+        gs = -(-n_pages // self.lanes)
+        if (self.capacity_pages is not None
+                and self._pages_stored() + n_pages > self.capacity_pages):
+            raise RuntimeError(
+                f"spill store full ({self._pages_stored()}+{n_pages} pages "
+                f"> capacity {self.capacity_pages})")
+        # gather the logical pages to spill-group granularity
+        avail = min(gs * self.lanes, cache.max_pages)
+        pages = np.zeros((gs * self.lanes, page, hkv, d2), np.int16)
+        pages[:avail] = np.asarray(cache.pages_view()[slot, :avail])
+        fit = np.zeros(gs, bool)
+        slots = np.empty((gs, page, hkv, d2), np.int16)
+        bases, overflow, tail = [], [], None
+        n_full, rem = divmod(tokens, page)
+        if self.packing == "off":
+            slots[:] = pages                      # lanes == 1: page == group
+        else:
+            pack = (pagepack.pack_pair if self.packing == "pair"
+                    else pagepack.pack_quad)
+            for g in range(gs):
+                orig = pages[g * self.lanes:(g + 1) * self.lanes]
+                full = min(max(n_full - g * self.lanes, 0), self.lanes)
+                partial = bool(rem) and full < self.lanes \
+                    and g * self.lanes + full == n_full
+                live = full + partial
+                # the fit decision sees only the COMPLETE live pages:
+                # dead lanes and the partially-filled last page ride as
+                # base-page replicas (delta 0) — their zero rows against
+                # a non-zero base would force the whole group raw.  The
+                # partial page crosses raw in `tail`; restore re-zeroes
+                # the dead lanes.  Fewer than 2 complete pages never
+                # packs: slot+base would cost more than trimmed raw.
+                grp = orig.copy()
+                grp[full:] = grp[0]
+                ok, packed, base = (pack(*grp) if full >= 2
+                                    else (False, None, None))
+                if bool(ok):
+                    fit[g] = True
+                    slots[g] = packed
+                    bases.append(base)
+                    if partial:
+                        tail = orig[full].copy()
+                else:
+                    # raw group: lane 0 in the slot row, LIVE extra lanes
+                    # in overflow — dead lanes never cross the link
+                    slots[g] = orig[0]
+                    overflow.append(orig[1:live].copy())
+        bases = (np.stack(bases) if bases
+                 else np.empty((0, hkv, d2), np.int16))
+        gh = cache.slot_groups(slot)
+        payload = SpilledSeq(
+            seq_id=seq_id, tokens=tokens, packing=self.packing,
+            fit=fit, slots=slots, bases=bases, overflow=overflow, tail=tail,
+            counter=int(np.asarray(cache.state["counter"][slot])),
+            predictor=np.asarray(cache.state["predictor"][slot, :gh]).copy(),
+            uncounted=cache._uncounted_b[slot, :gh].copy(),
+            raw_bytes=n_pages * cache.slot_bytes,
+            stored_bytes=_payload_bytes(
+                slots, bases, fit, *overflow,
+                *(() if tail is None else (tail,))),
+        )
+        self._store[seq_id] = payload
+        self.spills += 1
+        self.raw_bytes += payload.raw_bytes
+        self.stored_bytes += payload.stored_bytes
+        kv_spill_event(self.ledger, raw=payload.raw_bytes,
+                       compressed=payload.stored_bytes, direction="evict")
+        cache.reset_slot(slot)
+        return payload
+
+    # ------------------------------------------------------------ restore
+    def restore(self, cache: SlotKVCache, slot: int, seq_id: int) -> None:
+        """Wake one sequence into a free slot: decode the payload back to
+        logical pages, reinstall the gate state, and repack — the hot
+        layout resurrects bit-identical to the never-spilled state.  Books
+        one ledger `spill` event."""
+        p = self._store.pop(seq_id)
+        assert int(cache.tokens_b[slot]) == 0, "restore needs a free slot"
+        page, hkv, d2 = cache.page, cache.n_kv, cache.d2
+        pages = np.empty((p.n_groups * self.lanes, page, hkv, d2), np.int16)
+        fi = ri = 0
+        if self.packing == "off":
+            pages[:] = p.slots
+        else:
+            unpack = (pagepack.unpack_pair if self.packing == "pair"
+                      else pagepack.unpack_quad)
+            for g in range(p.n_groups):
+                dst = pages[g * self.lanes:(g + 1) * self.lanes]
+                if p.fit[g]:
+                    dst[:] = np.stack(unpack(p.slots[g], p.bases[fi]))
+                    fi += 1
+                else:
+                    ov = p.overflow[ri]
+                    dst[0] = p.slots[g]
+                    dst[1:1 + len(ov)] = ov
+                    ri += 1
+        if p.tail is not None:             # partial page shipped raw beside
+            pages[p.tokens // page] = p.tail        # its packed group
+        pages[-(-p.tokens // page):] = 0   # dead lanes back to zeros (the
+        # packed path decoded them as base replicas, the raw path trimmed)
+        n_rows = min(pages.shape[0], cache.max_pages) * page
+        flat = pages.reshape(-1, hkv, d2)[:n_rows]
+        st = cache.state
+        st["pages"] = st["pages"].at[slot, :n_rows].set(jnp.asarray(flat))
+        gh = -(-(-(-p.tokens // page)) // cache.group_lanes)  # hot groups
+        assert gh == len(p.predictor), (gh, len(p.predictor))
+        st["predictor"] = st["predictor"].at[slot, :gh].set(
+            jnp.asarray(p.predictor))
+        st["counter"] = st["counter"].at[slot].set(p.counter)
+        cache.tokens_b[slot] = p.tokens
+        cache.tokens = int(cache.tokens_b.max())
+        cache._uncounted_b[slot, :gh] = p.uncounted
+        cache._dirty_b[slot, :gh] = True
+        cache._last_enabled[slot] = cache.slot_enabled_from_counter(p.counter)
+        self.restores += 1
+        kv_spill_event(self.ledger, raw=p.raw_bytes,
+                       compressed=p.stored_bytes, direction="restore")
+        cache.repack()   # materialize the resurrected layout now
+
+    def drop(self, seq_id: int) -> None:
+        """Discard a spilled sequence (retired while cold)."""
+        self._store.pop(seq_id)
+
+    # ------------------------------------------------------------ queries
+    def _pages_stored(self) -> int:
+        return sum(p.n_groups * SPILL_LANES[p.packing]
+                   for p in self._store.values())
+
+    def saving(self) -> float:
+        """1 - stored/raw over every spill so far (the link-bytes win)."""
+        return 1.0 - self.stored_bytes / max(self.raw_bytes, 1)
+
+    def summary(self) -> dict:
+        return {"packing": self.packing, "held": len(self._store),
+                "spills": self.spills, "restores": self.restores,
+                "raw_bytes": self.raw_bytes,
+                "stored_bytes": self.stored_bytes,
+                "saving": round(self.saving(), 4)}
+
+
+__all__ = ["SpillStore", "SpilledSeq", "SPILL_LANES"]

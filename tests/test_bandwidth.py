@@ -418,3 +418,100 @@ def test_checkpoint_stream_roundtrip_vectorized(codec):
     raw = _adversarial_lines(seed=7).tobytes() + b"tail-bytes"
     blob = cram_compress_bytes(raw, codec=codec)
     assert cram_decompress_bytes(blob) == raw
+
+
+# ------------------------------------------------- spill tier (ISSUE 6)
+
+def test_kv_spill_event_books_exactly_one_row_per_crossing():
+    from repro.bandwidth.adapters import kv_spill_event
+
+    led = Ledger()
+    kv_spill_event(led, raw=1000, compressed=400, direction="evict")
+    kv_spill_event(led, raw=1000, compressed=400, direction="restore")
+    for tc in ("kv-evict", "kv-restore"):
+        t = led.total("spill", consumer="kv", tensor_class=tc)
+        assert (t["raw_bytes"], t["compressed_bytes"], t["count"]) == \
+            (1000, 400, 1)
+    # the aggregate spill row carries the compressed duals
+    assert led.saving("spill", consumer="kv") == pytest.approx(0.6)
+    with pytest.raises(AssertionError):
+        kv_spill_event(led, raw=1, compressed=1, direction="sideways")
+
+
+def test_serve_loop_spill_crossings_hit_the_shared_ledger():
+    """Every evict and every wake books exactly ONE `spill` event, with
+    the compressed payload strictly under raw on a compressible stream."""
+    from repro.kv import synthetic_kv_stream as _skv
+    from repro.serving import ServeLoop
+
+    rng = np.random.default_rng(0)
+    led = Ledger("serve")
+    loop = ServeLoop(slots=2, max_pages=8, page=PAGE, n_kv=HKV, head_dim=HD,
+                     policy="static", spill_packing="quad", ledger=led)
+    k, v = _skv(rng, 1, 6 * PAGE, HKV, HD)
+    loop.admit(0, k[0], v[0])
+    loop.evict(0)
+    ev = led.total("spill", consumer="kv", tensor_class="kv-evict")
+    assert ev["count"] == 1
+    assert 0 < ev["compressed_bytes"] < ev["raw_bytes"]
+    loop.wake(0)
+    rs = led.total("spill", consumer="kv", tensor_class="kv-restore")
+    assert rs["count"] == 1
+    assert (rs["raw_bytes"], rs["compressed_bytes"]) == \
+        (ev["raw_bytes"], ev["compressed_bytes"])    # same payload back
+    # no other crossing was booked
+    assert led.total("spill", consumer="kv")["count"] == 2
+
+
+def test_device_totals_folding_is_overflow_safe():
+    """The device accumulator is int32-windowed; the HOST ledger must keep
+    counting in python ints — repeated absorbs well past 2^31 stay exact."""
+    tot = device_totals(jnp)
+    tot = device_record(tot, EV_READ, 2 ** 30, 2 ** 30 - 1)
+    led = Ledger("dev")
+    for _ in range(8):                        # 8 GiB raw > int32, > uint32
+        led.absorb(tot)
+    t = led.total(EV_READ)
+    assert t["raw_bytes"] == 8 * 2 ** 30
+    assert t["compressed_bytes"] == 8 * (2 ** 30 - 1)
+    assert t["count"] == 8
+
+
+def test_autotuner_per_tier_golden_decision_table():
+    """PR-5 golden table, extended with the per-tier packing axis.  The
+    spill-link model charges raw groups no strip, so at mid fit rates the
+    tiers legitimately DIVERGE: hot stays off (no-slowdown margin) while
+    the spill tier still packs."""
+    from repro.bandwidth.autotune import (
+        kv_expected_bytes_per_page,
+        kv_spill_bytes_per_page,
+    )
+
+    tuner = AutoTuner()
+    table = {
+        # (pair_fit, quad_fit) -> (hot choice, spill choice)
+        (0.0, 0.0): ("off", "off"),
+        (0.15, 0.15): ("off", "quad"),        # <- the divergence point
+        (0.95, 0.0): ("pair", "pair"),
+        (0.9, 0.85): ("quad", "quad"),
+    }
+    for (p, q), (want_hot, want_spill) in table.items():
+        fits = {"pair": p, "quad": q}
+        hot = tuner.choose_kv_packing(fits, strip_bytes=1 / 8)
+        spl = tuner.choose_kv_packing(fits, strip_bytes=1 / 8, tier="spill")
+        assert (hot.choice, spl.choice) == (want_hot, want_spill), (p, q)
+        assert hot.target == "kv" and spl.target == "kv-spill"
+    # the model-level reason: below one strip per packed group on the link
+    assert kv_spill_bytes_per_page(0.5, 4, strip_bytes=1 / 8) < \
+        kv_expected_bytes_per_page(0.5, 4, strip_bytes=1 / 8)
+    # each tier gates on its OWN ledger key: poisoning the spill gate must
+    # not touch the hot decision
+    led = Ledger("kv")
+    while tuner.gate_enabled("kv-spill"):
+        led.record("spill", raw=100, compressed=150)
+        tuner.observe(led, key="kv-spill", consumer="kv", event="spill")
+    spl = tuner.choose_kv_packing({"pair": 0.9, "quad": 0.85},
+                                  strip_bytes=1 / 8, tier="spill")
+    hot = tuner.choose_kv_packing({"pair": 0.9, "quad": 0.85},
+                                  strip_bytes=1 / 8)
+    assert spl.choice == "off" and hot.choice == "quad"

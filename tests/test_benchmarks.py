@@ -13,15 +13,23 @@ if str(ROOT) not in sys.path:
 
 
 def _summary(schemes, accuracy=0.97):
+    from repro.bandwidth.adapters import engine_traffic
+
     breakdown = {
         "data_reads": 10, "mispredict_extra": 1, "wb_dirty": 2,
         "wb_clean+invalidate": 3, "metadata": 4, "prefetch_extra": 0,
     }
+    # the equivalent STAT counters, so the embedded ledger "traffic" view
+    # (what bandwidth_breakdowns reads) is consistent with the breakdown
+    stats = {"demand_reads": 10, "read_probes": 11, "wb_dirty": 2,
+             "wb_clean": 3, "il_writes": 0, "meta_reads": 4, "meta_wb": 0,
+             "pf_extra_access": 0}
     return {
         "workload": "x", "f": 0.5, "baseline_accesses": 100,
         "schemes": {
             s: {"accesses": 90, "speedup": 1.05, "llp_accuracy": accuracy,
-                "meta_hit_rate": 0.5, "breakdown": dict(breakdown)}
+                "meta_hit_rate": 0.5, "breakdown": dict(breakdown),
+                "traffic": engine_traffic(stats).as_dict()}
             for s in schemes
         },
     }
@@ -70,3 +78,40 @@ def test_build_report_registry_sections():
     assert rep["llp_value"]["llp_gain_pct"] == pytest.approx(0.0)
     assert rep["lct_sensitivity"]["512"]["geomean_speedup"] == \
         pytest.approx(1.05)
+
+
+def test_fig15_breakdowns_from_ledger_match_legacy_counters():
+    """The Fig. 8/15 render path now reads engine_traffic ledger rows
+    (engine_breakdown); pin it category-for-category equal to the legacy
+    SimResult.bandwidth_breakdown math on a real (small) simulation."""
+    from benchmarks.sweep_report import bandwidth_breakdowns
+    from repro.core.memsim import run_workload
+
+    summary = run_workload("libq", schemes=("baseline", "cram", "explicit"),
+                           n_events=4000, seed=3)
+    workloads = {"libq": summary}
+    got = bandwidth_breakdowns(workloads)
+    base = summary["baseline_accesses"]
+    for sch in ("explicit", "cram"):
+        b = summary["schemes"][sch]["breakdown"]
+        legacy = {
+            "data": (b["data_reads"] + b["wb_dirty"]) / base,
+            "metadata": b["metadata"] / base,
+            "mispredict": b["mispredict_extra"] / base,
+            "wbclean+inv": b["wb_clean+invalidate"] / base,
+            "total": summary["schemes"][sch]["accesses"] / base,
+        }
+        assert got[sch]["libq"] == legacy, sch
+
+
+def test_fig15_rows_render_from_ledger_view(monkeypatch):
+    import benchmarks.fig15_bandwidth as fig15
+
+    monkeypatch.setattr(fig15, "suite_results",
+                        lambda: _suite(("cram", "explicit")))
+    rows = fig15.run()
+    labels = {r[0]: r[2] for r in rows}
+    # 10 reads + 2 dirty wb over 100 baseline accesses, from ledger rows
+    assert labels["fig15/libq"].startswith("data=0.12")
+    assert "wbclean+inv=0.03" in labels["fig15/libq"]
+    assert "mispred=0.010" in labels["fig8/libq"]

@@ -19,12 +19,34 @@ def test_train_with_fault_and_resume(tmp_path):
     assert (tmp_path / "ckpt").exists()
 
 
-def test_serve_generates_and_mirrors_cram_kv():
+def test_serve_generates_and_mirrors_serve_tier():
     from repro.launch.serve import main as serve_main
 
     out = serve_main(["--preset", "lm2m", "--batch", "2",
                       "--prompt-len", "12", "--gen", "6"])
     assert len(out["sample"]) >= 6
-    kv = out["cram_kv"]
-    assert kv is not None
-    assert kv["kernel_vs_oracle_err"] < 1e-3
+    tier = out["serve_tier"]
+    assert tier is not None
+    assert tier["admitted"] == 2 and tier["retired"] == 2
+    assert tier["evicted"] == 0          # slots default to one per seq
+
+
+def test_serve_spills_compressed_under_slot_pressure():
+    from repro.launch.serve import main as serve_main
+
+    # 2 sequences into 1 lane: every step of the cold sequence crosses
+    # the spill tier, and every crossing books a ledger spill event
+    out = serve_main(["--preset", "lm2m", "--batch", "2",
+                      "--prompt-len", "12", "--gen", "6",
+                      "--slots", "1", "--admit-rate", "2",
+                      "--spill-packing", "quad"])
+    tier = out["serve_tier"]
+    assert tier["evicted"] >= 1 and tier["woken"] >= 1
+    assert tier["retired"] == 2          # churn still drains every seq
+    sp = tier["spill_tier"]
+    assert sp["spills"] == tier["evicted"]
+    assert sp["restores"] == tier["woken"]
+    spill_rows = [ev for tc in out["traffic"].get("kv", {}).values()
+                  for name, ev in tc.items() if name == "spill"]
+    assert sum(r["count"] for r in spill_rows) == \
+        tier["evicted"] + tier["woken"]

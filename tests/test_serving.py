@@ -1,0 +1,433 @@
+"""Serving tier: continuous batching + compressed KV spill (ISSUE 6).
+
+Three invariants make the serve tier trustworthy, and each is pinned
+bitwise here:
+
+  1. slot/solo parity — under any join/retire/step schedule, a slot's
+     physical layout and its attend output equal a standalone batch=1
+     cache fed the same stream (the batch axis adds nothing);
+  2. spill round-trip — evict + wake resurrects the slot's physical
+     state, logical pages, and attend outputs bit-identically, across
+     spill packings, partial pages and gate states;
+  3. slot reuse — retiring hands the lane back; the batch axis never
+     grows.
+
+The deterministic versions run in tier-1 from a clean checkout; the
+hypothesis sweep (random schedules / shapes) rides along when the
+optional dev dependency is present (gated in-module, not via conftest,
+because this module mixes both kinds).
+"""
+
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.bandwidth import AutoTuner, Ledger
+from repro.kv import synthetic_kv_stream
+from repro.serving import SPILL_LANES, ServeLoop, SlotKVCache
+from repro.serving.shard import shard_kv_attend
+
+PAGE, HKV, HD = 8, 1, 16
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+
+def _stream(rng, t, compressible=True):
+    k, v = synthetic_kv_stream(rng, 1, t, HKV, HD, compressible=compressible)
+    return k[0], v[0]
+
+
+def _assert_state_equal(a: dict, b: dict, ctx=""):
+    assert a.keys() == b.keys()
+    for kk in a:
+        assert jnp.array_equal(a[kk], jnp.asarray(b[kk])), (ctx, kk)
+
+
+def _snap(state: dict) -> dict:
+    return {kk: np.asarray(vv) for kk, vv in state.items()}
+
+
+# --------------------------------------------- continuous-batching parity
+
+def _solo_like(loop: ServeLoop) -> SlotKVCache:
+    c = loop.cache
+    return SlotKVCache(c.max_pages, c.page, c.n_kv, c.d, batch=1,
+                       policy=c.policy, packing=c.packing, key=c.key)
+
+
+def _check_parity(loop: ServeLoop, solos: dict, rng):
+    """Every active sequence: physical state bitwise == solo replay, and
+    the batched (masked-lane) attend == the solo attend, bit-for-bit."""
+    loop.cache.repack()
+    active = loop.active_seqs()
+    if not active:
+        return
+    q = {sid: np.asarray(_stream(rng, 1)[0][0], np.float32)
+         for sid in active}
+    out = loop.attend(q)
+    for sid in active:
+        solo = solos[sid]
+        solo.repack()
+        _assert_state_equal(
+            loop.cache.slot_physical_state(loop.seqs[sid].slot),
+            solo.slot_physical_state(0), ctx=sid)
+        ref = shard_kv_attend(solo, np.asarray(q[sid])[None], shard=False)
+        assert np.array_equal(np.asarray(out[sid]), np.asarray(ref[0])), sid
+
+
+def _run_schedule(loop: ServeLoop, rng, n_ops: int, check_every: int = 4):
+    """Random join/step/retire/evict/wake schedule with a solo replay of
+    every sequence; parity-checked along the way.  Returns the replay."""
+    solos: dict[int, SlotKVCache] = {}
+    next_sid = 0
+    cap = loop.cache.max_pages * loop.cache.page
+    for op_i in range(n_ops):
+        live = sorted(loop.seqs)
+        op = rng.choice(("admit", "step", "step", "retire", "evict", "wake"))
+        if op == "admit" and len(live) < loop.n_slots:
+            k, v = _stream(rng, int(rng.integers(1, 3 * PAGE)))
+            loop.admit(next_sid, k, v)
+            solo = _solo_like(loop)
+            solo.append_slot(0, k, v)
+            solos[next_sid] = solo
+            next_sid += 1
+        elif op == "step" and live:
+            ids = [sid for sid in live
+                   if int(solos[sid].tokens_b[0]) + 1 <= cap]
+            ids = [sid for sid in ids if rng.random() < 0.7] or ids[:1]
+            if not ids:
+                continue
+            kvs = {sid: _stream(rng, 1) for sid in ids}
+            loop.step(kvs)
+            for sid, (kk, vv) in kvs.items():
+                solos[sid].append_slot(0, kk, vv)
+        elif op == "retire" and live:
+            sid = int(rng.choice(live))
+            loop.retire(sid)
+            del solos[sid]
+        elif op == "evict" and loop.active_seqs():
+            loop.evict(int(rng.choice(loop.active_seqs())))
+        elif op == "wake" and loop.spilled_seqs():
+            loop.wake(int(rng.choice(loop.spilled_seqs())))
+        if op_i % check_every == check_every - 1:
+            for sid in loop.spilled_seqs():   # parity includes spilled seqs
+                loop.wake(sid)
+            _check_parity(loop, solos, rng)
+    for sid in loop.spilled_seqs():
+        loop.wake(sid)
+    _check_parity(loop, solos, rng)
+    return solos
+
+
+def test_random_schedule_matches_solo_reference():
+    rng = np.random.default_rng(0)
+    loop = ServeLoop(slots=3, max_pages=8, page=PAGE, n_kv=HKV, head_dim=HD,
+                     policy="static", packing="pair", spill_packing="quad")
+    _run_schedule(loop, rng, n_ops=28)
+    assert loop.counts["admitted"] > 0
+
+
+def test_random_schedule_quad_dynamic_matches_solo():
+    rng = np.random.default_rng(7)
+    loop = ServeLoop(slots=2, max_pages=8, page=PAGE, n_kv=HKV, head_dim=HD,
+                     policy="static", packing="quad", spill_packing="pair")
+    _run_schedule(loop, rng, n_ops=20)
+
+
+def test_retired_slots_are_reused_no_batch_growth():
+    rng = np.random.default_rng(1)
+    loop = ServeLoop(slots=2, max_pages=4, page=PAGE, n_kv=HKV, head_dim=HD,
+                     policy="static")
+    loop.admit(100, *_stream(rng, PAGE))      # long-lived: pins lane 0
+    seen_slots = set()
+    for sid in range(8):                      # churn 8 sequences through
+        rec = loop.admit(sid, *_stream(rng, PAGE + 3))   # the OTHER lane
+        seen_slots.add(rec.slot)
+        loop.step({sid: _stream(rng, 1), 100: _stream(rng, 1)})
+        loop.retire(sid)
+    assert seen_slots == {1}                  # lane 1 recycled, none added
+    loop.retire(100)
+    assert loop.cache.batch == 2
+    assert loop.cache.state["pages"].shape[0] == 2
+    assert sorted(loop._free) == [0, 1]
+    # a reused lane starts pristine: admit after retire matches solo
+    loop.admit(99, *_stream(rng, 2 * PAGE))
+    loop.cache.repack()
+    solo = _solo_like(loop)                   # replay is impossible if the
+    # lane kept ghosts: rebuild oracle over the slot's own prefix
+    _assert_state_equal(
+        loop.cache.slot_physical_state(loop.seqs[99].slot),
+        _snap(loop.cache.slot_reference_state(loop.seqs[99].slot)))
+    del solo
+
+
+def test_admit_evicts_coldest_when_full():
+    rng = np.random.default_rng(2)
+    loop = ServeLoop(slots=2, max_pages=4, page=PAGE, n_kv=HKV, head_dim=HD,
+                     policy="static")
+    loop.admit(0, *_stream(rng, PAGE))
+    loop.admit(1, *_stream(rng, PAGE))
+    loop.step({1: _stream(rng, 1)})           # seq 0 is now the coldest
+    loop.admit(2, *_stream(rng, PAGE))        # no free slot -> spills 0
+    assert loop.seqs[0].spilled and 0 in loop.spill
+    assert sorted(loop.active_seqs()) == [1, 2]
+    loop.wake(0)                              # full again -> evicts 1 or 2
+    assert not loop.seqs[0].spilled
+    assert len(loop.active_seqs()) == 2 and len(loop.spilled_seqs()) == 1
+
+
+# ------------------------------------------------------- spill round-trip
+
+@pytest.mark.parametrize("spk", ["off", "pair", "quad"])
+def test_spill_roundtrip_bit_identical(spk):
+    rng = np.random.default_rng(10)
+    loop = ServeLoop(slots=2, max_pages=16, page=PAGE, n_kv=HKV,
+                     head_dim=HD, policy="static", packing="pair",
+                     spill_packing=spk)
+    loop.admit(0, *_stream(rng, 8 * PAGE))
+    loop.cache.repack()                       # settle, then snapshot
+    snap = _snap(loop.cache.slot_physical_state(0))
+    pages_snap = np.asarray(loop.cache.pages_view()[0])
+    q = {0: np.asarray(_stream(rng, 1)[0][0], np.float32)}
+    before = np.asarray(loop.attend(q)[0])
+    loop.evict(0)
+    assert loop.seqs[0].spilled and loop.spill.spills == 1
+    loop.wake(0)
+    slot = loop.seqs[0].slot
+    _assert_state_equal(loop.cache.slot_physical_state(slot), snap, ctx=spk)
+    assert np.array_equal(np.asarray(loop.cache.pages_view()[slot]),
+                          pages_snap)
+    assert np.array_equal(np.asarray(loop.attend(q)[0]), before)
+    s = loop.spill.summary()
+    assert s["spills"] == s["restores"] == 1 and s["held"] == 0
+
+
+def test_spill_savings_order_on_compressible_stream():
+    """Tighter spill packing moves fewer link bytes (the whole point):
+    stored(quad) < stored(pair) < raw, and "off" adds ~no overhead."""
+    rng = np.random.default_rng(11)
+    k, v = _stream(rng, 8 * PAGE)
+    stored = {}
+    for spk in ("off", "pair", "quad"):
+        loop = ServeLoop(slots=1, max_pages=8, page=PAGE, n_kv=HKV,
+                         head_dim=HD, policy="static", spill_packing=spk)
+        loop.admit(0, k, v)
+        loop.evict(0)
+        stored[spk] = loop.spill.stored_bytes
+        assert loop.spill.raw_bytes == 8 * loop.cache.slot_bytes
+    assert stored["quad"] < stored["pair"] < stored["off"]
+    assert stored["off"] <= loop.spill.raw_bytes * 1.01  # fit bits only
+
+
+def test_spill_roundtrip_partial_page_incompressible_dynamic():
+    """The hard corner: dynamic gate, noise stream (raw groups + trimmed
+    dead lanes), token count off page/group granularity.  Counter and
+    §VI bookkeeping must survive the round-trip too."""
+    rng = np.random.default_rng(12)
+    loop = ServeLoop(slots=2, max_pages=8, page=PAGE, n_kv=HKV, head_dim=HD,
+                     policy="dynamic", packing="quad", spill_packing="pair")
+    loop.admit(7, *_stream(rng, 19, compressible=False))
+    loop.cache.repack()
+    snap = _snap(loop.cache.slot_physical_state(0))
+    ctr = int(np.asarray(loop.cache.state["counter"][0]))
+    unc = loop.cache._uncounted_b[0].copy()
+    loop.evict(7)
+    loop.wake(7)
+    slot = loop.seqs[7].slot
+    _assert_state_equal(loop.cache.slot_physical_state(slot), snap)
+    assert int(np.asarray(loop.cache.state["counter"][slot])) == ctr
+    assert (loop.cache._uncounted_b[slot] == unc).all()
+
+
+@pytest.mark.parametrize("spk,tokens,want_tail", [
+    # pair: a partial page leaves <=1 full page in its 2-lane group, so
+    # that group always goes raw-trimmed (tail unused)
+    ("pair", 4 * PAGE + 5, False),
+    # quad: 2 full pages + the partial share one 4-lane group — it packs
+    # with the partial page crossing raw in `tail`
+    ("quad", 2 * PAGE + 5, True),
+])
+def test_spill_roundtrip_partial_page_compressible(spk, tokens, want_tail):
+    """Off-page-granularity length on a COMPRESSIBLE stream: full pages
+    still pack (the partial page must not poison its group) and the
+    round-trip stays bit-identical, payload strictly smaller than raw."""
+    rng = np.random.default_rng(16)
+    loop = ServeLoop(slots=1, max_pages=8, page=PAGE, n_kv=HKV, head_dim=HD,
+                     policy="static", spill_packing=spk)
+    loop.admit(0, *_stream(rng, tokens))
+    loop.cache.repack()
+    snap = _snap(loop.cache.slot_physical_state(0))
+    pages_snap = np.asarray(loop.cache.pages_view()[0])
+    loop.evict(0)
+    p = loop.spill._store[0]
+    assert p.fit.any()
+    assert (p.tail is not None) == want_tail
+    assert loop.spill.stored_bytes < loop.spill.raw_bytes
+    loop.wake(0)
+    _assert_state_equal(loop.cache.slot_physical_state(0), snap, ctx=spk)
+    assert np.array_equal(np.asarray(loop.cache.pages_view()[0]),
+                          pages_snap)
+
+
+def test_spill_roundtrip_with_pending_dirty_appends():
+    """Evict settles the layout first: appends not yet repacked at evict
+    time must still round-trip (the payload is the settled state)."""
+    rng = np.random.default_rng(13)
+    loop = ServeLoop(slots=1, max_pages=8, page=PAGE, n_kv=HKV, head_dim=HD,
+                     policy="static", spill_packing="quad")
+    loop.admit(0, *_stream(rng, 2 * PAGE + 3))
+    loop.step({0: _stream(rng, 1)})           # dirty groups pending
+    loop.cache.repack()
+    ref = _snap(loop.cache.slot_physical_state(0))
+    loop.cache.append_slot(0, *_stream(rng, 2))   # dirty again, no repack
+    loop.evict(0)
+    loop.wake(0)
+    got = loop.cache.slot_physical_state(loop.seqs[0].slot)
+    for kk in ("markers",):
+        assert jnp.array_equal(got[kk], jnp.asarray(ref[kk]))
+    # and the woken slot equals its own rebuild oracle
+    _assert_state_equal(
+        got, _snap(loop.cache.slot_reference_state(loop.seqs[0].slot)))
+
+
+def test_spill_capacity_bound_and_retire_while_cold():
+    rng = np.random.default_rng(14)
+    loop = ServeLoop(slots=2, max_pages=8, page=PAGE, n_kv=HKV, head_dim=HD,
+                     policy="static", spill_pages=4)
+    loop.admit(0, *_stream(rng, 4 * PAGE))
+    loop.admit(1, *_stream(rng, 4 * PAGE))
+    loop.evict(0)                             # 4 pages held == capacity
+    with pytest.raises(RuntimeError, match="spill store full"):
+        loop.evict(1)
+    loop.retire(0)                            # retired while cold: dropped
+    assert 0 not in loop.spill and len(loop.spill) == 0
+    loop.evict(1)                             # capacity freed
+    assert 1 in loop.spill
+
+
+# ------------------------------------------------------ per-tier autotune
+
+def test_serve_loop_auto_picks_per_tier_packings():
+    rng = np.random.default_rng(15)
+    k, v = synthetic_kv_stream(rng, 1, 8 * PAGE, HKV, HD, scale=2e-4)
+    loop, choices = ServeLoop.auto(
+        AutoTuner(), k, v, slots=2, max_pages=8, page=PAGE, n_kv=HKV,
+        head_dim=HD)
+    assert choices["hot"].target == "kv"
+    assert choices["spill"].target == "kv-spill"
+    assert loop.spill.packing == choices["spill"].choice != "off"
+    # the loop runs end-to-end under the chosen layouts
+    loop.admit(0, k[0], v[0])
+    loop.evict(0)
+    loop.wake(0)
+    obs = loop.observe_tiers()
+    assert set(obs) == {"kv-hot", "kv-spill"}
+    noise = synthetic_kv_stream(rng, 1, 8 * PAGE, HKV, HD,
+                                compressible=False)
+    _, off_choices = ServeLoop.auto(
+        AutoTuner(), *noise, slots=2, max_pages=8, page=PAGE, n_kv=HKV,
+        head_dim=HD)
+    assert off_choices["hot"].choice == "off"
+    assert off_choices["spill"].choice == "off"
+
+
+# ----------------------------------------------------------- sharded serve
+
+def test_sharded_attend_bit_identical_to_single_device():
+    """shard_map over the slot axis on a forced 2-device CPU must match
+    the single-device dispatch exactly (fresh process: the device count is
+    fixed at jax init)."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["JAX_PLATFORMS"] = "cpu"
+        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                                   + " --xla_force_host_platform_device_count=2")
+        import numpy as np
+        import jax
+        from repro.kv import synthetic_kv_stream
+        from repro.serving import ServeLoop
+        from repro.serving.shard import shard_kv_attend
+
+        assert len(jax.devices()) == 2
+        PAGE, HKV, HD = 8, 1, 16
+        rng = np.random.default_rng(4)
+        loop = ServeLoop(slots=4, max_pages=4, page=PAGE, n_kv=HKV,
+                         head_dim=HD, policy="static")
+        for sid, t in enumerate((5, PAGE, 2 * PAGE, 3 * PAGE + 1)):
+            k, v = synthetic_kv_stream(rng, 1, t, HKV, HD)
+            loop.admit(sid, k[0], v[0])
+        q = np.asarray(synthetic_kv_stream(rng, 4, 1, HKV, HD)[0][:, 0],
+                       np.float32)
+        sharded = shard_kv_attend(loop.cache, q, shard=True)
+        single = shard_kv_attend(loop.cache, q, shard=False)
+        assert np.array_equal(np.asarray(sharded), np.asarray(single))
+        # an odd slot count doesn't divide 2 devices: "auto" must fall
+        # back to the single-device dispatch, bit-identically
+        loop3 = ServeLoop(slots=3, max_pages=4, page=PAGE, n_kv=HKV,
+                          head_dim=HD, policy="static")
+        for sid in range(3):
+            k, v = synthetic_kv_stream(rng, 1, PAGE + sid, HKV, HD)
+            loop3.admit(sid, k[0], v[0])
+        q3 = np.asarray(synthetic_kv_stream(rng, 3, 1, HKV, HD)[0][:, 0],
+                        np.float32)
+        fb = shard_kv_attend(loop3.cache, q3, shard="auto")
+        ref = shard_kv_attend(loop3.cache, q3, shard=False)
+        assert np.array_equal(np.asarray(fb), np.asarray(ref))
+        print("SHARD-OK")
+    """)
+    env = dict(os.environ)
+    src = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "SHARD-OK" in out.stdout
+
+
+# ---------------------------------------------------- hypothesis sweep
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        spk=st.sampled_from(["off", "pair", "quad"]),
+        policy=st.sampled_from(["static", "dynamic"]),
+        tokens=st.integers(min_value=1, max_value=6 * PAGE),
+        compressible=st.booleans(),
+        pending=st.booleans(),
+        seed=st.integers(min_value=0, max_value=2 ** 16),
+    )
+    def test_spill_roundtrip_property(spk, policy, tokens, compressible,
+                                      pending, seed):
+        """evict+wake == identity on the settled slot state, for every
+        spill packing x gate policy x token count x stream regime, with
+        or without un-repacked appends pending at evict time."""
+        rng = np.random.default_rng(seed)
+        loop = ServeLoop(slots=2, max_pages=8, page=PAGE, n_kv=HKV,
+                         head_dim=HD, policy=policy, spill_packing=spk)
+        loop.admit(0, *_stream(rng, tokens, compressible=compressible))
+        if pending and tokens + 2 <= loop.cache.max_pages * PAGE:
+            loop.cache.repack()
+            loop.cache.append_slot(0, *_stream(rng, 2))
+        loop.cache.repack()
+        snap = _snap(loop.cache.slot_physical_state(0))
+        pages = np.asarray(loop.cache.pages_view()[0])
+        ctr = int(np.asarray(loop.cache.state["counter"][0]))
+        loop.evict(0)
+        loop.wake(0)
+        slot = loop.seqs[0].slot
+        _assert_state_equal(loop.cache.slot_physical_state(slot), snap)
+        assert np.array_equal(np.asarray(loop.cache.pages_view()[slot]),
+                              pages)
+        assert int(np.asarray(loop.cache.state["counter"][slot])) == ctr
