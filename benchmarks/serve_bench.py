@@ -213,7 +213,8 @@ def churn_spill_curve(*, spill_packing="quad", slots=3, n_seqs=10,
             ks, vs = stream[sid]
             pos = tokens[sid]
             kvs[sid] = (ks[pos:pos + 1], vs[pos:pos + 1])
-        loop.step(kvs)                       # wakes spilled ids first
+        loop.step_all(kvs)                   # wakes spilled ids first;
+        # ids > slots runs in waves (one fused append per wave)
         for sid in ids:
             tokens[sid] += 1
             if tokens[sid] >= target[sid]:

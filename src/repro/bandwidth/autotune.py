@@ -84,21 +84,27 @@ def kv_expected_bytes_per_page(fit_rate: float, lanes: int,
 
 def kv_spill_bytes_per_page(fit_rate: float, lanes: int,
                             slot_bytes: float = 1.0,
-                            strip_bytes: float | None = None) -> float:
+                            page: int | None = None) -> float:
     """Expected bytes per page crossing the HBM<->host spill link per
-    evict/restore (the `serving.SpillStore` payload model): a fitting
-    group moves one packed slot plus its base row; an unfitting group
-    moves its `lanes` pages raw with NO strip — the spill payload stores
-    raw groups without in-band metadata, unlike the hot decode path where
-    every resident group carries a strip.  Baseline ("off") spills every
-    page raw: exactly `slot_bytes` per page.
+    evict/restore, mirroring the actual `serving.SpillStore` payload: a
+    fitting group moves one packed slot plus its BASE ROW — one token row,
+    `slot_bytes / page`, NOT a full strip; the spill payload carries no
+    in-band metadata — and an unfitting group moves its pages raw with no
+    strip either.  Baseline ("off") spills every page raw: exactly
+    `slot_bytes` per page.  `page` sizes the base-row term (default 8).
 
-    The missing per-raw-group strip term is why the two tiers genuinely
-    diverge: at mid fit rates, packing can LOSE on the hot decode path
-    (strips on every group) while still winning on the spill link."""
-    if strip_bytes is None:
-        strip_bytes = slot_bytes / 8.0
-    packed_group = slot_bytes + strip_bytes
+    Two deliberate approximations, both conservative toward packing: raw
+    groups are charged all `lanes` pages although the store trims dead
+    tail lanes (only LIVE lanes cross, so a short sequence's raw groups
+    are cheaper than modeled), and the per-group fit bit is ignored
+    (1 byte vs KiB-scale slots).
+
+    The absent strip terms are why the two tiers genuinely diverge: at
+    mid fit rates, packing can LOSE on the hot decode path (strips on
+    every resident group, `kv_expected_bytes_per_page`) while still
+    winning on the spill link."""
+    base_bytes = slot_bytes / (page if page else 8)
+    packed_group = slot_bytes + base_bytes
     raw_group = lanes * slot_bytes
     return (fit_rate * packed_group + (1.0 - fit_rate) * raw_group) / lanes
 
@@ -203,14 +209,13 @@ class AutoTuner:
         `tier` makes packing a per-tier policy axis: "hot" judges
         candidates under the decode DMA model (`kv_expected_bytes_per_page`
         — strips on every resident group), "spill" under the spill-link
-        model (`kv_spill_bytes_per_page` — strip only on packed groups),
-        and each tier carries its own §VI ledger gate key ("kv" vs
-        "kv-spill") so observe() windows are judged per tier."""
+        model (`kv_spill_bytes_per_page` — a base row, no strip, on packed
+        groups only; `page` sizes that base-row term), and each tier
+        carries its own §VI ledger gate key ("kv" vs "kv-spill") so
+        observe() windows are judged per tier."""
         assert tier in ("hot", "spill"), tier
         if gate_key is None:
             gate_key = "kv" if tier == "hot" else "kv-spill"
-        model = (kv_expected_bytes_per_page if tier == "hot"
-                 else kv_spill_bytes_per_page)
         basis = "tables"
         if fit_rates is None and k is not None:
             assert page is not None, "probe needs the page size"
@@ -224,9 +229,12 @@ class AutoTuner:
             }
         expected = {"off": float(slot_bytes)}
         for packing, lanes in (("pair", 2), ("quad", 4)):
-            expected[packing] = model(
-                float(fit_rates.get(packing, 0.0)), lanes,
-                slot_bytes, strip_bytes)
+            fr = float(fit_rates.get(packing, 0.0))
+            expected[packing] = (
+                kv_expected_bytes_per_page(fr, lanes, slot_bytes,
+                                           strip_bytes)
+                if tier == "hot" else
+                kv_spill_bytes_per_page(fr, lanes, slot_bytes, page))
         choice = min(expected, key=lambda p: (expected[p],
                                               KV_PACKINGS.index(p)))
         # no-slowdown guarantee: a packing must beat "off" by the margin,

@@ -78,7 +78,8 @@ def _serve_tier(args, cfg, cache, ledger, *, prompt_len, total_tokens):
                    vcache[i, fed[i]:fed[i] + 1])
                for i in loop.seqs if fed[i] < T}
         if kvs:
-            loop.step(kvs)          # wakes spilled seqs named this step
+            loop.step_all(kvs)      # wakes spilled seqs named this step;
+            # with live > slots the appends run in waves of `slots`
             for i in kvs:
                 fed[i] += 1
                 if fed[i] >= T:

@@ -7,8 +7,10 @@ and a compressed `SpillStore` behind them.
   admit   — take the lowest free slot (evicting the coldest active
             sequence to the spill tier when none is free) and prefill it;
   step    — one fused decode append for every sequence named this step
-            (spilled ones are woken first), then the batched bandwidth
-            accounting;
+            (spilled ones are woken first; wake evictions never pick a
+            step-named sequence), then the batched bandwidth accounting.
+            One fused step carries at most `slots` sequences; `step_all`
+            chunks an oversubscribed batch into waves;
   attend  — one batched decode-attend over the whole slot axis (inactive
             lanes are masked by their zero valid counts), optionally
             sharded across devices (`serving.shard`);
@@ -94,7 +96,7 @@ class ServeLoop:
             strip_bytes=strip_bytes, tier="hot", gate_key="kv-hot")
         spl = tuner.choose_kv_packing(
             k=k_sample, v=v_sample, page=page, slot_bytes=slot_bytes,
-            strip_bytes=strip_bytes, tier="spill")
+            tier="spill")   # the spill-link model has no strip term
         policy, packing = (("off", "pair") if hot.choice == "off"
                            else ("auto", hot.choice))
         loop = cls(slots=slots, max_pages=max_pages, page=page, n_kv=n_kv,
@@ -104,15 +106,17 @@ class ServeLoop:
         return loop, loop.choices
 
     # --------------------------------------------------------- scheduling
-    def _coldest_active(self) -> SequenceSlot:
-        active = [s for s in self.seqs.values() if not s.spilled]
-        assert active, "no active sequence to evict"
-        return min(active, key=lambda s: (s.last_step, s.admitted_at,
-                                          s.seq_id))
+    def _coldest_active(self, protect: frozenset = frozenset()
+                        ) -> SequenceSlot:
+        cands = [s for s in self.seqs.values()
+                 if not s.spilled and s.seq_id not in protect]
+        assert cands, "no evictable active sequence"
+        return min(cands, key=lambda s: (s.last_step, s.admitted_at,
+                                         s.seq_id))
 
-    def _take_slot(self) -> int:
+    def _take_slot(self, protect: frozenset = frozenset()) -> int:
         if not self._free:
-            self.evict()
+            self.evict(protect=protect)
         return self._free.pop(0)
 
     def admit(self, seq_id, k=None, v=None) -> SequenceSlot:
@@ -138,23 +142,26 @@ class ServeLoop:
             insort(self._free, rec.slot)
         self.counts["retired"] += 1
 
-    def evict(self, seq_id=None) -> SequenceSlot:
-        """Spill one active sequence (default: the coldest) compressed."""
+    def evict(self, seq_id=None, *,
+              protect: frozenset = frozenset()) -> SequenceSlot:
+        """Spill one active sequence compressed — `seq_id`, or the coldest
+        active one outside `protect`."""
         rec = self.seqs[seq_id] if seq_id is not None else (
-            self._coldest_active())
+            self._coldest_active(protect))
         self.spill.evict(self.cache, rec.slot, rec.seq_id)  # resets slot
         insort(self._free, rec.slot)
         rec.slot, rec.spilled = -1, True
         self.counts["evicted"] += 1
         return rec
 
-    def wake(self, seq_id) -> SequenceSlot:
+    def wake(self, seq_id, *,
+             protect: frozenset = frozenset()) -> SequenceSlot:
         """Restore a spilled sequence into a free slot (evicting the
-        coldest active one if needed)."""
+        coldest active one outside `protect` if needed)."""
         rec = self.seqs[seq_id]
         if not rec.spilled:
             return rec
-        slot = self._take_slot()
+        slot = self._take_slot(protect)
         self.spill.restore(self.cache, slot, seq_id)
         rec.slot, rec.spilled = slot, False
         rec.last_step = self.clock
@@ -165,14 +172,28 @@ class ServeLoop:
     def step(self, kv_by_seq: dict) -> dict:
         """One decode step: `{seq_id: (k, v)}` with k/v (T, n_kv, d), all
         the same T (usually 1).  Spilled sequences named here are woken
-        first; the append is one fused scatter; the batched byte
-        accounting charges the ledger.  Returns {seq_id: slot}."""
+        first, and the wake evictions never pick a step-named sequence —
+        its last_step only advances below, so the coldest-active ordering
+        could otherwise evict a sequence this very step is about to
+        append to, leaving slot=-1 in the scatter.  The append is one
+        fused scatter, so at most `n_slots` sequences fit one step;
+        `step_all` chunks a larger batch into waves.  Returns
+        {seq_id: slot}."""
         self.clock += 1
         ids = sorted(kv_by_seq)
+        if len(ids) > self.n_slots:
+            raise ValueError(
+                f"step names {len(ids)} sequences but the pool has only "
+                f"{self.n_slots} slots; use step_all() to run in waves")
+        named = frozenset(ids)
         for sid in ids:
             if self.seqs[sid].spilled:
-                self.wake(sid)
-        slot_ids = [self.seqs[sid].slot for sid in ids]
+                self.wake(sid, protect=named)
+        slot_ids = []
+        for sid in ids:
+            rec = self.seqs[sid]
+            assert not rec.spilled and rec.slot >= 0, (sid, rec)
+            slot_ids.append(rec.slot)
         k = np.stack([np.asarray(kv_by_seq[sid][0]) for sid in ids])
         v = np.stack([np.asarray(kv_by_seq[sid][1]) for sid in ids])
         self.cache.append_active(slot_ids, k, v)
@@ -180,6 +201,23 @@ class ServeLoop:
         for sid in ids:
             self.seqs[sid].last_step = self.clock
         return dict(zip(ids, slot_ids))
+
+    def step_all(self, kv_by_seq: dict) -> dict:
+        """`step` for an oversubscribed batch: more named sequences than
+        slots cannot share one fused append, so they run in waves of at
+        most `n_slots` — active sequences first (already resident), then
+        spilled ones, whose wakes may evict earlier waves' members (those
+        have been appended by then).  Each wave is one fused append with
+        its own byte accounting.  Returns the merged {seq_id: slot}, each
+        slot from its sequence's own wave."""
+        ids = sorted(kv_by_seq)
+        order = ([s for s in ids if not self.seqs[s].spilled]
+                 + [s for s in ids if self.seqs[s].spilled])
+        out: dict = {}
+        for i in range(0, len(order), self.n_slots):
+            wave = order[i:i + self.n_slots]
+            out.update(self.step({s: kv_by_seq[s] for s in wave}))
+        return out
 
     def attend(self, q_by_seq: dict, *, shard: "bool | str" = "auto") -> dict:
         """Batched decode-attend for `{seq_id: q}` with q (Hq, d); one

@@ -135,6 +135,11 @@ class SlotKVCache(CRAMKVCache):
         aligned with `slot_ids`, each landing at its slot's own position —
         ONE fused scatter, no per-slot dispatch."""
         slot_ids = np.asarray(slot_ids, np.int64)
+        assert ((slot_ids >= 0) & (slot_ids < self.batch)).all(), \
+            f"slot ids out of range: {slot_ids}"      # -1 would wrap the
+        # scatter to the LAST lane and corrupt whichever sequence owns it
+        assert np.unique(slot_ids).size == slot_ids.size, \
+            f"duplicate slot ids: {slot_ids}"
         k = jnp.asarray(k, jnp.bfloat16).view(jnp.int16)
         v = jnp.asarray(v, jnp.bfloat16).view(jnp.int16)
         kv = jnp.concatenate([k, v], axis=-1)           # (S, T, Hkv, D2)

@@ -194,15 +194,19 @@ class SpillStore:
         p = self._store.pop(seq_id)
         assert int(cache.tokens_b[slot]) == 0, "restore needs a free slot"
         page, hkv, d2 = cache.page, cache.n_kv, cache.d2
-        pages = np.empty((p.n_groups * self.lanes, page, hkv, d2), np.int16)
+        # decode under the packing the payload was EVICTED with, not the
+        # store's current setting — per-tier retuning may change the
+        # latter while sequences are cold
+        lanes = SPILL_LANES[p.packing]
+        pages = np.empty((p.n_groups * lanes, page, hkv, d2), np.int16)
         fi = ri = 0
-        if self.packing == "off":
+        if p.packing == "off":
             pages[:] = p.slots
         else:
-            unpack = (pagepack.unpack_pair if self.packing == "pair"
+            unpack = (pagepack.unpack_pair if p.packing == "pair"
                       else pagepack.unpack_quad)
             for g in range(p.n_groups):
-                dst = pages[g * self.lanes:(g + 1) * self.lanes]
+                dst = pages[g * lanes:(g + 1) * lanes]
                 if p.fit[g]:
                     dst[:] = np.stack(unpack(p.slots[g], p.bases[fi]))
                     fi += 1

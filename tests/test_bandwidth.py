@@ -498,12 +498,16 @@ def test_autotuner_per_tier_golden_decision_table():
     for (p, q), (want_hot, want_spill) in table.items():
         fits = {"pair": p, "quad": q}
         hot = tuner.choose_kv_packing(fits, strip_bytes=1 / 8)
-        spl = tuner.choose_kv_packing(fits, strip_bytes=1 / 8, tier="spill")
+        spl = tuner.choose_kv_packing(fits, page=8, tier="spill")
         assert (hot.choice, spl.choice) == (want_hot, want_spill), (p, q)
         assert hot.target == "kv" and spl.target == "kv-spill"
-    # the model-level reason: below one strip per packed group on the link
-    assert kv_spill_bytes_per_page(0.5, 4, strip_bytes=1 / 8) < \
+    # the model-level reason: raw groups cross the link with no strip
+    assert kv_spill_bytes_per_page(0.5, 4, page=8) < \
         kv_expected_bytes_per_page(0.5, 4, strip_bytes=1 / 8)
+    # and a packed group's overhead is the REAL payload base row
+    # (slot/page, one token row) — not a strip-sized term
+    assert kv_spill_bytes_per_page(1.0, 4, 1.0, page=16) == \
+        pytest.approx((1.0 + 1.0 / 16) / 4)
     # each tier gates on its OWN ledger key: poisoning the spill gate must
     # not touch the hot decision
     led = Ledger("kv")
@@ -511,7 +515,7 @@ def test_autotuner_per_tier_golden_decision_table():
         led.record("spill", raw=100, compressed=150)
         tuner.observe(led, key="kv-spill", consumer="kv", event="spill")
     spl = tuner.choose_kv_packing({"pair": 0.9, "quad": 0.85},
-                                  strip_bytes=1 / 8, tier="spill")
+                                  page=8, tier="spill")
     hot = tuner.choose_kv_packing({"pair": 0.9, "quad": 0.85},
                                   strip_bytes=1 / 8)
     assert spl.choice == "off" and hot.choice == "quad"

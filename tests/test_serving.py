@@ -86,16 +86,36 @@ def _check_parity(loop: ServeLoop, solos: dict, rng):
         assert np.array_equal(np.asarray(out[sid]), np.asarray(ref[0])), sid
 
 
-def _run_schedule(loop: ServeLoop, rng, n_ops: int, check_every: int = 4):
+def _check_parity_all(loop: ServeLoop, solos: dict, rng):
+    """Parity for every LIVE sequence: active ones directly, spilled ones
+    woken one by one — live may exceed the slot pool, so they can never
+    all be active at once (each wake may re-spill an already-checked
+    one)."""
+    checked: set = set()
+    while True:
+        _check_parity(loop, solos, rng)
+        checked |= set(loop.active_seqs())
+        rest = [s for s in loop.spilled_seqs() if s not in checked]
+        if not rest:
+            return
+        loop.wake(rest[0])
+
+
+def _run_schedule(loop: ServeLoop, rng, n_ops: int, check_every: int = 4,
+                  extra_live: int = 2):
     """Random join/step/retire/evict/wake schedule with a solo replay of
-    every sequence; parity-checked along the way.  Returns the replay."""
+    every sequence; parity-checked along the way.  Admits OVERSUBSCRIBE
+    the pool by up to `extra_live` (admit evicts automatically), and half
+    the steps name every live sequence — more than the slot pool, so the
+    wake/evict waves (the launcher's primary spill scenario) are on the
+    tested path.  Returns the replay."""
     solos: dict[int, SlotKVCache] = {}
     next_sid = 0
     cap = loop.cache.max_pages * loop.cache.page
     for op_i in range(n_ops):
         live = sorted(loop.seqs)
         op = rng.choice(("admit", "step", "step", "retire", "evict", "wake"))
-        if op == "admit" and len(live) < loop.n_slots:
+        if op == "admit" and len(live) < loop.n_slots + extra_live:
             k, v = _stream(rng, int(rng.integers(1, 3 * PAGE)))
             loop.admit(next_sid, k, v)
             solo = _solo_like(loop)
@@ -105,11 +125,14 @@ def _run_schedule(loop: ServeLoop, rng, n_ops: int, check_every: int = 4):
         elif op == "step" and live:
             ids = [sid for sid in live
                    if int(solos[sid].tokens_b[0]) + 1 <= cap]
-            ids = [sid for sid in ids if rng.random() < 0.7] or ids[:1]
             if not ids:
                 continue
+            if rng.random() < 0.5:            # full step: EVERY live seq,
+                pass                          # oversubscribed on purpose
+            else:
+                ids = [sid for sid in ids if rng.random() < 0.7] or ids[:1]
             kvs = {sid: _stream(rng, 1) for sid in ids}
-            loop.step(kvs)
+            loop.step_all(kvs)
             for sid, (kk, vv) in kvs.items():
                 solos[sid].append_slot(0, kk, vv)
         elif op == "retire" and live:
@@ -121,12 +144,8 @@ def _run_schedule(loop: ServeLoop, rng, n_ops: int, check_every: int = 4):
         elif op == "wake" and loop.spilled_seqs():
             loop.wake(int(rng.choice(loop.spilled_seqs())))
         if op_i % check_every == check_every - 1:
-            for sid in loop.spilled_seqs():   # parity includes spilled seqs
-                loop.wake(sid)
-            _check_parity(loop, solos, rng)
-    for sid in loop.spilled_seqs():
-        loop.wake(sid)
-    _check_parity(loop, solos, rng)
+            _check_parity_all(loop, solos, rng)
+    _check_parity_all(loop, solos, rng)
     return solos
 
 
@@ -185,6 +204,44 @@ def test_admit_evicts_coldest_when_full():
     loop.wake(0)                              # full again -> evicts 1 or 2
     assert not loop.seqs[0].spilled
     assert len(loop.active_seqs()) == 2 and len(loop.spilled_seqs()) == 1
+
+
+def test_step_never_evicts_a_step_named_sequence():
+    """The launcher's '--slots 2 --batch 4' shape: a step naming a
+    spilled sequence plus the coldest ACTIVE one.  Waking the spilled
+    sequence must evict an UNNAMED sequence — an unprotected coldest-
+    active pick would evict the step-named one (its last_step only
+    advances after the append), leaving slot=-1, which numpy wraps to
+    the last lane and corrupts whichever sequence owns it."""
+    rng = np.random.default_rng(3)
+    loop = ServeLoop(slots=2, max_pages=4, page=PAGE, n_kv=HKV, head_dim=HD,
+                     policy="static")
+    solos = {}
+    for sid in range(4):
+        k, v = _stream(rng, PAGE)
+        loop.admit(sid, k, v)
+        solo = _solo_like(loop)
+        solo.append_slot(0, k, v)
+        solos[sid] = solo
+    assert loop.spilled_seqs() == [0, 1] and loop.active_seqs() == [2, 3]
+    # seq 2 is the coldest active (same clock, lowest seq id): name it
+    # together with spilled seq 0 — the wake must evict 3, never 2
+    kvs = {0: _stream(rng, 1), 2: _stream(rng, 1)}
+    loop.step(kvs)
+    for sid, (kk, vv) in kvs.items():
+        solos[sid].append_slot(0, kk, vv)
+    assert not loop.seqs[2].spilled and loop.seqs[2].slot >= 0
+    assert loop.seqs[3].spilled           # the unnamed one was evicted
+    _check_parity(loop, solos, rng)
+    # more named sequences than slots cannot share one fused append ...
+    with pytest.raises(ValueError, match="step names 3"):
+        loop.step({s: _stream(rng, 1) for s in (0, 2, 3)})
+    # ... but step_all chunks them into waves, appending every named seq
+    kvs = {s: _stream(rng, 1) for s in (0, 2, 3)}
+    assert set(loop.step_all(kvs)) == {0, 2, 3}
+    for sid, (kk, vv) in kvs.items():
+        solos[sid].append_slot(0, kk, vv)
+    _check_parity_all(loop, solos, rng)
 
 
 # ------------------------------------------------------- spill round-trip
@@ -276,6 +333,27 @@ def test_spill_roundtrip_partial_page_compressible(spk, tokens, want_tail):
     assert loop.spill.stored_bytes < loop.spill.raw_bytes
     loop.wake(0)
     _assert_state_equal(loop.cache.slot_physical_state(0), snap, ctx=spk)
+    assert np.array_equal(np.asarray(loop.cache.pages_view()[0]),
+                          pages_snap)
+
+
+def test_restore_decodes_under_the_payloads_packing():
+    """A payload evicted under one packing must decode under THAT packing
+    even if the store's setting changed while the sequence was cold
+    (per-tier retuning): restore() reads the recorded `p.packing`, not
+    the store's current one."""
+    rng = np.random.default_rng(17)
+    loop = ServeLoop(slots=1, max_pages=8, page=PAGE, n_kv=HKV, head_dim=HD,
+                     policy="static", spill_packing="quad")
+    loop.admit(0, *_stream(rng, 8 * PAGE))
+    loop.cache.repack()
+    snap = _snap(loop.cache.slot_physical_state(0))
+    pages_snap = np.asarray(loop.cache.pages_view()[0])
+    loop.evict(0)
+    assert loop.spill._store[0].packing == "quad"
+    loop.spill.packing, loop.spill.lanes = "pair", SPILL_LANES["pair"]
+    loop.wake(0)
+    _assert_state_equal(loop.cache.slot_physical_state(0), snap)
     assert np.array_equal(np.asarray(loop.cache.pages_view()[0]),
                           pages_snap)
 
