@@ -24,6 +24,86 @@ def _timeit(fn, *args, n=5):
     return (time.perf_counter() - t0) / n * 1e6
 
 
+def blockspec_sweep(*, batch=4, n_groups=8, page=8, hkv=1, d=32,
+                    n_timing=5, seed=0) -> dict:
+    """BlockSpec tuning for the batched fused decode kernel: time every
+    block_groups tiling of the slot axis per lanes mode, with parity
+    columns (numerics vs the jnp oracle, bytes bit-exact vs the analytic
+    `hbm_bytes_moved` model) so a tiling that breaks semantics can never
+    look fast.  CI runs this (`--sweep kernels`) and fails on any parity
+    row; the committed snapshot is BENCH_kernels.json.
+
+    Timings are CPU interpret-mode — structural (relative cost of the
+    tilings and the fused-vs-reference gap), not TPU wall-clock."""
+    rng = np.random.default_rng(seed)
+    d2 = 2 * d
+
+    def mk_group(lanes, compressible):
+        base = 2.0 + rng.standard_normal((1, 1, hkv, d2)) * 0.25
+        if compressible:
+            x = base * (1 + rng.standard_normal(
+                (lanes, page, hkv, d2)) * 1e-4)
+        else:
+            x = rng.standard_normal((lanes, page, hkv, d2))
+        return np.asarray(jnp.asarray(x.astype(jnp.bfloat16))
+                          .view(jnp.int16))
+
+    report: dict = {"batch": batch, "n_groups": n_groups, "page": page,
+                    "n_kv": hkv, "head_dim": d, "modes": {}}
+    for lanes in (2, 4):
+        build = (ops.build_cram_cache if lanes == 2
+                 else ops.build_cram_cache_quad)
+        caches, valids = [], []
+        for _ in range(batch):
+            pages = np.concatenate([
+                mk_group(lanes, bool(rng.random() < 0.7))
+                for _ in range(n_groups)])
+            caches.append(build(jnp.asarray(pages)))
+            tokens = int(rng.integers(1, lanes * n_groups * page + 1))
+            valids.append(np.clip(
+                tokens - np.arange(lanes * n_groups) * page,
+                0, page).astype(np.int32))
+        cache = {k: jnp.stack([c[k] for c in caches])
+                 for k in ("slots", "slots_overflow", "strips",
+                           "packed_mask")}
+        cache["markers"] = caches[0]["markers"]
+        vp = jnp.asarray(np.stack(valids))
+        q = jnp.asarray(rng.standard_normal((batch, 4, d)), jnp.bfloat16)
+        ref_fn = (ops.decode_attention_ref_batched if lanes == 2
+                  else ops.decode_attention_quad_ref_batched)
+        ref = np.asarray(ref_fn(q, cache, vp))
+        bw = ops.hbm_bytes_moved(cache, vp, lanes=lanes)
+        rows, best = [], None
+        for bg in (1, 2, 4, n_groups, None):
+            out, raw_s, cram_s = ops.decode_attention_fused(
+                q, cache, vp, lanes=lanes, block_groups=bg, interpret=True)
+            err = float(np.max(np.abs(np.asarray(out, np.float32) - ref)))
+            bytes_ok = (np.array_equal(np.asarray(raw_s),
+                                       bw["raw_per_seq"])
+                        and np.array_equal(np.asarray(cram_s),
+                                           bw["cram_per_seq"]))
+            us = _timeit(lambda qq: ops.decode_attention_fused(
+                qq, cache, vp, lanes=lanes, block_groups=bg,
+                interpret=True)[0], q, n=n_timing)
+            row = {"block_groups": bg, "us_per_call": round(us, 1),
+                   "max_err_vs_oracle": err,
+                   "numerics_parity": err < 2e-2,
+                   "bytes_bit_exact": bool(bytes_ok)}
+            rows.append(row)
+            if row["numerics_parity"] and row["bytes_bit_exact"] and (
+                    best is None or us < best["us_per_call"]):
+                best = row
+        report["modes"][f"lanes{lanes}"] = {
+            "rows": rows,
+            "best_block_groups": best["block_groups"] if best else None,
+            "saving_on_mix": round(bw["saving"], 4),
+        }
+    report["parity_ok"] = all(
+        r["numerics_parity"] and r["bytes_bit_exact"]
+        for m in report["modes"].values() for r in m["rows"])
+    return report
+
+
 def run() -> list[tuple]:
     rng = np.random.default_rng(0)
     rows = []

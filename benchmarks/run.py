@@ -13,6 +13,8 @@ Sweep mode (the fast path — ONE batched jitted dispatch per section):
                                                     #   static (no-slowdown)
     python benchmarks/run.py --sweep serve-spill    # continuous-batching churn
                                                     #   + compressed KV spill
+    python benchmarks/run.py --sweep kernels        # batched fused-decode
+                                                    #   BlockSpec tuning sweep
 
 Sweep flags:
     --events N        trace length per workload   (default $REPRO_BENCH_EVENTS
@@ -77,6 +79,12 @@ The consolidated JSON report written by --sweep has this schema:
         "guarantee":   {same_schedule_across_packings,
                         compressed_moves_fewer_bytes, spill_no_slowdown,
                         wake_state_parity}      # the flags CI enforces
+      },
+      "kernels": {                      # present for --sweep kernels/all
+        "modes": {"lanes2"/"lanes4": {"rows": [per block_groups tiling:
+                   us_per_call, max_err_vs_oracle, numerics_parity,
+                   bytes_bit_exact], "best_block_groups", "saving_on_mix"}},
+        "parity_ok": bool               # CI fails when False
       },
       "policy": {                       # present for --sweep policy/all
         "kv":         {stream: {chosen, bytes: {off/pair/quad/auto},
@@ -200,6 +208,14 @@ def _sweep_policy(args) -> dict:
     return sweep(decode_steps=args.serve_steps)
 
 
+def _sweep_kernels(args) -> dict:
+    """BlockSpec tuning sweep for the batched fused decode kernel, with
+    parity columns CI fails on (BENCH_kernels.json snapshot)."""
+    from benchmarks.kernel_bench import blockspec_sweep
+
+    return blockspec_sweep()
+
+
 def _sweep_serve_spill(args) -> dict:
     """Continuous-batching churn with compressed KV spill: same schedule
     under spill packing off/pair/quad + the no-slowdown guarantee flags."""
@@ -271,6 +287,16 @@ def run_sweep(args) -> None:
         print("serve-spill guarantee:", flags)
         if not all(flags.values()):
             print("SERVE-SPILL GUARANTEE VIOLATED", file=sys.stderr)
+    if args.sweep in ("kernels", "all"):
+        report["kernels"] = _sweep_kernels(args)
+        for mode, m in report["kernels"]["modes"].items():
+            print(f"kernels {mode}: best block_groups="
+                  f"{m['best_block_groups']} "
+                  f"saving={m['saving_on_mix']:.3f} "
+                  + " ".join(f"bg{r['block_groups']}={r['us_per_call']:.0f}us"
+                             for r in m["rows"]))
+        if not report["kernels"]["parity_ok"]:
+            print("KERNEL PARITY VIOLATED", file=sys.stderr)
     if args.sweep in ("policy", "all"):
         report["policy"] = _sweep_policy(args)
         pol = report["policy"]
@@ -320,7 +346,7 @@ def main() -> None:
                     help="legacy mode: per-figure modules to run")
     ap.add_argument("--sweep",
                     choices=("all", "memsim", "compress", "serve", "codecs",
-                             "policy", "serve-spill"),
+                             "policy", "serve-spill", "kernels"),
                     help="batched sweep mode; emits one JSON report")
     ap.add_argument("--serve-steps", type=int, default=32,
                     help="decode steps per serve-bench curve")

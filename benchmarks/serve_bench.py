@@ -185,13 +185,23 @@ def churn_spill_curve(*, spill_packing="quad", slots=3, n_seqs=10,
     measure the LINK win alone."""
     from repro.serving import ServeLoop
 
+    import jax
+
     rng = np.random.default_rng(seed)
     loop = ServeLoop(slots=slots, max_pages=max_pages, page=PAGE, n_kv=HKV,
                      head_dim=HD, policy=policy, packing=packing,
                      spill_packing=spill_packing)
     tokens, target, stream, next_sid = {}, {}, {}, 0
+    # wall-clock throughput: the first loop iteration compiles the append
+    # scatter / pack window / byte model, so the timer starts after it
+    # (device work synced at both boundaries) and counts decode tokens
+    # from then on
+    decode_tokens, t_decode = 0, None
     t0 = time.perf_counter()
     for step_i in range(steps):
+        if step_i == 1:
+            jax.block_until_ready(loop.cache.state)
+            t_decode = time.perf_counter()
         if step_i % admit_every == 0 and next_sid < n_seqs:
             t = int(rng.integers(PAGE, 3 * PAGE))
             tgt = int(rng.integers(4 * PAGE, (max_pages - 1) * PAGE))
@@ -215,12 +225,17 @@ def churn_spill_curve(*, spill_packing="quad", slots=3, n_seqs=10,
             kvs[sid] = (ks[pos:pos + 1], vs[pos:pos + 1])
         loop.step_all(kvs)                   # wakes spilled ids first;
         # ids > slots runs in waves (one fused append per wave)
+        if t_decode is not None:
+            decode_tokens += len(ids)
         for sid in ids:
             tokens[sid] += 1
             if tokens[sid] >= target[sid]:
                 loop.retire(sid)
                 del stream[sid]
+    jax.block_until_ready(loop.cache.state)
     wall = time.perf_counter() - t0
+    decode_wall = (time.perf_counter() - t_decode
+                   if t_decode is not None else wall)
     # wake-state parity: every surviving active slot must equal its own
     # rebuild oracle (spill round-trips included — the serve-tier analog
     # of incremental_equals_rebuild)
@@ -233,6 +248,8 @@ def churn_spill_curve(*, spill_packing="quad", slots=3, n_seqs=10,
             for sid in loop.active_seqs())
     )
     sp = loop.spill.summary()
+    loop.sync_ledger()          # fold the device traffic window before
+    # reading the ledger rows below — the N-step run made zero host records
     return {
         "spill_packing": spill_packing, "slots": slots, "n_seqs": n_seqs,
         "steps": steps, "compressible": compressible, "policy": policy,
@@ -248,6 +265,8 @@ def churn_spill_curve(*, spill_packing="quad", slots=3, n_seqs=10,
         "decode_saving": round(loop.ledger.saving("read", consumer="kv"), 4),
         "wake_state_parity": parity,
         "wall_s": round(wall, 4),
+        "decode_tokens": decode_tokens,
+        "tokens_per_s": round(decode_tokens / max(decode_wall, 1e-9), 2),
     }
 
 
@@ -296,6 +315,12 @@ def spill_sweep(spill_packings=("off", "pair", "quad"), steps=48,
                               "stored": c["spill"]["stored_bytes"],
                               "saving": c["spill"]["saving"]}
                         for spk, c in curves.items()},
+        # post-warmup wall-clock decode throughput per churn trajectory
+        # (interpret-mode structural numbers, comparable across packings
+        # within one report, not across machines)
+        "tokens_per_s": {**{spk: c["tokens_per_s"]
+                            for spk, c in curves.items()},
+                         "incompressible_quad": noise["tokens_per_s"]},
         "guarantee": flags,
     }
 

@@ -93,6 +93,17 @@ def kv_decode_event(ledger: Ledger, bw: dict, *,
                   tensor_class=tensor_class, consumer="kv")
 
 
+def kv_window_fold(ledger: Ledger, totals, *,
+                   tensor_class: str = "kv") -> None:
+    """Fold one decode window's DEVICE accumulator (bandwidth.device_totals
+    carried in the KV cache pytree) into the host ledger under consumer
+    "kv" — the batched form of `kv_decode_event`/`kv_repack_event`: the
+    kernel-measured read bytes and the repack write bytes of every step in
+    the window land as the same rows the per-step host path would have
+    booked, in O(1) `Ledger.record` calls."""
+    ledger.absorb(totals, tensor_class=tensor_class, consumer="kv")
+
+
 def kv_repack_event(ledger: Ledger, *, groups: int, packed: int, lanes: int,
                     slot_bytes: int, strip_bytes: int,
                     tensor_class: str = "kv") -> None:
@@ -185,6 +196,7 @@ def grad_wire_event(ledger: Ledger, tree, *, enabled: bool,
 __all__ = [
     "engine_traffic", "engine_breakdown",
     "kv_decode_event", "kv_repack_event", "kv_spill_event",
+    "kv_window_fold",
     "classify_tensor", "checkpoint_leaf_event", "checkpoint_restore_event",
     "tree_wire_bytes", "int8_wire_bytes", "grad_wire_event",
 ]

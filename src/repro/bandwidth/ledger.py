@@ -26,8 +26,11 @@ Two accumulation paths:
     (N_EVENTS, 3) int32 array that lives inside a jitted step (pytree
     leaf, scan carry, shard_map output) and is folded into the host ledger
     afterwards with `Ledger.absorb(...)`.  int32 bounds one absorb window
-    at 2 GiB per event class; long-running consumers absorb per step, so
-    the host-side totals (python ints) never overflow.
+    at 2 GiB per event class; long-running consumers fold their window at
+    report boundaries well inside that bound (e.g. the KV cache's
+    `sync_ledger`: N decode steps accumulate on device and land in the
+    host ledger as O(1) record calls), so the host-side totals (python
+    ints) never overflow.
 """
 
 from __future__ import annotations

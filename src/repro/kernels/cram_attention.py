@@ -1,12 +1,30 @@
-"""Pallas TPU kernel: fused CRAM decode attention.
+"""Pallas TPU kernels: fused CRAM decode attention.
 
 Flash-decode over a CRAM-packed paged KV cache: the grid walks physical
-slots; each step DMAs one slot + its base strip into VMEM, checks the
-strip-tail marker (implicit metadata — no separate status fetch), inlines
-the delta unpack for packed slots (one DMA yields TWO pages for the
-int8-delta pair codec or FOUR for the int4-delta quad codec: the paper's
-bandwidth win), and accumulates online-softmax partials in VMEM scratch.
-The final step normalizes into the output.
+slots; each program DMAs a *block* of slots + their base strips into
+VMEM, checks the strip-tail markers (implicit metadata — no separate
+status fetch), inlines the delta unpack for packed slots (one DMA yields
+TWO pages for the int8-delta pair codec or FOUR for the int4-delta quad
+codec: the paper's bandwidth win), and accumulates online-softmax
+partials in VMEM scratch.  The final step normalizes into the output.
+
+Two kernels:
+
+  * `cram_decode_attention` — the original single-sequence kernel,
+    `grid=(n_slots,)`, one slot per program.  Kept as the bit-true
+    reference for the batched kernel (tests pin new-vs-old parity) and
+    for callers that walk one sequence.
+  * `cram_decode_attention_batched` — the serve-path kernel: a 2-D grid
+    `(batch, slot_block)` where each program DMAs `block_groups *
+    lanes` slots of one sequence under tunable BlockSpecs (swept by
+    `benchmarks/kernel_bench.py`, snapshot in BENCH_kernels.json).  It
+    emits a SECOND output: per-sequence (raw, cram) bytes-moved for
+    exactly the layout the kernel walked — packed slot+strip vs raw
+    slots, including the LLP-mispredict re-probe term — so the serve
+    loop's bandwidth accounting is a kernel by-product instead of a
+    separate pass over the same state (`kernels/ops.hbm_bytes_moved`
+    stays as the standalone/oracle reduction; the kernel output matches
+    it bit-exactly, pinned by tests/test_attention_numerics.py).
 
 The raw/packed selection is a jnp.where over both interpretations — on
 real TPU hardware this becomes a pl.when branch; in interpret mode the
@@ -26,6 +44,11 @@ from jax.experimental.pallas import tpu as pltpu
 from .ref import MARKER_LANES
 
 NEG_INF = -1e30
+
+# Default slot-block width (page groups per program) for the batched
+# kernel.  Swept by benchmarks/kernel_bench.blockspec_sweep; the committed
+# BENCH_kernels.json records the measured curve this default came from.
+DEFAULT_BLOCK_GROUPS = 4
 
 
 def _kernel(q_ref, slot_ref, strip_ref, marker_ref, valid_ref,
@@ -130,3 +153,186 @@ def cram_decode_attention(q, slots, strips, markers, valid, *,
         ],
         interpret=interpret,
     )(q, slots, strips, markers, valid)
+
+
+# --------------------------------------------------------- batched kernel
+
+
+def _batched_kernel(q_ref, slot_ref, strip_ref, marker_ref, valid_ref,
+                    pred_ref, out_ref, bytes_ref, m_s, l_s, acc_s, byt_s,
+                    *, lanes, slot_bytes, strip_bytes):
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s[...], NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s[...])
+        acc_s[...] = jnp.zeros_like(acc_s[...])
+        byt_s[...] = jnp.zeros_like(byt_s[...])
+
+    q = q_ref[0].astype(jnp.float32)                # (Hq, D)
+    slots = slot_ref[0]                             # (K, page, Hkv, D2) i16
+    strips = strip_ref[0]                           # (K, Hkv, D2+2) i16
+    kk, page, hkv, d2 = slots.shape
+    d = d2 // 2
+    hq = q.shape[0]
+    g = hq // hkv
+
+    # --- implicit metadata: strip-tail marker lanes, one check per slot
+    tail = strips[:, :, -MARKER_LANES:].astype(jnp.int32)   # (K, Hkv, 2)
+    tail_u = (tail[..., 0] & 0xFFFF) | ((tail[..., 1] & 0xFFFF) << 16)
+    expected = marker_ref[...]                      # (K,)
+    is_packed = jnp.all(tail_u == expected[:, None], axis=-1)   # (K,)
+
+    # --- decode both interpretations for the whole block, select by marker
+    base = strips[:, :, :d2].astype(jnp.int32)      # (K, Hkv, D2)
+    v_u = jax.lax.bitcast_convert_type(slots, jnp.uint16).astype(jnp.int32)
+    if lanes == 2:                                  # int8-delta pair codec
+        lo = ((v_u & 0xFF) ^ 0x80) - 0x80
+        hi = (((v_u >> 8) & 0xFF) ^ 0x80) - 0x80
+        packed_pages = [base[:, None] + lo, base[:, None] + hi]
+    else:                                           # int4-delta quad codec
+        se4 = lambda x: (x ^ 0x8) - 0x8
+        packed_pages = [base[:, None] + se4((v_u >> s) & 0xF)
+                        for s in (0, 4, 8, 12)]
+    zeros = jnp.zeros_like(slots)
+    sel = is_packed[:, None, None, None]
+    pages = [jnp.where(sel, p.astype(jnp.int16),
+                       slots if i == 0 else zeros)
+             for i, p in enumerate(packed_pages)]
+
+    kv = jnp.stack(pages, axis=1)                   # (K, lanes, page, ...)
+    kvf = jax.lax.bitcast_convert_type(kv, jnp.bfloat16).astype(jnp.float32)
+    k = kvf[..., :d].reshape(kk * lanes * page, hkv, d)
+    v = kvf[..., d:].reshape(kk * lanes * page, hkv, d)
+
+    valid = valid_ref[0]                            # (K, lanes) int32
+    tok = jax.lax.broadcasted_iota(jnp.int32, (kk, lanes, page), 2)
+    mask = (tok < valid[:, :, None]).reshape(kk * lanes * page)
+
+    kg = jnp.repeat(k, g, axis=1)                   # (T, Hq, D)
+    vg = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("hd,thd->ht", q, kg,
+                   preferred_element_type=jnp.float32)
+    s = s * (1.0 / (d ** 0.5))
+    s = jnp.where(mask[None, :], s, NEG_INF)
+
+    m_prev = m_s[:, 0]
+    l_prev = l_s[:, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+    acc_s[...] = acc_s[...] * alpha[:, None] + jnp.einsum(
+        "ht,thd->hd", p, vg, preferred_element_type=jnp.float32)
+    m_s[...] = m_new[:, None]
+    l_s[...] = l_new[:, None]
+
+    # --- bytes-moved for exactly the layout this block walked.  Flat-slot
+    # form of the `ops.hbm_bytes_moved` group model: the lead slot of a
+    # packed group carries all `lanes` valid counts (overflow slots dead),
+    # a raw group spreads one live page per slot — so per-slot sums equal
+    # the per-group sums bit-for-bit.
+    live = valid > 0                                # (K, lanes)
+    n_live = live.sum(-1).astype(jnp.int32)         # (K,) live pages/slot
+    raw_b = jnp.sum(n_live) * slot_bytes
+    per_slot = jnp.where(is_packed & (n_live > 0),
+                         slot_bytes + strip_bytes,
+                         n_live * (slot_bytes + strip_bytes))
+    # LLP-miss re-probe, charged once per mispredicted LIVE group: group
+    # packedness is the lead slot's marker verdict, group liveness is the
+    # union over the group's flat slots.
+    gk = kk // lanes
+    grp_packed = is_packed.reshape(gk, lanes)[:, 0]
+    grp_live = live.reshape(gk, lanes * lanes).any(-1)
+    pred = pred_ref[0] != 0                         # (gk,) predicted packed
+    reprobe = jnp.where((pred != grp_packed) & grp_live, slot_bytes, 0)
+    cram_b = jnp.sum(per_slot) + jnp.sum(reprobe)
+    byt_s[...] += jnp.stack([raw_b, cram_b]).astype(jnp.int32)[None]
+
+    @pl.when(j == nj - 1)
+    def _finalize():
+        out_ref[...] = (acc_s[...]
+                        / jnp.maximum(l_s[...][:, 0:1], 1e-30))[None]
+        bytes_ref[...] = byt_s[...]
+
+
+def resolve_block_groups(n_groups: int, block_groups: int | None) -> int:
+    """Largest divisor of `n_groups` not exceeding the requested width."""
+    bg = DEFAULT_BLOCK_GROUPS if block_groups is None else block_groups
+    bg = max(1, min(bg, n_groups))
+    while n_groups % bg:
+        bg -= 1
+    return bg
+
+
+@functools.partial(jax.jit, static_argnames=("lanes", "block_groups",
+                                             "shared_cache", "interpret"))
+def cram_decode_attention_batched(q, slots, strips, markers, valid,
+                                  predictor, *, lanes: int = 2,
+                                  block_groups: int | None = None,
+                                  shared_cache: bool = False,
+                                  interpret: bool = True):
+    """Batched fused decode: one 2-D grid `(batch, slot_block)` program.
+
+    q (B, Hq, D); slots (B, n, page, Hkv, D2) int16 — or (n, page, Hkv,
+    D2) with `shared_cache=True` (every query row walks the same slot
+    list); strips (B?, n, Hkv, D2+2); markers (n,) int32 shared across
+    the batch; valid (B?, n, lanes) int32 valid tokens per logical page;
+    predictor (B?, n // lanes) predicted group packedness (the LLP
+    analog; pass the actual packed mask for a perfect predictor).
+
+    Each program DMAs `block_groups * lanes` consecutive slots + strips
+    of one sequence (`block_groups` is the tunable BlockSpec axis, swept
+    by benchmarks/kernel_bench.py).  Returns (out (B, Hq, D) float32,
+    bytes (B, 2) int32) where bytes[b] = (raw, cram) bytes one decode
+    step DMAs for sequence b under the layout the kernel walked —
+    bit-identical to `ops.hbm_bytes_moved` per-sequence totals.
+    """
+    assert lanes in (2, 4)
+    b, hq, d = q.shape
+    if shared_cache:
+        slots, strips = slots[None], strips[None]
+        valid, predictor = valid[None], predictor[None]
+    _, n, page, hkv, d2 = slots.shape
+    n_groups = n // lanes
+    bg = resolve_block_groups(n_groups, block_groups)
+    kk = bg * lanes
+    nj = n // kk
+    slot_bytes = page * hkv * d2 * 2
+    strip_bytes = hkv * (d2 + MARKER_LANES) * 2
+    pred = jnp.asarray(predictor).astype(jnp.int32)
+    # shared caches keep one copy in HBM: the index map pins the batch
+    # coordinate to 0 instead of materializing B replicas
+    bix = (lambda bi: 0) if shared_cache else (lambda bi: bi)
+    return pl.pallas_call(
+        functools.partial(_batched_kernel, lanes=lanes,
+                          slot_bytes=slot_bytes, strip_bytes=strip_bytes),
+        grid=(b, nj),
+        in_specs=[
+            pl.BlockSpec((1, hq, d), lambda bi, j: (bi, 0, 0)),
+            pl.BlockSpec((1, kk, page, hkv, d2),
+                         lambda bi, j: (bix(bi), j, 0, 0, 0)),
+            pl.BlockSpec((1, kk, hkv, d2 + MARKER_LANES),
+                         lambda bi, j: (bix(bi), j, 0, 0)),
+            pl.BlockSpec((kk,), lambda bi, j: (j,)),
+            pl.BlockSpec((1, kk, lanes), lambda bi, j: (bix(bi), j, 0)),
+            pl.BlockSpec((1, bg), lambda bi, j: (bix(bi), j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, hq, d), lambda bi, j: (bi, 0, 0)),
+            pl.BlockSpec((1, 2), lambda bi, j: (bi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hq, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, 2), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((hq, 1), jnp.float32),
+            pltpu.VMEM((hq, 1), jnp.float32),
+            pltpu.VMEM((hq, d), jnp.float32),
+            pltpu.VMEM((1, 2), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q, slots, strips, markers, valid, pred)

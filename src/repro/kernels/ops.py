@@ -7,12 +7,16 @@ codec, quad-domain markers).  `pack_window` / `pack_quad_window` /
 `raw_window` / `raw_quad_window` are the incremental variants: they
 (re)pack only a gathered window of dirty groups, batched over sequences,
 so a decode step costs O(new groups) instead of a full rebuild.
-`decode_attention` runs the fused marker-check/unpack/flash-decode
-kernel, vmapped over batch; `decode_attention_batched` /
-`decode_attention_quad_batched` vmap it over per-sequence caches.
-`hbm_bytes_moved` is a jitted, lanes-aware bandwidth reduction that also
-charges the LLP-mispredict re-probe.  All kernels default to interpret
-mode off-TPU.
+`decode_attention_fused` runs the batched 2-D grid kernel
+(`cram_decode_attention_batched`) over per-sequence caches and returns
+the attention output TOGETHER with the per-sequence (raw, cram)
+bytes-moved the kernel measured for exactly the layout it walked —
+`decode_attention` / `decode_attention_batched` /
+`decode_attention_quad_batched` are thin aliases that drop the bytes.
+`hbm_bytes_moved` is the standalone jitted, lanes-aware bandwidth
+reduction (same model, incl. the LLP-mispredict re-probe): the kernel
+byte output matches it bit-exactly (pinned by tests).  All kernels
+default to interpret mode off-TPU.
 """
 
 from __future__ import annotations
@@ -25,7 +29,8 @@ import numpy as np
 
 from . import ref as _ref
 from .bdi_pack import pack_pair, pack_quad
-from .cram_attention import cram_decode_attention
+from .cram_attention import (cram_decode_attention,
+                             cram_decode_attention_batched)
 from .ref import MARKER_LANES, marker_to_lanes, slot_markers
 
 
@@ -248,13 +253,11 @@ def physical_view(cache, valid_per_page):
 
 
 def decode_attention(q, cache, valid_per_page, *, interpret=None):
-    """q: (B, Hq, D) bf16; returns (B, Hq, D) float32."""
-    if interpret is None:
-        interpret = default_interpret()
-    slots, strips, markers, valid = physical_view(cache, valid_per_page)
-    fn = lambda qi: cram_decode_attention(
-        qi, slots, strips, markers, valid, interpret=interpret)
-    return jax.vmap(fn)(q)
+    """q: (B, Hq, D) bf16 over ONE shared cache; returns (B, Hq, D)
+    float32.  Thin alias over `decode_attention_fused` (bytes dropped)."""
+    out, _, _ = decode_attention_fused(q, cache, valid_per_page,
+                                       lanes=2, interpret=interpret)
+    return out
 
 
 def decode_attention_ref(q, cache, valid_per_page):
@@ -270,20 +273,11 @@ def decode_attention_ref(q, cache, valid_per_page):
 def decode_attention_batched(q, cache, valid_per_page, *, interpret=None):
     """Per-sequence decode: q (B, Hq, D), cache leaves carry a leading
     batch axis except `markers` (per-pair values, shared across sequences);
-    valid_per_page (B, 2n).  Returns (B, Hq, D) float32."""
-    if interpret is None:
-        interpret = default_interpret()
-    markers = cache["markers"]
-
-    def one(qi, slots, over, strips, ok, vp):
-        c = {"slots": slots, "slots_overflow": over, "strips": strips,
-             "markers": markers, "packed_mask": ok}
-        s, st, m, v = physical_view(c, vp)
-        return cram_decode_attention(qi, s, st, m, v, interpret=interpret)
-
-    return jax.vmap(one)(q, cache["slots"], cache["slots_overflow"],
-                         cache["strips"], cache["packed_mask"],
-                         jnp.asarray(valid_per_page))
+    valid_per_page (B, 2n).  Returns (B, Hq, D) float32.  Thin alias over
+    `decode_attention_fused` (bytes dropped)."""
+    out, _, _ = decode_attention_fused(q, cache, valid_per_page,
+                                       lanes=2, interpret=interpret)
+    return out
 
 
 def decode_attention_ref_batched(q, cache, valid_per_page):
@@ -338,21 +332,11 @@ def physical_view_quad(cache, valid_per_page):
 def decode_attention_quad_batched(q, cache, valid_per_page, *,
                                   interpret=None):
     """Per-sequence decode over a quad cache: q (B, Hq, D); cache leaves
-    carry a leading batch axis except `markers`; valid_per_page (B, 4n)."""
-    if interpret is None:
-        interpret = default_interpret()
-    markers = cache["markers"]
-
-    def one(qi, slots, over, strips, ok, vp):
-        c = {"slots": slots, "slots_overflow": over, "strips": strips,
-             "markers": markers, "packed_mask": ok}
-        s, st, m, v = physical_view_quad(c, vp)
-        return cram_decode_attention(qi, s, st, m, v, lanes=4,
-                                     interpret=interpret)
-
-    return jax.vmap(one)(q, cache["slots"], cache["slots_overflow"],
-                         cache["strips"], cache["packed_mask"],
-                         jnp.asarray(valid_per_page))
+    carry a leading batch axis except `markers`; valid_per_page (B, 4n).
+    Thin alias over `decode_attention_fused` (bytes dropped)."""
+    out, _, _ = decode_attention_fused(q, cache, valid_per_page,
+                                       lanes=4, interpret=interpret)
+    return out
 
 
 def decode_attention_quad_ref_batched(q, cache, valid_per_page):
@@ -372,6 +356,53 @@ def decode_attention_quad_ref_batched(q, cache, valid_per_page):
                          jnp.asarray(valid_per_page))
 
 
+@functools.partial(jax.jit, static_argnames=("lanes", "block_groups",
+                                             "interpret"))
+def decode_attention_fused(q, cache, valid_per_page, predictor=None, *,
+                           lanes: int = 2, block_groups: int | None = None,
+                           interpret: bool | None = None):
+    """The serve decode step as ONE device program: batched 2-D grid
+    attention over the physical slot view + per-sequence bytes-moved.
+
+    q (B, Hq, D); cache leaves carry a leading batch axis (per-sequence
+    caches) or none (one shared cache walked by every query row) except
+    `markers`, which is always shared; valid_per_page (B?, lanes * n)
+    valid tokens per logical page; `predictor` is the (B?, n) predicted
+    group packedness (the LLP analog) — None means a perfect predictor
+    (no re-probe charge).  Returns (out (B, Hq, D) float32, raw_per_seq
+    (B,) int32, cram_per_seq (B,) int32) where the byte columns are
+    bit-identical to `hbm_bytes_moved`'s per-sequence totals for the
+    same masks — measured by the kernel for the layout it walked, not by
+    a second pass over the state.
+    """
+    if interpret is None:               # static arg: resolved at trace time
+        interpret = default_interpret()
+    pv = physical_view if lanes == 2 else physical_view_quad
+    markers = cache["markers"]
+    vp = jnp.asarray(valid_per_page)
+    pred = cache["packed_mask"] if predictor is None else predictor
+    if cache["slots"].ndim == 5:        # per-sequence caches
+        def one(slots, over, strips, ok, vpi):
+            c = {"slots": slots, "slots_overflow": over, "strips": strips,
+                 "markers": markers, "packed_mask": ok}
+            s, st, _, v = pv(c, vpi)
+            return s, st, v
+
+        s, st, v = jax.vmap(one)(cache["slots"], cache["slots_overflow"],
+                                 cache["strips"], cache["packed_mask"], vp)
+        mk = (jnp.stack([markers, markers], 1).reshape(-1) if lanes == 2
+              else jnp.repeat(markers, lanes))
+        out, bts = cram_decode_attention_batched(
+            q, s, st, mk, v, pred, lanes=lanes, block_groups=block_groups,
+            interpret=interpret)
+    else:                               # one shared cache
+        s, st, mk, v = pv(cache, vp)
+        out, bts = cram_decode_attention_batched(
+            q, s, st, mk, v, pred, lanes=lanes, block_groups=block_groups,
+            shared_cache=True, interpret=interpret)
+    return out, bts[:, 0], bts[:, 1]
+
+
 @functools.partial(jax.jit, static_argnames=("slot_bytes", "strip_bytes"))
 def _bytes_moved(packed_mask, live, predicted, *, slot_bytes, strip_bytes):
     """Jitted reduction over (..., n) pair masks -> (raw, cram) byte totals
@@ -386,6 +417,23 @@ def _bytes_moved(packed_mask, live, predicted, *, slot_bytes, strip_bytes):
     reprobe = jnp.where(predicted != packed_mask, slot_bytes, 0)
     cram = jnp.where(any_live, per_pair + reprobe, 0).sum(-1)
     return raw, cram
+
+
+def hbm_bytes_moved_device(cache, valid_per_page, predictor=None,
+                           lanes: int = 2):
+    """`hbm_bytes_moved` without the host sync: returns the per-sequence
+    (raw, cram) int32 device arrays (scalars when unbatched), so jitted
+    serve paths can fold them into a device accumulator instead of
+    round-tripping to python ints every step."""
+    slots = cache["slots"]
+    page, hkv, d2 = slots.shape[-3:]
+    slot_bytes = page * hkv * d2 * 2
+    strip_bytes = hkv * (d2 + MARKER_LANES) * 2
+    ok = jnp.asarray(cache["packed_mask"])
+    v = jnp.asarray(valid_per_page).reshape(ok.shape + (lanes,))
+    pred = ok if predictor is None else jnp.asarray(predictor)
+    return _bytes_moved(ok, v > 0, pred, slot_bytes=slot_bytes,
+                        strip_bytes=strip_bytes)
 
 
 def hbm_bytes_moved(cache, valid_per_page, predictor=None,
@@ -405,15 +453,8 @@ def hbm_bytes_moved(cache, valid_per_page, predictor=None,
     pair layout, 4 for quad).  Leading batch axes are reduced per sequence
     and summed into the scalar totals.
     """
-    slots = cache["slots"]
-    page, hkv, d2 = slots.shape[-3:]
-    slot_bytes = page * hkv * d2 * 2
-    strip_bytes = hkv * (d2 + MARKER_LANES) * 2
-    ok = jnp.asarray(cache["packed_mask"])
-    v = jnp.asarray(valid_per_page).reshape(ok.shape + (lanes,))
-    pred = ok if predictor is None else jnp.asarray(predictor)
-    raw, cram = _bytes_moved(ok, v > 0, pred, slot_bytes=slot_bytes,
-                             strip_bytes=strip_bytes)
+    raw, cram = hbm_bytes_moved_device(cache, valid_per_page, predictor,
+                                       lanes)
     raw_i, cram_i = int(raw.sum()), int(cram.sum())
     return {"raw_bytes": raw_i, "cram_bytes": cram_i,
             "raw_per_seq": np.asarray(raw), "cram_per_seq": np.asarray(cram),

@@ -26,12 +26,24 @@ sequence length).  The incremental state is bit-identical to a from-scratch
 last repack (`reference_rebuild` is the oracle; tests/test_kv_cache.py pins
 it).
 
-Bandwidth accounting (per decode step, kernels/ops.hbm_bytes_moved):
+Bandwidth accounting (per decode step):
   raw        : one slot DMA per live page
   CRAM       : one slot DMA per packed GROUP (2 or 4 pages), plus the
                strip; unpacked groups cost one slot + strip per live page;
                mispredicted groups cost a second slot access (the paper's
                LLP-miss re-probe)
+
+The accounting is DEVICE-RESIDENT: the decode kernel emits the (raw,
+cram) bytes for the layout it walked as a second output
+(kernels/cram_attention), and every per-step tally — byte totals,
+repack write traffic, predictor hit/miss counts — lands in int32
+accumulators carried in the cache pytree (`traffic` is a
+bandwidth.device_totals array; `pred_hits`/`pred_misses`/`packed_n`/
+`raw_n` are counters).  Nothing crosses to the host per step; a window
+fold (`sync_ledger`, called by `saving()` and the serve-loop report
+boundaries) absorbs the accumulator into the host `Ledger` with O(1)
+`Ledger.record` calls, and the `stats` property reads the counters back
+on demand.  So an N-step decode run costs O(1) host syncs, not O(N).
 """
 
 from __future__ import annotations
@@ -44,7 +56,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..bandwidth import Ledger
-from ..bandwidth.adapters import kv_decode_event, kv_repack_event
+from ..bandwidth.adapters import kv_window_fold
+from ..bandwidth.ledger import EV_READ, EV_REPACK, device_record, \
+    device_totals
 from ..compression.framing import DOMAIN_PAIR, DOMAIN_QUAD
 from ..compression.gate import COUNTER_INIT, COUNTER_MAX, ENABLE_THRESHOLD
 from ..compression.predictor import observe_layout
@@ -56,7 +70,14 @@ from ..kernels.ref import MARKER_LANES, marker_to_lanes, slot_markers
 class KVStats:
     """Pack/predictor event counters.  Byte accounting is NOT here: every
     byte a decode step or repack moves lands in the cache's `ledger`
-    (repro.bandwidth), under consumer "kv"."""
+    (repro.bandwidth), under consumer "kv".
+
+    Snapshot semantics: `CRAMKVCache.stats` builds one of these on read.
+    The layout/predictor tallies (packed/raw groups, predictor hits and
+    misses) accumulate in device counters inside the cache pytree and are
+    synced back only here; the dispatch-shape counters (pack_attempts,
+    pack_calls, …) are plain host ints — they count python-level repack
+    dispatches, not device work."""
 
     packed_pairs: int = 0
     raw_pairs: int = 0
@@ -72,6 +93,42 @@ class KVStats:
 def _scatter_tokens(pages, kv, start):
     """pages (B, Tmax, Hkv, D2) <- kv (B, T, Hkv, D2) at token `start`."""
     return jax.lax.dynamic_update_slice(pages, kv, (0, start, 0, 0))
+
+
+@functools.partial(jax.jit, static_argnames=("lanes", "slot_bytes",
+                                             "strip_bytes"))
+def _book_repack_device(traffic, packed_n, raw_n, lay, *, lanes,
+                        slot_bytes, strip_bytes):
+    """Device-side repack booking: same byte model as the legacy
+    `adapters.kv_repack_event` host path (raw = every page written raw,
+    comp = slot+strip per packed group, lanes raw slots otherwise), but
+    accumulated into the pytree counters — no host sync per repack."""
+    groups = lay.size
+    lay_n = lay.sum().astype(jnp.int32)
+    raw = groups * lanes * slot_bytes
+    comp = (lay_n * (slot_bytes + strip_bytes)
+            + (groups - lay_n) * (lanes * slot_bytes))
+    traffic = device_record(traffic, EV_REPACK, raw, comp, count=groups)
+    return traffic, packed_n + lay_n, raw_n + (groups - lay_n)
+
+
+@functools.partial(jax.jit, static_argnames=("lanes", "n"))
+def _absorb_step_device(traffic, hits, misses, predictor, packed_mask,
+                        valid, raw_seq, cram_seq, *, lanes, n):
+    """Device-side decode-step booking: fold the kernel's per-sequence
+    (raw, cram) bytes into the traffic accumulator as ONE read event,
+    tally LLP hits/misses on live groups, and emit the next predictor
+    state (last-layout observation, copied so it survives the donated
+    repack scatter)."""
+    pm = packed_mask[:, :n]
+    pred = predictor[:, :n]
+    live = valid.reshape(pm.shape[0], n, lanes).sum(-1) > 0
+    mis = pred != pm
+    hits = hits + ((~mis) & live).sum(1).astype(jnp.int32)
+    misses = misses + (mis & live).sum(1).astype(jnp.int32)
+    traffic = device_record(traffic, EV_READ, raw_seq.sum(), cram_seq.sum(),
+                            count=1)
+    return traffic, hits, misses, observe_layout(packed_mask)
 
 
 @functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3))
@@ -129,6 +186,14 @@ class CRAMKVCache:
             "predictor": jnp.zeros((b, n), bool),
             "counter": jnp.full((b,), counter_init, jnp.int32),
             "markers": jnp.asarray(markers.view(np.int32)),
+            # device-resident accounting: decode/repack traffic window
+            # (folded into the host ledger by `sync_ledger`) and the
+            # layout/predictor tallies behind the `stats` property
+            "traffic": device_totals(jnp),
+            "pred_hits": jnp.zeros((b,), jnp.int32),
+            "pred_misses": jnp.zeros((b,), jnp.int32),
+            "packed_n": jnp.zeros((), jnp.int32),
+            "raw_n": jnp.zeros((), jnp.int32),
         }
         # dirty-group mask: appends are uniform across the batch, so one
         # host-side mask covers every sequence; per-sequence gate flips
@@ -140,7 +205,7 @@ class CRAMKVCache:
         # could slam the counter straight back across the threshold).
         self._uncounted = np.zeros(self.n_groups, bool)
         self._last_enabled = np.full(batch, policy != "off", bool)
-        self.stats = KVStats()
+        self._host_stats = KVStats()
         # traffic lands here (consumer "kv"); pass a shared ledger to fold
         # this cache's flows into a launcher-wide accounting
         self.ledger = ledger if ledger is not None else Ledger("kv")
@@ -171,6 +236,31 @@ class CRAMKVCache:
     @property
     def n_pairs(self) -> int:
         return self.n_groups
+
+    @property
+    def stats(self) -> KVStats:
+        """Snapshot of the event counters: host dispatch counters merged
+        with the device tallies (the only place those sync back)."""
+        from dataclasses import replace
+
+        st = self.state
+        return replace(
+            self._host_stats,
+            packed_pairs=int(st["packed_n"]),
+            raw_pairs=int(st["raw_n"]),
+            predictor_hits=int(jnp.sum(st["pred_hits"])),
+            predictor_misses=int(jnp.sum(st["pred_misses"])))
+
+    def sync_ledger(self) -> None:
+        """Window fold: absorb the device traffic accumulator into the
+        host ledger (O(1) `Ledger.record` calls however many decode steps
+        the window covered), then reset it.  int32 bounds one window at
+        2 GiB per event class — report boundaries (`saving`, the serve
+        loop's `observe_tiers`/`summary`) fold well before that."""
+        tot = np.asarray(self.state["traffic"])
+        if tot.any():
+            kv_window_fold(self.ledger, tot)
+            self.state["traffic"] = device_totals(jnp)
 
     # ----------------------------------------------------------- appends
     def append(self, k, v):
@@ -243,8 +333,29 @@ class CRAMKVCache:
                                      jnp.asarray(enabled),
                                      interpret=self.interpret)
 
+    def _book_repack(self, w: int, enabled, lay) -> None:
+        """Host dispatch counters + device byte/layout booking for one
+        repack window (shared with SlotKVCache.repack)."""
+        hs = self._host_stats
+        if self.policy == "off":
+            hs.pack_skipped_dynamic += self.batch * w
+        else:
+            hs.pack_attempts += self.batch * w
+            hs.pack_skipped_dynamic += int((~enabled).sum()) * w
+        hs.pack_calls += 1
+        hs.pack_pairs_processed += self.batch * w
+        st = self.state
+        st["traffic"], st["packed_n"], st["raw_n"] = _book_repack_device(
+            st["traffic"], st["packed_n"], st["raw_n"], lay,
+            lanes=self.group_lanes, slot_bytes=self.slot_bytes,
+            strip_bytes=self.strip_bytes)
+
     def repack(self):
-        """Incrementally re-pack the dirty groups (no-op when clean)."""
+        """Incrementally re-pack the dirty groups.
+
+        Idempotency cheap-exit: a clean cache returns before touching any
+        device state, so back-to-back repacks (attend -> account_step on
+        the same decode step) dispatch the pack pipeline exactly once."""
         idx = np.nonzero(self._dirty)[0]
         if idx.size == 0:
             return
@@ -257,24 +368,12 @@ class CRAMKVCache:
         win = groups[:, idx_j]                # (B, W, lanes, page, ...)
         slots_w, over_w, strips_w, lay, fit = self._pack_window(
             win, idx_j, enabled)
-        if self.policy == "off":
-            self.stats.pack_skipped_dynamic += self.batch * w
-        else:
-            self.stats.pack_attempts += self.batch * w
-            self.stats.pack_skipped_dynamic += int((~enabled).sum()) * w
         st = self.state
         (st["slots"], st["slots_overflow"], st["strips"],
          st["packed_mask"]) = _scatter_window(
             st["slots"], st["slots_overflow"], st["strips"],
             st["packed_mask"], idx_j, slots_w, over_w, strips_w, lay)
-        self.stats.pack_calls += 1
-        self.stats.pack_pairs_processed += self.batch * w
-        lay_n = int(np.asarray(lay).sum())
-        self.stats.packed_pairs += lay_n
-        self.stats.raw_pairs += self.batch * w - lay_n
-        kv_repack_event(self.ledger, groups=self.batch * w, packed=lay_n,
-                        lanes=self.group_lanes, slot_bytes=self.slot_bytes,
-                        strip_bytes=self.strip_bytes)
+        self._book_repack(w, enabled, lay)
         # §VI cost/benefit: fitness of *complete, not-yet-counted* repacked
         # groups drives the per-sequence counter — measured even while
         # disabled (the zeroed layout mask no longer feeds the update), so
@@ -357,48 +456,59 @@ class CRAMKVCache:
 
         Charges the CRAM byte model (incl. the mispredict re-probe against
         the group-indexed predictor), tallies predictor hits/misses on live
-        groups, then lets the predictor observe the actual layout.
+        groups, then lets the predictor observe the actual layout.  All of
+        it lands in the device accumulators — no host ledger traffic until
+        the next `sync_ledger` window fold.
         """
         self.repack()
         return self._account()
+
+    def _absorb_step(self, raw_seq, cram_seq, valid, n: int) -> dict:
+        """Fold one decode step's per-sequence byte columns + predictor
+        observation into the device accumulators (one fused dispatch)."""
+        st = self.state
+        (st["traffic"], st["pred_hits"], st["pred_misses"],
+         st["predictor"]) = _absorb_step_device(
+            st["traffic"], st["pred_hits"], st["pred_misses"],
+            st["predictor"], st["packed_mask"], valid, raw_seq, cram_seq,
+            lanes=self.group_lanes, n=n)
+        raw_t, cram_t = raw_seq.sum(), cram_seq.sum()
+        return {"raw_bytes": raw_t, "cram_bytes": cram_t,
+                "raw_per_seq": raw_seq, "cram_per_seq": cram_seq,
+                "saving": 1.0 - cram_t / jnp.maximum(raw_t, 1)}
 
     def _account(self) -> dict:
         st = self.state
         lanes = self.group_lanes
         n = self._active_bucket()
-        valid = self.valid_per_page()[:, : lanes * n]
-        bw = kops.hbm_bytes_moved(self._kernel_cache(n), valid,
-                                  predictor=st["predictor"][:, :n],
-                                  lanes=lanes)
-        live = valid.reshape(self.batch, n, lanes).sum(-1) > 0
-        mis = (np.asarray(st["predictor"][:, :n])
-               != np.asarray(st["packed_mask"][:, :n]))
-        self.stats.predictor_misses += int((mis & live).sum())
-        self.stats.predictor_hits += int((~mis & live).sum())
-        kv_decode_event(self.ledger, bw)
-        # last-layout predictor observation (copy, not alias: packed_mask's
-        # buffer is donated at the next repack scatter and the predictor
-        # must survive it)
-        st["predictor"] = observe_layout(st["packed_mask"])
-        return bw
+        valid = jnp.asarray(self.valid_per_page()[:, : lanes * n])
+        raw_seq, cram_seq = kops.hbm_bytes_moved_device(
+            self._kernel_cache(n), valid,
+            predictor=st["predictor"][:, :n], lanes=lanes)
+        return self._absorb_step(raw_seq, cram_seq, valid, n)
 
     def attend(self, q, *, account: bool = True):
         """q: (B, Hq, d) one query row per sequence -> (B, Hq, d) float32,
         with per-step bandwidth accounting (`account=False` for parity
-        probes that must not charge an extra step)."""
+        probes that must not charge an extra step).
+
+        One pass over the physical state: the fused kernel walks the slot
+        list once and emits the step's byte columns alongside the
+        attention output, so accounting adds no second traversal."""
         self.repack()
         q = jnp.asarray(q)
         if q.ndim == 2:
             q = q[None]
         n = self._active_bucket()
-        decode = (kops.decode_attention_batched if self.packing == "pair"
-                  else kops.decode_attention_quad_batched)
-        out = decode(
-            q, self._kernel_cache(n),
-            self.valid_per_page()[:, : self.group_lanes * n],
-            interpret=self.interpret)
+        st = self.state
+        valid = jnp.asarray(
+            self.valid_per_page()[:, : self.group_lanes * n])
+        out, raw_seq, cram_seq = kops.decode_attention_fused(
+            q, self._kernel_cache(n), valid,
+            st["predictor"][:, :n] if account else None,
+            lanes=self.group_lanes, interpret=self.interpret)
         if account:
-            self._account()   # bytes for the layout the kernel walked
+            self._absorb_step(raw_seq, cram_seq, valid, n)
         return out
 
     def attend_ref(self, q):
@@ -416,5 +526,7 @@ class CRAMKVCache:
 
     def saving(self) -> float:
         """Cumulative decode-bandwidth saving, read from the ledger (the
-        "kv" consumer's read rows: raw layout bytes vs CRAM bytes)."""
+        "kv" consumer's read rows: raw layout bytes vs CRAM bytes).  Folds
+        the pending device window first, so the number is current."""
+        self.sync_ledger()
         return self.ledger.saving("read", consumer="kv")

@@ -234,11 +234,23 @@ class ServeLoop:
         return {sid: out[self.seqs[sid].slot] for sid in ids}
 
     # ------------------------------------------------------------- policy
+    def sync_ledger(self) -> None:
+        """Fold the cache's device traffic window into the host ledger.
+
+        The decode path (`step`/`step_all`) books every step's read and
+        repack bytes into device accumulators only — an N-step run makes
+        ZERO host ledger records (spill crossings excepted: those are
+        rare, host-driven events).  Report boundaries call this fold; it
+        costs O(1) `Ledger.record` calls regardless of N."""
+        self.cache.sync_ledger()
+
     def observe_tiers(self) -> dict:
         """One §VI observation window per tier: hot judged on the decode
-        "read" rows, spill on the "spill" rows — independent counters."""
+        "read" rows, spill on the "spill" rows — independent counters.
+        Folds the pending device window first so the rows are current."""
         if self.tuner is None:
             return {}
+        self.sync_ledger()
         return {
             "kv-hot": self.tuner.observe(self.ledger, key="kv-hot",
                                          consumer="kv", event="read"),
@@ -254,6 +266,7 @@ class ServeLoop:
         return sorted(s for s, r in self.seqs.items() if r.spilled)
 
     def summary(self) -> dict:
+        self.sync_ledger()
         return {
             "slots": self.n_slots, "clock": self.clock,
             "live": len(self.seqs), "active": len(self.active_seqs()),

@@ -41,7 +41,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..bandwidth import Ledger
-from ..bandwidth.adapters import kv_repack_event
 from ..compression.gate import COUNTER_INIT, COUNTER_MAX, ENABLE_THRESHOLD
 from ..kernels import ops as kops
 from ..kernels.ref import MARKER_LANES
@@ -185,24 +184,12 @@ class SlotKVCache(CRAMKVCache):
         win = groups[:, idx_j]
         slots_w, over_w, strips_w, lay, fit = self._pack_window(
             win, idx_j, enabled)
-        if self.policy == "off":
-            self.stats.pack_skipped_dynamic += self.batch * w
-        else:
-            self.stats.pack_attempts += self.batch * w
-            self.stats.pack_skipped_dynamic += int((~enabled).sum()) * w
         st = self.state
         (st["slots"], st["slots_overflow"], st["strips"],
          st["packed_mask"]) = _scatter_window(
             st["slots"], st["slots_overflow"], st["strips"],
             st["packed_mask"], idx_j, slots_w, over_w, strips_w, lay)
-        self.stats.pack_calls += 1
-        self.stats.pack_pairs_processed += self.batch * w
-        lay_n = int(np.asarray(lay).sum())
-        self.stats.packed_pairs += lay_n
-        self.stats.raw_pairs += self.batch * w - lay_n
-        kv_repack_event(self.ledger, groups=self.batch * w, packed=lay_n,
-                        lanes=self.group_lanes, slot_bytes=self.slot_bytes,
-                        strip_bytes=self.strip_bytes)
+        self._book_repack(w, enabled, lay)
         # per-slot completeness: group idx[j] is complete FOR SLOT b once
         # b's own tokens cover it
         span = self.group_lanes * self.page

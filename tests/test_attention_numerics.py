@@ -1,10 +1,17 @@
-"""Blockwise attention vs naive reference; decode-vs-forward consistency."""
+"""Blockwise attention vs naive reference; decode-vs-forward consistency;
+batched fused CRAM decode kernel parity (numerics + bytes output).
+
+Deliberately hypothesis-free: the fused-kernel parity suite here is the
+tier-1 gate for `cram_decode_attention_batched` (the hypothesis-sweep
+variants live in tests/test_kernels.py)."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.kernels import ops as kops
+from repro.kernels.cram_attention import cram_decode_attention
 from repro.models.attention import (blockwise_attention,
                                     chunked_decode_attention)
 
@@ -109,3 +116,137 @@ def test_decode_matches_teacher_forcing(arch):
         np.testing.assert_allclose(
             np.asarray(logits), np.asarray(full_logits[:, i]),
             atol=2e-2, rtol=2e-2)
+
+
+# ----------------- fused CRAM decode kernel: batched parity + bytes
+
+PAGE, HKV, HD = 8, 1, 32
+D2 = 2 * HD
+
+
+def _cram_pages(rng, lanes, n_groups, comp):
+    """Logical pages (lanes*n_groups, PAGE, HKV, D2) int16 where group g is
+    delta-compressible iff comp[g].  The codec's base is page A's token-0
+    row, so compressible groups put EVERY token of every lane within a
+    small signed delta of one shared (HKV, D2) row (fits the int4 quad
+    range too); incompressible groups are fresh bf16 bit patterns whose
+    token rows never fit the delta budget."""
+    pages = np.zeros((lanes * n_groups, PAGE, HKV, D2), np.int16)
+    for g in range(n_groups):
+        base = np.asarray(jnp.asarray(
+            rng.normal(size=(HKV, D2)).astype(np.float32),
+            jnp.bfloat16).view(jnp.int16))
+        for ln in range(lanes):
+            if comp[g]:
+                delta = rng.integers(-3, 4, size=(PAGE, HKV, D2))
+                pages[g * lanes + ln] = base[None] + delta.astype(np.int16)
+            else:
+                pages[g * lanes + ln] = np.asarray(jnp.asarray(
+                    rng.normal(size=(PAGE, HKV, D2)).astype(np.float32),
+                    jnp.bfloat16).view(jnp.int16))
+    return pages
+
+
+def _batched_cram_cache(rng, lanes, n_groups, batch):
+    """Per-sequence caches (stacked leaves, shared markers) with mixed
+    packed/raw groups and per-sequence partial-page valid counts."""
+    build = (kops.build_cram_cache if lanes == 2
+             else kops.build_cram_cache_quad)
+    caches, valids = [], []
+    n_pages = lanes * n_groups
+    for b in range(batch):
+        comp = rng.random(n_groups) < 0.5
+        caches.append(build(jnp.asarray(_cram_pages(rng, lanes, n_groups,
+                                                    comp)), interpret=True))
+        # odd token counts: partial last page + dead tail groups
+        tokens = int(rng.integers(1, n_pages * PAGE + 1))
+        valids.append(np.clip(tokens - np.arange(n_pages) * PAGE,
+                              0, PAGE).astype(np.int32))
+    cache = {k: jnp.stack([c[k] for c in caches])
+             for k in ("slots", "slots_overflow", "strips", "packed_mask")}
+    cache["markers"] = caches[0]["markers"]
+    # mixed layouts must actually be exercised
+    ok = np.asarray(cache["packed_mask"])
+    assert ok.any() and not ok.all(), "want mixed packed/raw groups"
+    return cache, jnp.asarray(np.stack(valids))
+
+
+def _legacy_vmap_decode(q, cache, vp, lanes):
+    """The pre-batched path: the single-sequence kernel vmapped over
+    per-sequence physical views (what decode_attention_*_batched did
+    before the 2-D grid kernel) — pinned as a parity reference."""
+    pv = kops.physical_view if lanes == 2 else kops.physical_view_quad
+
+    def one(qi, slots, over, strips, ok, vpi):
+        c = {"slots": slots, "slots_overflow": over, "strips": strips,
+             "markers": cache["markers"], "packed_mask": ok}
+        s, st, m, v = pv(c, vpi)
+        return cram_decode_attention(qi, s, st, m, v, lanes=lanes,
+                                     interpret=True)
+
+    return jax.vmap(one)(q, cache["slots"], cache["slots_overflow"],
+                         cache["strips"], cache["packed_mask"], vp)
+
+
+@pytest.mark.parametrize("lanes,batch", [(2, 3), (4, 5)])
+def test_fused_batched_kernel_matches_oracle_and_legacy(lanes, batch):
+    rng = np.random.default_rng(42 + lanes)
+    n_groups = 4
+    cache, vp = _batched_cram_cache(rng, lanes, n_groups, batch)
+    q = jnp.asarray(rng.normal(size=(batch, 4, HD)).astype(np.float32),
+                    jnp.bfloat16)
+    ref_fn = (kops.decode_attention_ref_batched if lanes == 2
+              else kops.decode_attention_quad_ref_batched)
+    ref = np.asarray(ref_fn(q, cache, vp))
+    legacy = np.asarray(_legacy_vmap_decode(q, cache, vp, lanes))
+    for bg in (1, None, n_groups):
+        out, _, _ = kops.decode_attention_fused(q, cache, vp, lanes=lanes,
+                                                block_groups=bg,
+                                                interpret=True)
+        np.testing.assert_allclose(np.asarray(out), ref,
+                                   atol=1e-4, rtol=1e-4)
+        # vs the old per-sequence vmap path: same kernel math, same
+        # accumulation order within a slot — tight tolerance
+        np.testing.assert_allclose(np.asarray(out), legacy,
+                                   atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("lanes", [2, 4])
+def test_fused_kernel_bytes_output_bit_exact(lanes):
+    """The kernel's second output IS the byte model: per-sequence (raw,
+    cram) totals equal `hbm_bytes_moved` exactly, including the
+    LLP-mispredict re-probe term under a random predictor."""
+    rng = np.random.default_rng(7 + lanes)
+    n_groups = 4
+    cache, vp = _batched_cram_cache(rng, lanes, n_groups, 3)
+    q = jnp.asarray(rng.normal(size=(3, 4, HD)).astype(np.float32),
+                    jnp.bfloat16)
+    for pred in (None, jnp.asarray(rng.random((3, n_groups)) < 0.5),
+                 ~cache["packed_mask"]):   # worst case: every group missed
+        bw = kops.hbm_bytes_moved(cache, vp, predictor=pred, lanes=lanes)
+        for bg in (1, 2):
+            _, raw_s, cram_s = kops.decode_attention_fused(
+                q, cache, vp, pred, lanes=lanes, block_groups=bg,
+                interpret=True)
+            assert np.array_equal(np.asarray(raw_s), bw["raw_per_seq"])
+            assert np.array_equal(np.asarray(cram_s), bw["cram_per_seq"])
+
+
+def test_fused_kernel_shared_cache_path():
+    """`decode_attention` (many query rows, ONE shared cache) rides the
+    same batched kernel with the batch coordinate pinned in the index
+    maps; bytes repeat per row and match the unbatched byte model."""
+    rng = np.random.default_rng(3)
+    comp = np.array([True, False, True, True])
+    cache = kops.build_cram_cache(
+        jnp.asarray(_cram_pages(rng, 2, 4, comp)), interpret=True)
+    vp = np.clip(50 - np.arange(8) * PAGE, 0, PAGE).astype(np.int32)
+    q = jnp.asarray(rng.normal(size=(5, 4, HD)).astype(np.float32),
+                    jnp.bfloat16)
+    ref = np.asarray(kops.decode_attention_ref(q, cache, vp))
+    out, raw_s, cram_s = kops.decode_attention_fused(
+        q, cache, jnp.asarray(vp), lanes=2, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), ref, atol=1e-4, rtol=1e-4)
+    bw = kops.hbm_bytes_moved(cache, vp, lanes=2)
+    assert np.asarray(raw_s).tolist() == [bw["raw_bytes"]] * 5
+    assert np.asarray(cram_s).tolist() == [bw["cram_bytes"]] * 5

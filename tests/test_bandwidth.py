@@ -145,11 +145,20 @@ def test_kv_ledger_matches_per_step_byte_dicts():
     for t in (2 * PAGE, 3, PAGE, 1):
         cache.append(*synthetic_kv_stream(rng, 2, t, HKV, HD))
         bw = cache.account_step()
-        raw_sum += bw["raw_bytes"]
-        cram_sum += bw["cram_bytes"]
+        raw_sum += int(bw["raw_bytes"])
+        cram_sum += int(bw["cram_bytes"])
+    # decode accounting is device-resident: nothing reaches the host
+    # ledger until the window fold...
+    assert cache.ledger.total("read", consumer="kv")["raw_bytes"] == 0
+    cache.sync_ledger()
+    # ...which lands the exact per-step sums, one count per step
     tot = cache.ledger.total("read", consumer="kv")
     assert tot["raw_bytes"] == raw_sum
     assert tot["compressed_bytes"] == cram_sum
+    assert tot["count"] == 4
+    # folding again books nothing new (the window resets)
+    cache.sync_ledger()
+    assert cache.ledger.total("read", consumer="kv")["count"] == 4
     assert cache.saving() == pytest.approx(1 - cram_sum / raw_sum)
     # repack write traffic booked too, raw == groups * lanes * slot bytes
     rp = cache.ledger.total("repack", consumer="kv")
@@ -164,6 +173,7 @@ def test_kv_shared_ledger_keeps_consumer_rows():
                         policy="static", ledger=led)
     cache.append(*synthetic_kv_stream(rng, 1, 2 * PAGE, HKV, HD))
     cache.account_step()
+    cache.sync_ledger()
     assert led.total("read", consumer="kv")["raw_bytes"] > 0
     assert led is cache.ledger
 

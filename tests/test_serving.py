@@ -473,6 +473,56 @@ def test_sharded_attend_bit_identical_to_single_device():
     assert "SHARD-OK" in out.stdout
 
 
+# ------------------------------------- device-resident ledger window
+
+
+def _ledger_schedule(sync_every_step: bool) -> ServeLoop:
+    """A fixed non-spilling serve schedule: 3 admits + 12 fused decode
+    steps, optionally folding the device window after every step."""
+    rng = np.random.default_rng(11)
+    loop = ServeLoop(slots=3, max_pages=8, page=PAGE, n_kv=HKV,
+                     head_dim=HD, policy="static", packing="pair")
+    for sid in range(3):
+        loop.admit(sid, *_stream(rng, PAGE))
+    for _ in range(12):
+        loop.step_all({sid: _stream(rng, 1) for sid in range(3)})
+        if sync_every_step:
+            loop.sync_ledger()
+    return loop
+
+
+def test_n_step_serve_makes_o1_host_ledger_records(monkeypatch):
+    """The device-resident accounting contract: an N-step decode run
+    performs ZERO host `Ledger.record` calls (every step's read/repack
+    bytes land in the cache's device accumulators), one `sync_ledger`
+    fold costs at most N_EVENTS records, and the folded totals are
+    identical to syncing after every step."""
+    from repro.bandwidth.ledger import N_EVENTS, Ledger
+
+    ref = _ledger_schedule(sync_every_step=True).ledger.as_dict()
+    assert ref, "schedule must book some traffic"
+
+    calls: list = []
+    orig = Ledger.record
+
+    def counting(self, *a, **kw):
+        calls.append(a)
+        return orig(self, *a, **kw)
+
+    monkeypatch.setattr(Ledger, "record", counting)
+    loop = _ledger_schedule(sync_every_step=False)
+    assert calls == [], (
+        f"decode steps reached the host ledger {len(calls)} times; "
+        "all step accounting must stay device-resident")
+    loop.sync_ledger()
+    assert 0 < len(calls) <= N_EVENTS
+    assert loop.ledger.as_dict() == ref
+    # the fold drained the window: re-syncing is a no-op
+    n = len(calls)
+    loop.sync_ledger()
+    assert len(calls) == n
+
+
 # ---------------------------------------------------- hypothesis sweep
 
 if HAVE_HYPOTHESIS:
