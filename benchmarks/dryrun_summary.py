@@ -22,7 +22,7 @@ def markdown_table(mesh: str | None = None) -> str:
         tag = r["tag"].replace(f"__{r.get('mesh','')}", "")
         if r.get("skipped"):
             rows.append(f"| {tag} | {r.get('mesh','-')} | SKIP "
-                        f"(full-attn long-ctx) | - | - | - | - |")
+                        "(full-attn long-ctx) | - | - | - | - |")
             continue
         if not r.get("ok"):
             rows.append(f"| {tag} | {r['mesh']} | **FAIL** | - | - | - | "
@@ -31,16 +31,13 @@ def markdown_table(mesh: str | None = None) -> str:
         ma = r.get("memory_analysis", {})
         c = r.get("collectives", {}).get("counts_by_type", {})
         rows.append(
-            "| {} | {} | OK | {:.2f} | {:.2f} | {:.0f} | {}/{}/{}/{}/{} |"
-            .format(
-                tag, r["mesh"],
-                ma.get("argument_size_in_bytes", 0) / GiB,
-                ma.get("temp_size_in_bytes", 0) / GiB,
-                r.get("compile_s", 0),
-                c.get("all-gather", 0), c.get("all-reduce", 0),
-                c.get("reduce-scatter", 0), c.get("all-to-all", 0),
-                c.get("collective-permute", 0),
-            ))
+            f"| {tag} | {r['mesh']} | OK "
+            f"| {ma.get('argument_size_in_bytes', 0) / GiB:.2f} "
+            f"| {ma.get('temp_size_in_bytes', 0) / GiB:.2f} "
+            f"| {r.get('compile_s', 0):.0f} "
+            f"| {c.get('all-gather', 0)}/{c.get('all-reduce', 0)}"
+            f"/{c.get('reduce-scatter', 0)}/{c.get('all-to-all', 0)}"
+            f"/{c.get('collective-permute', 0)} |")
     return "\n".join(rows)
 
 

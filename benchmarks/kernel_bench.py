@@ -82,9 +82,10 @@ def blockspec_sweep(*, batch=4, n_groups=8, page=8, hkv=1, d=32,
                                        bw["raw_per_seq"])
                         and np.array_equal(np.asarray(cram_s),
                                            bw["cram_per_seq"]))
-            us = _timeit(lambda qq: ops.decode_attention_fused(
-                qq, cache, vp, lanes=lanes, block_groups=bg,
-                interpret=True)[0], q, n=n_timing)
+            us = _timeit(lambda qq, lanes=lanes, bg=bg:
+                         ops.decode_attention_fused(
+                             qq, cache, vp, lanes=lanes, block_groups=bg,
+                             interpret=True)[0], q, n=n_timing)
             row = {"block_groups": bg, "us_per_call": round(us, 1),
                    "max_err_vs_oracle": err,
                    "numerics_parity": err < 2e-2,

@@ -38,9 +38,9 @@ def rows_from_records(records) -> list[tuple]:
         frac = r["compute_s"] / bound if bound else 0.0
         rows.append((
             f"roofline/{rec['tag']}", rec.get("compile_s", 0) * 1e6,
-            "c=%.3fs m=%.3fs coll=%.3fs dom=%s useful=%.2f roofline=%.2f"
-            % (r["compute_s"], r["memory_s"], r["collective_s"],
-               r["dominant"][:4], ratio, frac),
+            f"c={r['compute_s']:.3f}s m={r['memory_s']:.3f}s "
+            f"coll={r['collective_s']:.3f}s dom={r['dominant'][:4]} "
+            f"useful={ratio:.2f} roofline={frac:.2f}",
         ))
     return rows
 

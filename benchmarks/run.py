@@ -156,7 +156,7 @@ def _sweep_compress(args) -> dict:
 
     t0 = time.time()
     corpus = _corpus()
-    names, images = zip(*sorted(corpus.items()))
+    names, images = zip(*sorted(corpus.items()), strict=True)
     lines = np.concatenate([v.reshape(-1, 64) for v in images])
     out = compress_scan(lines)          # single kernel dispatch, whole image
 
@@ -167,11 +167,11 @@ def _sweep_compress(args) -> dict:
             "pair_fits_64B": p64,
             "pair_fits_60B": p60,
             "mean_size": float(sizes.mean()),
-            "status_counts": {int(u): int(c) for u, c in zip(uniq, cnt)},
+            "status_counts": {int(u): int(c) for u, c in zip(uniq, cnt, strict=True)},
         }
 
     per_source, ofs = {}, 0
-    for name, img in zip(names, images):
+    for name, img in zip(names, images, strict=True):
         n = img.size // 64
         per_source[name] = stats(out["sizes"][ofs:ofs + n],
                                  out["status"][ofs:ofs + n])
@@ -303,7 +303,7 @@ def run_sweep(args) -> None:
         chosen = {s: {n: r["chosen"] for n, r in pol[s].items()}
                   for s in ("kv", "checkpoint", "grad")}
         print("policy chosen:", chosen)
-        print(f"policy guarantee (auto never worse than off): "
+        print("policy guarantee (auto never worse than off): "
               f"{pol['guarantee']}")
         if not pol["guarantee"]:
             print("POLICY GUARANTEE VIOLATED", file=sys.stderr)
@@ -360,7 +360,20 @@ def main() -> None:
     ap.add_argument("--out", help="sweep report output path")
     ap.add_argument("--force", action="store_true",
                     help="ignore the on-disk suite cache")
+    ap.add_argument("--analyze", action="store_true",
+                    help="run the repo-invariant static analyzer + jaxpr "
+                         "hot-path audit (DESIGN.md §11) before anything "
+                         "else; non-zero exit on violations or golden "
+                         "drift")
     args = ap.parse_args()
+    if args.analyze:
+        from repro.analysis.__main__ import main as analysis_main
+
+        rc = analysis_main(["--jaxpr"])
+        if rc:
+            raise SystemExit(rc)
+        if not args.sweep and not args.modules:
+            return
     if args.sweep:
         if args.events is None:
             args.events = int(os.environ.get("REPRO_BENCH_EVENTS", 300_000))

@@ -32,6 +32,6 @@ def run() -> list[tuple]:
                                r["schemes"]["dynamic"]["accesses"], f))
         rows.append((f"table4/channels_{channels}", 0.0,
                      f"dynamic geomean {geomean(sps):.4f} "
-                     f"(paper ~1.05 across 1/2/4)" if sps
+                     "(paper ~1.05 across 1/2/4)" if sps
                      else "n/a (dynamic not in cached suite)"))
     return rows

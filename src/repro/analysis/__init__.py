@@ -1,0 +1,28 @@
+"""repro.analysis: the repo-invariant enforcement layer (DESIGN.md §11).
+
+Two levels:
+
+  * Level 1 — an AST-based rule engine (`analysis.rules`) that lints the
+    tree for CRAM's domain invariants: marker literals stay in
+    `compression/framing.py` (R1), codec implementations stay behind the
+    `compression` registry (R2), hot paths stay host-sync free (R3),
+    seeding stays process-stable (R4), every tier crossing books a ledger
+    event (R5), kernel wrappers never swallow errors or promote dtypes
+    (R6).  Each rule is a plugin in a small registry; fixtures under
+    `tests/fixtures/analysis/` prove each one fires.
+
+  * Level 2 — `analysis.jaxpr_audit`: traces the REAL hot entry points
+    (engine chunk, fused decode, pack window, serve-loop inner jits,
+    checkpoint pack) to jaxprs and pins what the wall-clock benches only
+    see on hardware: zero host callbacks, no float64 promotion, donation
+    taking effect, and an exact `pallas_call` budget — golden-tested
+    against `tests/golden/jaxpr_audit.json`.
+
+CLI: `python -m repro.analysis [--report json] [--jaxpr] [paths...]` —
+exit 0 clean, non-zero on any violation.  `benchmarks/run.py --analyze`
+wraps the same entry point.
+"""
+
+from .engine import Violation, analyze, default_paths, render_report
+
+__all__ = ["Violation", "analyze", "default_paths", "render_report"]

@@ -1,0 +1,89 @@
+"""CLI: `python -m repro.analysis [paths...] [options]`.
+
+Exit status is the contract CI keys off:
+
+  0  clean — no rule violations, jaxpr audit (if requested) matches golden
+  1  violations found, or jaxpr audit drifted from the golden
+
+Examples:
+
+  python -m repro.analysis                      # rule engine over src+benchmarks
+  python -m repro.analysis --report json        # machine-readable report
+  python -m repro.analysis --jaxpr              # + trace the hot entries
+  python -m repro.analysis --jaxpr-only         # audit only (kernel-smoke CI)
+  python -m repro.analysis --jaxpr --update-golden   # re-pin after a kernel change
+  python -m repro.analysis --rules r1,r3 path/  # subset, custom roots
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from .engine import analyze, default_paths, iter_py_files, render_report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repo-invariant static analyzer + jaxpr hot-path auditor")
+    ap.add_argument("paths", nargs="*", type=Path,
+                    help="files/dirs to scan (default: src/repro, benchmarks)")
+    ap.add_argument("--report", choices=("text", "json"), default="text")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule subset (e.g. r1,r3)")
+    ap.add_argument("--jaxpr", action="store_true",
+                    help="also run the jaxpr hot-path audit")
+    ap.add_argument("--jaxpr-only", action="store_true",
+                    help="skip the rule engine; run only the jaxpr audit")
+    ap.add_argument("--golden", type=Path, default=None,
+                    help="jaxpr golden path (default tests/golden/"
+                         "jaxpr_audit.json)")
+    ap.add_argument("--update-golden", action="store_true",
+                    help="rewrite the jaxpr golden from this tree")
+    ap.add_argument("--out", type=Path, default=None,
+                    help="also write the JSON report to this file")
+    args = ap.parse_args(argv)
+
+    violations, files_scanned = [], 0
+    rules = ([r.strip() for r in args.rules.split(",") if r.strip()]
+             if args.rules else None)
+    if not args.jaxpr_only:
+        paths = args.paths or default_paths()
+        files_scanned = len(iter_py_files(paths))
+        violations = analyze(paths, rules=rules)
+
+    jaxpr = None
+    if args.jaxpr or args.jaxpr_only or args.update_golden:
+        from . import jaxpr_audit
+        jaxpr = jaxpr_audit.run(args.golden, update=args.update_golden)
+
+    report = render_report(violations, files_scanned=files_scanned,
+                           jaxpr=jaxpr)
+    if args.out:
+        args.out.parent.mkdir(parents=True, exist_ok=True)
+        args.out.write_text(json.dumps(report, indent=2) + "\n")
+
+    if args.report == "json":
+        print(json.dumps(report, indent=2))
+    else:
+        for v in violations:
+            print(f"{v.path}:{v.line}: [{v.rule}] {v.message}")
+        if not args.jaxpr_only:
+            print(f"{len(violations)} violation(s) across "
+                  f"{files_scanned} file(s)")
+        if jaxpr is not None:
+            for m in jaxpr["mismatches"]:
+                print(f"jaxpr-audit: {m}")
+            state = ("updated golden" if jaxpr["updated"] else
+                     "drifted" if jaxpr["mismatches"] else "matches golden")
+            print(f"jaxpr audit: {len(jaxpr['entries'])} entries, {state}")
+
+    bad = bool(violations) or bool(jaxpr and jaxpr["mismatches"])
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

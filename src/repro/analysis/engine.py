@@ -1,0 +1,110 @@
+"""Rule-engine core: file walking, rule dispatch, and the JSON report.
+
+A rule is a plugin (see `rules/__init__.py`) with a `name`, a one-line
+`title`, and a `check(ctx) -> list[Violation]`.  The engine parses each
+file once and hands every rule the same `FileContext`; rules that need
+cross-file state (R5's call graph is per-module, R1's protected constants
+come from framing.py) derive it from the context lazily.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import asdict, dataclass, field
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parents[3]
+
+
+@dataclass(frozen=True)
+class Violation:
+    rule: str
+    path: str          # repo-relative posix path
+    line: int
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+@dataclass
+class FileContext:
+    path: Path         # absolute
+    rel: str           # repo-relative posix (or absolute posix if outside)
+    source: str
+    tree: ast.Module
+    root: Path = field(default=REPO_ROOT)
+
+    def violation(self, node: ast.AST | int, rule: str,
+                  message: str) -> Violation:
+        line = node if isinstance(node, int) else getattr(node, "lineno", 0)
+        return Violation(rule=rule, path=self.rel, line=line, message=message)
+
+
+def default_paths(root: Path | None = None) -> list[Path]:
+    root = root or REPO_ROOT
+    return [root / "src" / "repro", root / "benchmarks"]
+
+
+def iter_py_files(paths) -> list[Path]:
+    files: list[Path] = []
+    for p in paths:
+        p = Path(p)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.py")))
+        elif p.suffix == ".py":
+            files.append(p)
+    return files
+
+
+def _rel(path: Path, root: Path) -> str:
+    try:
+        return path.resolve().relative_to(root).as_posix()
+    except ValueError:
+        return path.resolve().as_posix()
+
+
+def analyze(paths=None, rules=None, root: Path | None = None
+            ) -> list[Violation]:
+    """Run the rule registry over `paths` (default: src/repro plus
+    benchmarks).  Returns every violation, file-ordered."""
+    from .rules import get_rules
+
+    root = Path(root) if root else REPO_ROOT
+    active = get_rules(rules)
+    out: list[Violation] = []
+    for path in iter_py_files(paths or default_paths(root)):
+        source = path.read_text()
+        try:
+            tree = ast.parse(source, filename=str(path))
+        except SyntaxError as e:
+            out.append(Violation(rule="parse", path=_rel(path, root),
+                                 line=e.lineno or 0,
+                                 message=f"syntax error: {e.msg}"))
+            continue
+        ctx = FileContext(path=path, rel=_rel(path, root), source=source,
+                          tree=tree, root=root)
+        for rule in active:
+            out.extend(rule.check(ctx))
+    out.sort(key=lambda v: (v.path, v.line, v.rule))
+    return out
+
+
+def render_report(violations: list[Violation], *, files_scanned: int,
+                  jaxpr: dict | None = None) -> dict:
+    """The JSON report shape the CI job uploads as an artifact."""
+    from .rules import get_rules
+
+    counts: dict[str, int] = {}
+    for v in violations:
+        counts[v.rule] = counts.get(v.rule, 0) + 1
+    report = {
+        "ok": not violations and not (jaxpr or {}).get("mismatches"),
+        "files_scanned": files_scanned,
+        "rules": {r.name: r.title for r in get_rules(None)},
+        "counts": counts,
+        "violations": [asdict(v) for v in violations],
+    }
+    if jaxpr is not None:
+        report["jaxpr_audit"] = jaxpr
+    return report

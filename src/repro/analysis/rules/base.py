@@ -1,0 +1,83 @@
+"""Rule base class + the AST helpers every rule shares."""
+
+from __future__ import annotations
+
+import ast
+
+RULES: dict[str, "Rule"] = {}
+
+
+class Rule:
+    """One domain invariant.  Subclasses set `name` (r1..r6), `title`
+    (one line, lands in the report), and implement `check(ctx)`."""
+
+    name: str = ""
+    title: str = ""
+
+    def check(self, ctx) -> list:
+        raise NotImplementedError
+
+
+def register(cls):
+    inst = cls()
+    assert inst.name and inst.name not in RULES, inst.name
+    RULES[inst.name] = inst
+    return cls
+
+
+# ---------------------------------------------------------------- AST helpers
+
+
+def dotted_name(node: ast.AST) -> str:
+    """Best-effort dotted name of an expression ('np.asarray',
+    'self.ledger.record', '' when not a plain attribute chain)."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def call_name(call: ast.Call) -> str:
+    return dotted_name(call.func)
+
+
+def walk_functions(tree: ast.Module):
+    """Yield (node, qualname) for every function/method, with class
+    prefixes ('SlotKVCache.repack')."""
+
+    def visit(node, prefix):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                q = f"{prefix}{child.name}"
+                yield child, q
+                yield from visit(child, f"{q}.")
+            elif isinstance(child, ast.ClassDef):
+                yield from visit(child, f"{prefix}{child.name}.")
+            else:
+                yield from visit(child, prefix)
+
+    yield from visit(tree, "")
+
+
+def is_jit_decorated(fn: ast.FunctionDef) -> bool:
+    """True when any decorator mentions `jit` — catches jax.jit, bare jit,
+    and functools.partial(jax.jit, ...) forms."""
+    for dec in fn.decorator_list:
+        for node in ast.walk(dec):
+            if isinstance(node, ast.Attribute) and node.attr == "jit":
+                return True
+            if isinstance(node, ast.Name) and node.id == "jit":
+                return True
+    return False
+
+
+def int_constants(tree: ast.AST):
+    """Yield (value, node) for every int literal (bools excluded)."""
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Constant) and isinstance(node.value, int)
+                and not isinstance(node.value, bool)):
+            yield node.value, node

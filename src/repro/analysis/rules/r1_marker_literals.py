@@ -1,0 +1,58 @@
+"""R1 — marker constants are defined once, in compression/framing.py.
+
+The in-band marker discipline (DESIGN.md §3) only works if every consumer
+derives markers from THE same key and PRF multipliers; a re-typed literal
+that drifts from framing's value silently desynchronizes the packers from
+the decoders (the marker-aliasing bug class Pekhimenko's thesis catalogs).
+The protected set is derived from framing.py itself: every int literal in
+it that is large enough to be a key/multiplier and is not a plain mask or
+power of two.  Any of those values appearing as a literal in another
+module is a violation — import the named constant instead.
+"""
+
+from __future__ import annotations
+
+import ast
+import functools
+
+from .base import Rule, int_constants, register
+
+_EXEMPT_SUFFIX = "compression/framing.py"
+_MIN_PROTECTED = 0x1000     # sizes, shifts and small masks live below this
+
+
+def _is_mask_like(v: int) -> bool:
+    """Powers of two and all-ones masks are generic bit twiddling, not
+    marker material."""
+    return v <= 0 or (v & (v - 1)) == 0 or (v & (v + 1)) == 0
+
+
+@functools.lru_cache(maxsize=1)
+def protected_constants() -> frozenset[int]:
+    import inspect
+
+    from ...compression import framing
+
+    tree = ast.parse(inspect.getsource(framing))
+    return frozenset(v for v, _ in int_constants(tree)
+                     if v >= _MIN_PROTECTED and not _is_mask_like(v))
+
+
+@register
+class MarkerLiterals(Rule):
+    name = "r1"
+    title = ("no raw marker-word literals outside compression/framing.py "
+             "(import the named constant)")
+
+    def check(self, ctx):
+        if ctx.rel.endswith(_EXEMPT_SUFFIX):
+            return []
+        protected = protected_constants()
+        out = []
+        for value, node in int_constants(ctx.tree):
+            if value in protected:
+                out.append(ctx.violation(
+                    node, self.name,
+                    f"marker constant {value:#x} hardcoded; import it "
+                    "from repro.compression.framing"))
+        return out

@@ -1,0 +1,89 @@
+"""R3 — hot paths stay device-resident: no host syncs in jit bodies or
+the serving hot methods.
+
+PR 7 made an N-step serve run cost O(1) host ledger records; one stray
+`.item()` or `np.asarray(traced)` re-serializes the device every step and
+the CPU-interpret benches never notice (the regression only shows on real
+hardware).  Two scopes, different strictness:
+
+  * jit-decorated functions (the body is traced): any host
+    materialization is at best a silent constant-fold, at worst a tracer
+    leak — flag `.item()`, `float()/int()` on expressions, `np.asarray`/
+    `np.array`, `jax.device_get`, `block_until_ready`, and ledger
+    record/absorb calls;
+  * hot-NAMED methods (`step`, `step_all`, `attend`, `repack`,
+    `account_step`, ...) are host orchestrators — np conversions of HOST
+    state are legitimate there, but blocking syncs and per-step ledger
+    booking are not: flag `.item()`, `block_until_ready`, and ledger
+    record/absorb.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .base import Rule, call_name, is_jit_decorated, register, walk_functions
+
+HOT_NAMES = frozenset({
+    "step", "step_all", "attend", "repack", "account_step",
+    "append_active", "_absorb_step",
+})
+
+_JIT_FORBIDDEN_CALLS = frozenset({
+    "np.asarray", "np.array", "np.ascontiguousarray", "numpy.asarray",
+    "numpy.array", "jax.device_get",
+})
+
+
+def _is_ledger_call(call: ast.Call) -> bool:
+    name = call_name(call)
+    head, _, tail = name.rpartition(".")
+    return tail in ("record", "absorb") and "ledger" in head.lower()
+
+
+def _scan_body(fn: ast.FunctionDef, ctx, rule, *, in_jit: bool):
+    out = []
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        name = call_name(node)
+        if name.endswith(".item") and not node.args:
+            out.append(ctx.violation(
+                node, rule, "'.item()' host sync inside hot path "
+                f"'{fn.name}'"))
+        elif name.endswith("block_until_ready"):
+            out.append(ctx.violation(
+                node, rule, "'block_until_ready' inside hot path "
+                f"'{fn.name}' — sync at the window boundary instead"))
+        elif _is_ledger_call(node):
+            out.append(ctx.violation(
+                node, rule, "per-step ledger booking inside hot path "
+                f"'{fn.name}' — use the device accumulator and fold at "
+                "the report boundary"))
+        elif in_jit and name in _JIT_FORBIDDEN_CALLS:
+            out.append(ctx.violation(
+                node, rule, f"'{name}' on traced values inside "
+                f"jit-compiled '{fn.name}'"))
+        elif in_jit and name in ("float", "int") and node.args and not \
+                isinstance(node.args[0], ast.Constant):
+            out.append(ctx.violation(
+                node, rule, f"'{name}()' materializes a traced value "
+                f"inside jit-compiled '{fn.name}'"))
+    return out
+
+
+@register
+class HostSyncInHotPath(Rule):
+    name = "r3"
+    title = ("no Ledger.record/host-sync calls (.item, np.asarray, "
+             "block_until_ready) inside jit or step/attend/repack hot "
+             "paths")
+
+    def check(self, ctx):
+        out = []
+        for fn, _qual in walk_functions(ctx.tree):
+            if is_jit_decorated(fn):
+                out.extend(_scan_body(fn, ctx, self.name, in_jit=True))
+            elif fn.name in HOT_NAMES:
+                out.extend(_scan_body(fn, ctx, self.name, in_jit=False))
+        return out

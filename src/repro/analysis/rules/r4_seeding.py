@@ -1,0 +1,40 @@
+"""R4 — no process-salted or global-state seeding (the PR-2 bug class).
+
+The nondeterministic-trace bug: builtin `hash()` is salted per process
+(PYTHONHASHSEED), so seeding anything from it makes runs unreproducible —
+PR 2 replaced it with crc32.  Global `np.random.seed`/`random.seed`
+mutate process state behind every other consumer's back; the repo's
+convention is explicit `np.random.default_rng(seed)` generators.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .base import Rule, call_name, register
+
+
+@register
+class SaltedSeeding(Rule):
+    name = "r4"
+    title = "no hash()/process-salted or global-state seeding"
+
+    def check(self, ctx):
+        out = []
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = call_name(node)
+            if name == "hash":
+                out.append(ctx.violation(
+                    node, self.name,
+                    "builtin hash() is salted per process "
+                    "(PYTHONHASHSEED) — derive seeds with zlib.crc32 or "
+                    "np.random.default_rng"))
+            elif name in ("np.random.seed", "numpy.random.seed",
+                          "random.seed"):
+                out.append(ctx.violation(
+                    node, self.name,
+                    f"global-state seeding '{name}' — pass an explicit "
+                    "np.random.default_rng(seed) generator instead"))
+        return out

@@ -1,0 +1,63 @@
+"""R6 — kernel wrappers never swallow errors or promote dtypes.
+
+A silent `except: pass` around a pallas_call turns a mis-tiled kernel
+into wrong numbers; an accidental float64 promotion (python `float`
+dtype, `np.float64`) doubles the DMA bytes the whole byte model charges
+for — and TPUs don't even have f64, so the bug only reproduces on the
+interpret path.  Scope: `kernels/` (wrappers and device code).
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .base import Rule, call_name, register
+
+
+def _is_silent_handler(h: ast.ExceptHandler) -> bool:
+    return all(isinstance(s, ast.Pass)
+               or (isinstance(s, ast.Expr)
+                   and isinstance(s.value, ast.Constant))
+               for s in h.body)
+
+
+@register
+class KernelHygiene(Rule):
+    name = "r6"
+    title = "no silent except / float64 dtype promotion in kernel wrappers"
+
+    def check(self, ctx):
+        if "repro/kernels/" not in ctx.rel:
+            return []
+        out = []
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.ExceptHandler):
+                if node.type is None:
+                    out.append(ctx.violation(
+                        node, self.name,
+                        "bare 'except:' in a kernel wrapper"))
+                elif _is_silent_handler(node):
+                    out.append(ctx.violation(
+                        node, self.name,
+                        "silent exception handler in a kernel wrapper — "
+                        "a swallowed kernel error is wrong numbers"))
+            elif isinstance(node, ast.Attribute) and node.attr == "float64":
+                out.append(ctx.violation(
+                    node, self.name,
+                    "float64 in kernel code — doubles DMA bytes and has "
+                    "no TPU lowering"))
+            elif isinstance(node, ast.Call):
+                name = call_name(node)
+                promotes = (
+                    name.endswith(".astype") and node.args
+                    and isinstance(node.args[0], ast.Name)
+                    and node.args[0].id == "float")
+                promotes |= any(
+                    kw.arg == "dtype" and isinstance(kw.value, ast.Name)
+                    and kw.value.id == "float" for kw in node.keywords)
+                if promotes:
+                    out.append(ctx.violation(
+                        node, self.name,
+                        "python 'float' dtype promotes to float64 in "
+                        "kernel code"))
+        return out

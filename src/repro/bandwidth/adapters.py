@@ -14,7 +14,8 @@ from __future__ import annotations
 import numpy as np
 
 from ..compression.framing import LINE_BYTES
-from .ledger import EV_PROBE, EV_READ, EV_REPACK, EV_SPILL, EV_WRITE, Ledger
+from .ledger import (EV_PROBE, EV_READ, EV_REPACK, EV_SPILL, EV_WRITE,
+                     Ledger, device_record)
 
 # ---------------------------------------------------------------- trace engine
 
@@ -117,6 +118,32 @@ def kv_repack_event(ledger: Ledger, *, groups: int, packed: int, lanes: int,
                   tensor_class=tensor_class, consumer="kv")
 
 
+def kv_repack_device(traffic, lay, *, lanes: int, slot_bytes: int,
+                     strip_bytes: int):
+    """Device-side form of `kv_repack_event`: the SAME byte model (raw =
+    every page written raw; a packed group writes slot + strip, an unpacked
+    group its `lanes` pages raw), accumulated into a
+    `bandwidth.device_totals` array instead of a host record.  Traceable —
+    consumers call it from inside their jitted step/repack wrappers so no
+    byte math (and no host sync) lives outside this module.  Returns the
+    updated accumulator and the packed-group count (traced int32)."""
+    groups = lay.size
+    lay_n = lay.sum().astype("int32")
+    raw = groups * lanes * slot_bytes
+    comp = (lay_n * (slot_bytes + strip_bytes)
+            + (groups - lay_n) * (lanes * slot_bytes))
+    return device_record(traffic, EV_REPACK, raw, comp, count=groups), lay_n
+
+
+def kv_read_device(traffic, raw_seq, cram_seq):
+    """Device-side form of `kv_decode_event`: fold one decode step's
+    per-sequence (raw, cram) byte duals — the fused kernel's second output —
+    into the accumulator as ONE read event.  Traceable; see
+    `kv_repack_device`."""
+    return device_record(traffic, EV_READ, raw_seq.sum(), cram_seq.sum(),
+                         count=1)
+
+
 def kv_spill_event(ledger: Ledger, *, raw: int, compressed: int,
                    direction: str = "evict",
                    tensor_class: str | None = None) -> tuple[int, int]:
@@ -196,7 +223,7 @@ def grad_wire_event(ledger: Ledger, tree, *, enabled: bool,
 __all__ = [
     "engine_traffic", "engine_breakdown",
     "kv_decode_event", "kv_repack_event", "kv_spill_event",
-    "kv_window_fold",
+    "kv_window_fold", "kv_repack_device", "kv_read_device",
     "classify_tensor", "checkpoint_leaf_event", "checkpoint_restore_event",
     "tree_wire_bytes", "int8_wire_bytes", "grad_wire_event",
 ]

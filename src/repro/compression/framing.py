@@ -34,8 +34,22 @@ DOMAIN_PAIR = 0
 DOMAIN_QUAD = 1
 _DOMAIN_SALT = 0x9E3779B9
 
+# THE default marker key.  Every keyed entry point (build_cram_cache,
+# CRAMKVCache, SlotKVCache, ServeLoop, the scan kernels) defaults to this
+# value; analysis rule R1 forbids the literal anywhere else.
+DEFAULT_MARKER_KEY = 0x5EED
 
-def slot_markers(n_slots: int, key: int = 0x5EED,
+# The golden-ratio odd multiplier (Fibonacci hashing) shared by the trace
+# engine's address hash, the predictor's set hash and the gate's sampling
+# hash — and, under the names below, the multiply-add device marker family
+# that compress_scan evaluates in-kernel.  One definition; R1 keeps it so.
+FIB_MULT = 0x9E3779B1                   # the odd 32-bit golden constant
+M2_MULT = FIB_MULT                      # 2:1 pair-marker multiplier
+M4_MULT = 0x85EBCA6B                    # 4:1 quad-marker multiplier
+IL_MULT = 0x27D4EB2F                    # interleave/mix multiplier
+
+
+def slot_markers(n_slots: int, key: int = DEFAULT_MARKER_KEY,
                  domain: int = DOMAIN_PAIR) -> np.ndarray:
     """Per-slot 32-bit device markers (keyed affine hash; regenerable)."""
     idx = np.arange(n_slots, dtype=np.uint64)

@@ -23,6 +23,8 @@ from __future__ import annotations
 
 import numpy as np
 
+from .framing import FIB_MULT
+
 COUNTER_BITS = 12
 COUNTER_MAX = (1 << COUNTER_BITS) - 1
 # MSB gates compression; ENABLE_THRESHOLD is the MSB boundary. The counter
@@ -58,7 +60,7 @@ class DynamicController:
 
 def is_sampled_set(set_idx, n_sets, rate: float = SAMPLE_RATE, xp=np):
     """Deterministic ~1% sampling of LLC sets (hash-spread, not contiguous)."""
-    h = (set_idx * 0x9E3779B1) & 0xFFFFFFFF
+    h = (set_idx * FIB_MULT) & 0xFFFFFFFF
     return (h % 1024) < max(1, int(rate * 1024))
 
 

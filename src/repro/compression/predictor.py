@@ -24,12 +24,13 @@ from __future__ import annotations
 
 import numpy as np
 
+from .framing import FIB_MULT
 from .layouts import Layout
 
 LCT_ENTRIES = 512
 LINES_PER_PAGE = 64  # 4KB page / 64B lines
 
-HASH_MULT = 0x9E3779B1  # Fibonacci hashing
+HASH_MULT = FIB_MULT  # Fibonacci hashing (THE golden multiplier, framing.py)
 _HASH_MULT = HASH_MULT  # legacy alias
 
 

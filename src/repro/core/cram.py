@@ -156,7 +156,7 @@ class CRAMSystem:
                     lines[i] = l
             elif st == LineStatus.COMP2:
                 lanes = [slot, slot + 1]
-                for i, l in zip(lanes, cc.unpack_group(raw, 2)):
+                for i, l in zip(lanes, cc.unpack_group(raw, 2), strict=True):
                     lines[i] = l
             elif st == LineStatus.INVALID:
                 continue
@@ -207,7 +207,7 @@ class CRAMSystem:
             if st == LineStatus.COMP2:
                 lanes = (0, 1) if slot == 0 else (2, 3)
                 if lane in lanes:
-                    for i, l in zip(lanes, cc.unpack_group(raw, 2)):
+                    for i, l in zip(lanes, cc.unpack_group(raw, 2), strict=True):
                         found[i] = l
                     level = 1
                     break
@@ -226,7 +226,7 @@ class CRAMSystem:
         else:
             raise AssertionError(
                 f"CRAM protocol failed to locate line {addr} (probe chain "
-                f"exhausted) — memory image corrupt"
+                "exhausted) — memory image corrupt"
             )
 
         if predicted is not None:

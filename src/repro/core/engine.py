@@ -133,7 +133,7 @@ def _set_hash_table(n_sets: int) -> np.ndarray:
     """(set * PHI) mod 1024 per LLC set; comparing against
     PARAM_SAMPLE_THRESH reproduces dynamic.is_sampled_set bit-for-bit with
     the sampling rate as traced data instead of a baked-in table."""
-    h = (np.arange(n_sets, dtype=np.uint64) * 0x9E3779B1) & 0xFFFFFFFF
+    h = (np.arange(n_sets, dtype=np.uint64) * HASH_MULT) & 0xFFFFFFFF
     return (h % 1024).astype(np.int32)
 
 
@@ -196,7 +196,7 @@ def build_engine(cfg: SimConfig) -> EngineParts:
         return (mtag, mlru, mdirty, mclock), deltas
 
     def _sel_state(apply, new, old):
-        return tuple(jnp.where(apply, n, o) for n, o in zip(new, old))
+        return tuple(jnp.where(apply, n, o) for n, o in zip(new, old, strict=True))
 
     def init_state(params):
         return (

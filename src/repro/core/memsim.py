@@ -124,7 +124,8 @@ def _jit_sim_chunked(scheme: schemes_registry.Scheme, cfg: SimConfig):
 
 def summarize_stats(scheme: str, stats_vec) -> SimResult:
     """Fold a raw N_STATS vector into a SimResult (shared with batchsim)."""
-    stats = dict(zip(STAT_NAMES, (int(x) for x in np.asarray(stats_vec))))
+    stats = dict(zip(STAT_NAMES, (int(x) for x in np.asarray(stats_vec)),
+                     strict=True))
     accesses = (
         stats["read_probes"] + stats["wb_dirty"] + stats["wb_clean"]
         + stats["il_writes"] + stats["meta_reads"] + stats["meta_wb"]

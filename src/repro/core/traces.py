@@ -135,7 +135,7 @@ def generate_trace(spec: WorkloadSpec, n_events: int, seed: int = 0):
             rng.integers(0, hot_lines, size=batch),
             rng.integers(0, n_lines, size=batch),
         )
-        for s, l in zip(starts, lens):
+        for s, l in zip(starts, lens, strict=True):
             segs_addr.append(np.arange(s, s + l, dtype=np.int64) % n_lines)
             total += int(l)
             if total >= n_events:

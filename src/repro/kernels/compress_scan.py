@@ -30,16 +30,18 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from repro.compression.framing import HEADER_BYTES, LINE_BYTES
+from repro.compression.framing import (DEFAULT_MARKER_KEY, HEADER_BYTES,
+                                       IL_MULT, LINE_BYTES, M2_MULT, M4_MULT)
 from repro.compression.marker import LineStatus
 
 WORDS_PER_LINE = 16
 BLOCK_LINES = 256
 
-# multiply-add marker family constants (odd multipliers; wrap mod 2^32)
-_M2_MULT = 0x9E3779B1
-_M4_MULT = 0x85EBCA6B
-_IL_MULT = 0x27D4EB2F
+# multiply-add marker family constants (odd multipliers; wrap mod 2^32) —
+# defined once in compression.framing, aliased here for kernel-local use
+_M2_MULT = M2_MULT
+_M4_MULT = M4_MULT
+_IL_MULT = IL_MULT
 
 # BDI modes as (base_bytes, delta_bytes, payload_bytes), evaluated from the
 # largest payload to the smallest exactly like core/bdi.bdi_sizes
@@ -51,7 +53,7 @@ _BDI_MODES = ((8, 4, 41), (4, 2, 38), (2, 1, 38), (8, 2, 25), (4, 1, 22),
 # host-side helpers + numpy reference (uint32 arithmetic, bit-identical)
 # ---------------------------------------------------------------------------
 
-def device_markers(slot_idx, key: int = 0x5EED):
+def device_markers(slot_idx, key: int = DEFAULT_MARKER_KEY):
     """(m2, m4) uint32 device markers for an array of slot indices."""
     idx = np.asarray(slot_idx, dtype=np.uint64) & np.uint64(0xFFFFFFFF)
     two = (np.uint64(2) * idx + np.uint64(1)) & np.uint64(0xFFFFFFFF)
@@ -61,7 +63,7 @@ def device_markers(slot_idx, key: int = 0x5EED):
     return m2.astype(np.uint32), m4.astype(np.uint32)
 
 
-def device_il_words(slot_idx, key: int = 0x5EED) -> np.ndarray:
+def device_il_words(slot_idx, key: int = DEFAULT_MARKER_KEY) -> np.ndarray:
     """(N, 16) uint32 invalid-line (Marker-IL) pattern per slot."""
     idx = np.asarray(slot_idx, dtype=np.uint64)[..., None]
     j = np.arange(WORDS_PER_LINE, dtype=np.uint64)[None, :]
@@ -70,7 +72,7 @@ def device_il_words(slot_idx, key: int = 0x5EED) -> np.ndarray:
     return (w & np.uint64(0xFFFFFFFF)).astype(np.uint32)
 
 
-def classify_image_ref(lines: np.ndarray, key: int = 0x5EED) -> np.ndarray:
+def classify_image_ref(lines: np.ndarray, key: int = DEFAULT_MARKER_KEY) -> np.ndarray:
     """Numpy reference for the kernel's marker classification.
 
     lines: (N, 64) uint8, line i living in slot i. Returns (N,) int32 of
@@ -178,7 +180,6 @@ def _ult(a, b):
 
 def _pick(sel, e):
     """Row-wise gather e[i, sel[i]] as a select-sum (TPU-friendly)."""
-    k = e.shape[-1]
     ids = jax.lax.broadcasted_iota(jnp.int32, e.shape, len(e.shape) - 1)
     return jnp.where(ids == sel[..., None], e, 0).sum(axis=-1)
 
@@ -290,7 +291,7 @@ def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def compress_scan(lines, *, key: int = 0x5EED, block: int = BLOCK_LINES,
+def compress_scan(lines, *, key: int = DEFAULT_MARKER_KEY, block: int = BLOCK_LINES,
                   interpret: bool | None = None) -> dict:
     """Scan a memory image in one kernel pass.
 

@@ -31,6 +31,7 @@ from . import ref as _ref
 from .bdi_pack import pack_pair, pack_quad
 from .cram_attention import (cram_decode_attention,
                              cram_decode_attention_batched)
+from ..compression.framing import DEFAULT_MARKER_KEY
 from .ref import MARKER_LANES, marker_to_lanes, slot_markers
 
 
@@ -55,7 +56,7 @@ def _pack_all(pages, markers_i16, *, interpret=True):
     return slots, strips, ok
 
 
-def build_cram_cache(pages, *, key: int = 0x5EED, interpret=None):
+def build_cram_cache(pages, *, key: int = DEFAULT_MARKER_KEY, interpret=None):
     """Pack logical pages (2n, page, Hkv, D2) int16 into a CRAM cache.
 
     Returns dict(slots, strips, markers (int32), packed_mask, pages_valid):
@@ -195,7 +196,7 @@ def _pack_all_quad(pages, markers_i16, *, interpret=True):
     return slots, over, strips, ok
 
 
-def build_cram_cache_quad(pages, *, key: int = 0x5EED, interpret=None):
+def build_cram_cache_quad(pages, *, key: int = DEFAULT_MARKER_KEY, interpret=None):
     """Pack logical pages (4n, page, Hkv, D2) int16 into a quad CRAM cache.
 
     The 4:1 analogue of build_cram_cache: groups of four consecutive pages

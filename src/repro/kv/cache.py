@@ -56,10 +56,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..bandwidth import Ledger
-from ..bandwidth.adapters import kv_window_fold
-from ..bandwidth.ledger import EV_READ, EV_REPACK, device_record, \
-    device_totals
-from ..compression.framing import DOMAIN_PAIR, DOMAIN_QUAD
+from ..bandwidth.adapters import (kv_read_device, kv_repack_device,
+                                  kv_window_fold)
+from ..bandwidth.ledger import device_totals
+from ..compression.framing import DEFAULT_MARKER_KEY, DOMAIN_PAIR, DOMAIN_QUAD
 from ..compression.gate import COUNTER_INIT, COUNTER_MAX, ENABLE_THRESHOLD
 from ..compression.predictor import observe_layout
 from ..kernels import ops as kops
@@ -99,16 +99,14 @@ def _scatter_tokens(pages, kv, start):
                                              "strip_bytes"))
 def _book_repack_device(traffic, packed_n, raw_n, lay, *, lanes,
                         slot_bytes, strip_bytes):
-    """Device-side repack booking: same byte model as the legacy
-    `adapters.kv_repack_event` host path (raw = every page written raw,
-    comp = slot+strip per packed group, lanes raw slots otherwise), but
-    accumulated into the pytree counters — no host sync per repack."""
+    """Device-side repack booking.  The byte model lives in
+    `adapters.kv_repack_device` (consumers never add byte counts — the
+    ledger contract, enforced by analysis rule R5); this wrapper only
+    carries the cache's packed/raw layout counters."""
     groups = lay.size
-    lay_n = lay.sum().astype(jnp.int32)
-    raw = groups * lanes * slot_bytes
-    comp = (lay_n * (slot_bytes + strip_bytes)
-            + (groups - lay_n) * (lanes * slot_bytes))
-    traffic = device_record(traffic, EV_REPACK, raw, comp, count=groups)
+    traffic, lay_n = kv_repack_device(traffic, lay, lanes=lanes,
+                                      slot_bytes=slot_bytes,
+                                      strip_bytes=strip_bytes)
     return traffic, packed_n + lay_n, raw_n + (groups - lay_n)
 
 
@@ -126,8 +124,7 @@ def _absorb_step_device(traffic, hits, misses, predictor, packed_mask,
     mis = pred != pm
     hits = hits + ((~mis) & live).sum(1).astype(jnp.int32)
     misses = misses + (mis & live).sum(1).astype(jnp.int32)
-    traffic = device_record(traffic, EV_READ, raw_seq.sum(), cram_seq.sum(),
-                            count=1)
+    traffic = kv_read_device(traffic, raw_seq, cram_seq)
     return traffic, hits, misses, observe_layout(packed_mask)
 
 
@@ -147,7 +144,7 @@ class CRAMKVCache:
 
     def __init__(self, max_pages: int, page: int, n_kv: int, head_dim: int,
                  *, batch: int = 1, policy: str = "dynamic",
-                 packing: str = "pair", key: int = 0x5EED,
+                 packing: str = "pair", key: int = DEFAULT_MARKER_KEY,
                  counter_init: int = COUNTER_INIT,
                  interpret: bool | None = None,
                  ledger: Ledger | None = None):
@@ -236,6 +233,15 @@ class CRAMKVCache:
     @property
     def n_pairs(self) -> int:
         return self.n_groups
+
+    @property
+    def host_stats(self) -> KVStats:
+        """The host dispatch counters ALONE (pack_attempts, pack_calls,
+        pack_pairs_processed, …) — NO device sync.  Timed loops that only
+        need the python-level repack tallies read this instead of `stats`,
+        which pulls four device counters back per access (analysis R3:
+        no host syncs inside timed regions)."""
+        return self._host_stats
 
     @property
     def stats(self) -> KVStats:

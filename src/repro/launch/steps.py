@@ -64,8 +64,6 @@ def cache_shardings(cache_shapes, mesh, rules: RuleSet):
 
 
 def make_prefill_step(model):
-    cfg = model.config
-
     def prefill_step(params, batch):
         h = model.forward(params, batch)
         # last-position logits only (next-token after the prompt)

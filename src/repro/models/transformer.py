@@ -203,7 +203,7 @@ def lm_forward(params, cfg: ModelConfig, tokens, image_embeds=None):
     if cfg.unroll:
         ns = n_supers(cfg)
         for i in range(ns):
-            bp = jax.tree.map(lambda t: t[i], params["blocks"])
+            bp = jax.tree.map(lambda t, i=i: t[i], params["blocks"])
             carry, _ = body(carry, bp)
         x, aux = carry
     else:
@@ -283,8 +283,8 @@ def lm_decode_step(params, cfg: ModelConfig, token, cache, index,
         ns = n_supers(cfg)
         caches = []
         for i in range(ns):
-            bp = jax.tree.map(lambda t: t[i], params["blocks"])
-            bc = jax.tree.map(lambda t: t[i], cache)
+            bp = jax.tree.map(lambda t, i=i: t[i], params["blocks"])
+            bc = jax.tree.map(lambda t, i=i: t[i], cache)
             x, nc = super_body(x, (bp, bc))
             caches.append(nc)
         new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)

@@ -87,7 +87,7 @@ def encode(params, cfg: ModelConfig, frames):
     body_fn = jax.checkpoint(body) if cfg.remat else body
     if cfg.unroll:
         for i in range(cfg.enc_layers):
-            x, _ = body_fn(x, jax.tree.map(lambda t: t[i],
+            x, _ = body_fn(x, jax.tree.map(lambda t, i=i: t[i],
                                            params["enc"]["blocks"]))
     else:
         x, _ = jax.lax.scan(body_fn, x, params["enc"]["blocks"])
@@ -112,7 +112,7 @@ def decode_train(params, cfg: ModelConfig, tokens, enc_out):
     body_fn = jax.checkpoint(body) if cfg.remat else body
     if cfg.unroll:
         for i in range(cfg.dec_layers):
-            x, _ = body_fn(x, jax.tree.map(lambda t: t[i],
+            x, _ = body_fn(x, jax.tree.map(lambda t, i=i: t[i],
                                            params["dec"]["blocks"]))
     else:
         x, _ = jax.lax.scan(body_fn, x, params["dec"]["blocks"])
@@ -189,7 +189,7 @@ def whisper_decode_step(params, cfg: ModelConfig, token, cache, index):
     if cfg.unroll:
         ks, vs = [], []
         for i in range(cfg.dec_layers):
-            x, (kc, vc) = body(x, jax.tree.map(lambda t: t[i], xs_all))
+            x, (kc, vc) = body(x, jax.tree.map(lambda t, i=i: t[i], xs_all))
             ks.append(kc)
             vs.append(vc)
         nk, nv = jnp.stack(ks), jnp.stack(vs)

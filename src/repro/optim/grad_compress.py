@@ -60,7 +60,8 @@ def compress_tree(grads, err):
                            is_leaf=lambda x: isinstance(x, tuple))
     num = sum(jnp.sum(jnp.square(a.astype(jnp.float32)
                                  - b.astype(jnp.float32)))
-              for a, b in zip(jax.tree.leaves(dq), jax.tree.leaves(grads)))
+              for a, b in zip(jax.tree.leaves(dq), jax.tree.leaves(grads),
+                  strict=True))
     den = sum(jnp.sum(jnp.square(b.astype(jnp.float32)))
               for b in jax.tree.leaves(grads))
     rel_err = jnp.sqrt(num / jnp.maximum(den, 1e-30))

@@ -63,7 +63,7 @@ def spec_for(logical_axes, shape, mesh: Mesh,
     rules_d = (rules or RuleSet()).as_dict()
     used: set[str] = set()
     out = []
-    for dim, name in zip(shape, logical_axes):
+    for dim, name in zip(shape, logical_axes, strict=False):
         assigned = None
         if name is not None:
             for axis in rules_d.get(name, ()):
@@ -116,7 +116,7 @@ def zero_spec(spec: P, shape, mesh: Mesh, axis: str = "data") -> P:
     if axis in used:
         return spec
     best, best_dim = -1, -1
-    for i, (dim, e) in enumerate(zip(shape, entries)):
+    for i, (dim, e) in enumerate(zip(shape, entries, strict=True)):
         if e is None and dim % size == 0 and dim >= size and dim > best:
             best, best_dim = dim, i
     if best_dim < 0:

@@ -35,6 +35,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from ..bandwidth import AutoTuner, Ledger
+from ..compression.framing import DEFAULT_MARKER_KEY
 from ..compression.gate import COUNTER_INIT
 from ..kernels.ref import MARKER_LANES
 from .shard import shard_kv_attend
@@ -62,7 +63,7 @@ class ServeLoop:
                  packing: str = "pair", spill_packing: str = "quad",
                  spill_pages: int | None = None,
                  tuner: AutoTuner | None = None,
-                 ledger: Ledger | None = None, key: int = 0x5EED,
+                 ledger: Ledger | None = None, key: int = DEFAULT_MARKER_KEY,
                  counter_init: int = COUNTER_INIT,
                  interpret: bool | None = None):
         self.ledger = ledger if ledger is not None else Ledger("serve")
@@ -200,7 +201,7 @@ class ServeLoop:
         self.cache.account_step()
         for sid in ids:
             self.seqs[sid].last_step = self.clock
-        return dict(zip(ids, slot_ids))
+        return dict(zip(ids, slot_ids, strict=True))
 
     def step_all(self, kv_by_seq: dict) -> dict:
         """`step` for an oversubscribed batch: more named sequences than

@@ -41,6 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..bandwidth import Ledger
+from ..compression.framing import DEFAULT_MARKER_KEY
 from ..compression.gate import COUNTER_INIT, COUNTER_MAX, ENABLE_THRESHOLD
 from ..kernels import ops as kops
 from ..kernels.ref import MARKER_LANES
@@ -67,7 +68,7 @@ class SlotKVCache(CRAMKVCache):
 
     def __init__(self, max_pages: int, page: int, n_kv: int, head_dim: int,
                  *, batch: int = 1, policy: str = "dynamic",
-                 packing: str = "pair", key: int = 0x5EED,
+                 packing: str = "pair", key: int = DEFAULT_MARKER_KEY,
                  counter_init: int = COUNTER_INIT,
                  interpret: bool | None = None,
                  ledger: Ledger | None = None):

@@ -1,0 +1,9 @@
+"""R2 fixture: bypasses the compression registry three ways."""
+
+import numpy as np
+
+from repro.compression import fpc  # noqa: F401  (impl import, no sanction)
+
+
+def pack_pair(a, b):  # impl-signature name outside the registry
+    return np.packbits(a ^ b)  # bit-level packing is codec work

@@ -1,0 +1,19 @@
+"""R3 fixture: host syncs inside a jit body and a hot-named method."""
+
+import jax
+import numpy as np
+
+
+@jax.jit
+def decode_one(x):
+    y = np.asarray(x)          # materializes a traced value
+    return float(y.sum())      # and again
+
+
+class Loop:
+    def step(self, cache, ledger):
+        out = cache.attend()
+        ledger.record("read", out.nbytes, out.nbytes)  # per-step booking
+        total = out.sum()
+        jax.block_until_ready(total)                   # mid-loop sync
+        return total.item()                            # blocking sync

@@ -1,0 +1,8 @@
+"""R4 fixture: process-salted and global-state seeding."""
+
+import numpy as np
+
+
+def trace_seed(name: str) -> int:
+    np.random.seed(0)          # global-state seeding
+    return hash(name) & 0xFFFF  # salted per process (PYTHONHASHSEED)

@@ -1,0 +1,12 @@
+"""R6 fixture: swallowed kernel errors and float64 promotion."""
+
+import jax.numpy as jnp
+
+
+def safe_decode(kernel, pages):
+    try:
+        return kernel(pages)
+    except:  # noqa: E722  bare except around a pallas_call
+        pass
+    acc = pages.astype(float)              # promotes to float64
+    return jnp.zeros_like(acc, dtype=jnp.float64)

@@ -1,0 +1,133 @@
+"""The analyzer analyzes the analyzer's fixtures — and the real tree.
+
+Three contracts:
+
+  * each rule FIRES on its known-bad fixture (and the CLI exits non-zero
+    on it), so a rule that silently stops matching is caught here, not by
+    the absence of findings in CI;
+  * the rule engine is CLEAN on today's src/repro + benchmarks — the
+    invariants in DESIGN.md §11 actually hold on the shipped tree;
+  * the jaxpr audit matches its committed golden, and `compare` actually
+    detects drift (a perturbed pinned count fails).
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import analyze, default_paths, render_report
+from repro.analysis.__main__ import main as cli_main
+
+FIXTURES = Path(__file__).parent / "fixtures" / "analysis"
+
+RULE_FIXTURES = {
+    "r1": FIXTURES / "r1_bad.py",
+    "r2": FIXTURES / "r2_bad.py",
+    "r3": FIXTURES / "r3_bad.py",
+    "r4": FIXTURES / "r4_bad.py",
+    "r5": FIXTURES / "repro" / "r5_bad.py",
+    "r6": FIXTURES / "repro" / "kernels" / "r6_bad.py",
+}
+
+# every fixture encodes >= this many distinct violations of its rule
+MIN_FINDINGS = {"r1": 1, "r2": 3, "r3": 5, "r4": 2, "r5": 2, "r6": 3}
+
+
+@pytest.mark.parametrize("rule", sorted(RULE_FIXTURES))
+def test_rule_fires_on_fixture(rule):
+    path = RULE_FIXTURES[rule]
+    found = analyze([path], rules=[rule])
+    assert len(found) >= MIN_FINDINGS[rule], \
+        f"{rule} found {len(found)} on its bad fixture: {found}"
+    assert all(v.rule == rule for v in found)
+    assert all(v.line > 0 for v in found)
+
+
+@pytest.mark.parametrize("rule", sorted(RULE_FIXTURES))
+def test_cli_exits_nonzero_on_fixture(rule):
+    assert cli_main([str(RULE_FIXTURES[rule])]) == 1
+
+
+def test_fixture_findings_are_rule_scoped():
+    """A fixture only has to be bad its OWN way: with all rules on, the
+    r5/r6 fixtures (path-scoped) still report their own rule."""
+    for rule, path in RULE_FIXTURES.items():
+        found = analyze([path])
+        assert any(v.rule == rule for v in found), (rule, found)
+
+
+def test_tree_is_clean():
+    violations = analyze(default_paths())
+    assert violations == [], "\n".join(str(v) for v in violations)
+
+
+def test_cli_clean_tree_exit_zero(tmp_path):
+    out = tmp_path / "report.json"
+    assert cli_main(["--report", "json", "--out", str(out)]) == 0
+    report = json.loads(out.read_text())
+    assert report["ok"] is True
+    assert report["counts"] == {}
+    assert report["files_scanned"] > 100
+    assert set(report["rules"]) == set(RULE_FIXTURES)
+
+
+def test_render_report_shape():
+    found = analyze([RULE_FIXTURES["r4"]], rules=["r4"])
+    report = render_report(found, files_scanned=1)
+    assert report["ok"] is False
+    assert report["counts"]["r4"] == len(found)
+    assert report["violations"][0]["rule"] == "r4"
+
+
+# ------------------------------------------------------------- jaxpr audit
+
+
+@pytest.fixture(scope="module")
+def jaxpr_report():
+    from repro.analysis import jaxpr_audit
+
+    return jaxpr_audit.audit()
+
+
+def test_jaxpr_hard_invariants(jaxpr_report):
+    from repro.analysis import jaxpr_audit
+
+    assert jaxpr_audit.hard_violations(jaxpr_report) == []
+
+
+def test_jaxpr_matches_golden(jaxpr_report):
+    from repro.analysis import jaxpr_audit
+
+    golden = json.loads(jaxpr_audit.GOLDEN_PATH.read_text())
+    assert jaxpr_audit.compare(jaxpr_report, golden) == []
+
+
+def test_jaxpr_compare_detects_drift(jaxpr_report):
+    from repro.analysis import jaxpr_audit
+
+    golden = json.loads(json.dumps(jaxpr_audit.golden_view(jaxpr_report)))
+    golden["entries"]["fused_decode_pair"]["pinned"]["pallas_call"] = 2
+    drift = jaxpr_audit.compare(jaxpr_report, golden)
+    assert any("fused_decode_pair" in m and "pallas_call" in m
+               for m in drift)
+
+
+def test_jaxpr_golden_pins_the_kernel_budget():
+    """The committed golden itself encodes the paper-level claims: one
+    fused pallas_call per decode shape, zero host callbacks anywhere."""
+    golden = json.loads(
+        (Path(__file__).parent / "golden" / "jaxpr_audit.json").read_text())
+    entries = golden["entries"]
+    for shape in ("fused_decode_pair", "fused_decode_quad",
+                  "fused_decode_batched"):
+        assert entries[shape]["pinned"]["pallas_call"] == 1
+    for entry in entries.values():
+        for cb in ("pure_callback", "io_callback", "debug_callback"):
+            assert entry["pinned"].get(cb, 0) == 0
+        assert entry["f64"] is False
+    assert entries["serve_scatters"]["donation"] is True
+    assert entries["serve_scatters"]["pinned"]["scatter_tokens_donation"]
+    assert entries["ckpt_pack_batch"]["pinned"]["jax_arrays_created"] == 0

@@ -203,7 +203,8 @@ def test_checkpoint_manifest_equals_ledger(tmp_path):
     # tensor classes split by the taxonomy
     assert led.total("write", tensor_class="moments")["raw_bytes"] > 0
     assert classify_tensor("opt/moments") == "moments"
-    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(tree),
+                    strict=True):
         assert np.array_equal(a, b)
 
 
@@ -222,7 +223,8 @@ def test_checkpoint_auto_roundtrip_and_never_worse_than_raw(tmp_path):
     save_checkpoint(tmp_path / "raw", 1, tree, codec="raw", ledger=led_raw)
     out, man = load_checkpoint(tmp_path / "auto", 1,
                                jax.tree.map(np.zeros_like, tree))
-    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(tree),
+                    strict=True):
         assert np.array_equal(a, b)
     # per-leaf codecs recorded; zero-heavy moments leaf must compress
     by_key = {m["key"]: m for m in man["leaves"]}

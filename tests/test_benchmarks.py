@@ -25,7 +25,7 @@ def _summary(schemes, accuracy=0.97):
              "wb_clean": 3, "il_writes": 0, "meta_reads": 4, "meta_wb": 0,
              "pf_extra_access": 0}
     return {
-        "workload": "x", "f": 0.5, "baseline_accesses": 100,
+        "workload": "x", "": 0.5, "baseline_accesses": 100,
         "schemes": {
             s: {"accesses": 90, "speedup": 1.05, "llp_accuracy": accuracy,
                 "meta_hit_rate": 0.5, "breakdown": dict(breakdown),

@@ -113,7 +113,7 @@ def test_page_codec_three_backends_agree(name, n, compressible):
     assert bool(ok_np) == compressible
     if ok_np:
         rt = codec.unpack_pages(packed_np, base_np, xp=np)
-        for got, want in zip(rt, pages):
+        for got, want in zip(rt, pages, strict=True):
             assert np.array_equal(got, want)
     # jnp path
     ok_j, packed_j, base_j = codec.pack_pages(
@@ -130,7 +130,7 @@ def test_page_codec_three_backends_agree(name, n, compressible):
     out_k = unpack_k(jnp.asarray(packed_np), jnp.asarray(base_np),
                      interpret=True)
     want = codec.unpack_pages(packed_np, base_np, xp=np)
-    for got, ref in zip(out_k, want):
+    for got, ref in zip(out_k, want, strict=True):
         assert np.array_equal(np.asarray(got), ref)
 
 

@@ -97,7 +97,6 @@ def test_bdi_modes_exact_sizes():
 
 
 def test_vectorized_batch_consistency():
-    rng = np.random.default_rng(7)
     batch = np.stack([_make_line(k, i) for i, k in enumerate(
         ["zeros", "rep8", "base_delta4", "random"] * 8)])
     sizes = compress.compressed_sizes(batch)

@@ -183,12 +183,11 @@ def test_retired_slots_are_reused_no_batch_growth():
     # a reused lane starts pristine: admit after retire matches solo
     loop.admit(99, *_stream(rng, 2 * PAGE))
     loop.cache.repack()
-    solo = _solo_like(loop)                   # replay is impossible if the
-    # lane kept ghosts: rebuild oracle over the slot's own prefix
+    # replay is impossible if the lane kept ghosts: rebuild the oracle
+    # over the slot's own prefix
     _assert_state_equal(
         loop.cache.slot_physical_state(loop.seqs[99].slot),
         _snap(loop.cache.slot_reference_state(loop.seqs[99].slot)))
-    del solo
 
 
 def test_admit_evicts_coldest_when_full():

@@ -19,7 +19,7 @@ def fake_mesh(shape=(16, 16), axes=("data", "model")):
         pass
 
     m = _M()
-    m.shape = dict(zip(axes, shape))
+    m.shape = dict(zip(axes, shape, strict=True))
     return m
 
 

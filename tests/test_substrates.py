@@ -42,7 +42,7 @@ def test_checkpoint_roundtrip(tmp_path):
     save_checkpoint(tmp_path, 3, tree, codec="cram")
     like = jax.tree.map(lambda x: np.zeros_like(x), tree)
     out, manifest = load_checkpoint(tmp_path, None, like)
-    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(tree), strict=True):
         assert np.array_equal(a, b)
     assert manifest["step"] == 3
     assert latest_step(tmp_path) == 3
@@ -92,7 +92,6 @@ def test_adamw_learns_and_microbatch_equivalence():
     step1 = jax.jit(make_train_step(model, lr_peak=1e-2, microbatches=1))
     step4 = jax.jit(make_train_step(model, lr_peak=1e-2, microbatches=4))
     s1 = adamw_init(params)
-    s4 = adamw_init(params)
     losses = []
     for _ in range(5):
         s1, m = step1(s1, batch)
