@@ -76,10 +76,18 @@ The consolidated JSON report written by --sweep has this schema:
                         summaries, wall_s, wake_state_parity},
         "incompressible_quad": same curve on a noise stream,
         "spill_bytes": {spill_packing: {raw, stored, saving}},
+        "migration":   {"gate"/"repack": live-migration churn curve —
+                        per-phase tokens/s (steady / migrating /
+                        spill_churn), no_stall, bit_identical},
         "guarantee":   {same_schedule_across_packings,
                         compressed_moves_fewer_bytes, spill_no_slowdown,
-                        wake_state_parity}      # the flags CI enforces
+                        wake_state_parity, migration_no_stall,
+                        migration_bit_identical}  # the flags CI enforces
       },
+      # a serve-spill sweep also APPENDS one compact throughput entry
+      # (git short sha, per-phase tokens/s, guarantee flags) to
+      # BENCH_history.json at the repo root — the trend line across PRs,
+      # where BENCH_serve.json is only the latest snapshot
       "kernels": {                      # present for --sweep kernels/all
         "modes": {"lanes2"/"lanes4": {"rows": [per block_groups tiling:
                    us_per_call, max_err_vs_oracle, numerics_parity,
@@ -224,6 +232,38 @@ def _sweep_serve_spill(args) -> dict:
     return spill_sweep(steps=args.serve_steps)
 
 
+def _append_bench_history(report: dict) -> None:
+    """Append one compact serve-tier throughput entry to the repo-root
+    BENCH_history.json — BENCH_serve.json is overwritten each run, the
+    history keeps the per-phase tokens/s trend across commits."""
+    sp = report.get("serve_spill")
+    if not sp:
+        return
+    try:
+        import subprocess
+        sha = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             capture_output=True, text=True, cwd=_ROOT,
+                             check=True).stdout.strip()
+    except Exception:
+        sha = "unknown"
+    entry = {
+        "sha": sha,
+        "date": time.strftime("%Y-%m-%d"),
+        "tokens_per_s": sp["tokens_per_s"],
+        "migration_phases": {
+            mode: {ph: d["tokens_per_s"] for ph, d in m["phases"].items()}
+            for mode, m in sp["migration"].items()},
+        "guarantee": sp["guarantee"],
+    }
+    path = _ROOT / "BENCH_history.json"
+    try:
+        hist = json.loads(path.read_text()) if path.exists() else []
+    except json.JSONDecodeError:
+        hist = []
+    hist.append(entry)
+    path.write_text(json.dumps(hist, indent=1))
+
+
 def run_sweep(args) -> None:
     # --events/--workloads/--schemes only shape the memsim section; the
     # compress scan always covers the fixed Fig. 4 corpus, so record the
@@ -283,10 +323,16 @@ def run_sweep(args) -> None:
         sb = report["serve_spill"]["spill_bytes"]
         print("serve-spill savings:",
               " ".join(f"{spk}={d['saving']:.4f}" for spk, d in sb.items()))
+        mig = report["serve_spill"]["migration"]
+        print("serve-migration:",
+              " ".join(f"{mode}={m['migrating_over_steady']:.2f}x"
+                       f"(pend={m['pending_columns_at_flip']})"
+                       for mode, m in mig.items()))
         flags = report["serve_spill"]["guarantee"]
         print("serve-spill guarantee:", flags)
         if not all(flags.values()):
             print("SERVE-SPILL GUARANTEE VIOLATED", file=sys.stderr)
+        _append_bench_history(report)
     if args.sweep in ("kernels", "all"):
         report["kernels"] = _sweep_kernels(args)
         for mode, m in report["kernels"]["modes"].items():

@@ -4,7 +4,9 @@ interpret-mode benches can't see.
 Every entry below is the actual production function (not a test double):
 the engine's jitted chunk scan, the fused decode-on-compressed kernel in
 its three deployment shapes, the incremental pack window, the serve
-tier's donated scatters, and the KV cache's device-side booking jits.
+tier's donated scatters, the fused serve megastep (append + repack +
+booking as one donated dispatch), and the KV cache's device-side booking
+jits.
 For each, the audit statically asserts:
 
   * zero `pure_callback`/`io_callback`/`debug_callback` primitives — a
@@ -81,9 +83,10 @@ def _dtypes(jaxpr, acc: set) -> set:
 
 
 def _traced_entry(fn, *args, donated_fn=None, donate_args=None,
-                  **kwargs) -> dict:
+                  donate_kwargs=None, **kwargs) -> dict:
     """Trace fn(*args, **kwargs); optionally check donation on
-    `donated_fn` (a jitted callable lowered with `donate_args`)."""
+    `donated_fn` (a jitted callable lowered with `donate_args` /
+    `donate_kwargs` — the latter carries static_argnames)."""
     import jax
 
     closed = jax.make_jaxpr(lambda *a: fn(*a, **kwargs))(*args)
@@ -91,7 +94,8 @@ def _traced_entry(fn, *args, donated_fn=None, donate_args=None,
     dts = sorted(_dtypes(closed.jaxpr, set()))
     donation = None
     if donated_fn is not None:
-        text = donated_fn.lower(*(donate_args or args)).as_text()
+        text = donated_fn.lower(*(donate_args or args),
+                                **(donate_kwargs or {})).as_text()
         donation = "tf.aliasing_output" in text
     return {
         "pinned": {p: int(counts.get(p, 0)) for p in PINNED_PRIMITIVES},
@@ -228,6 +232,40 @@ def _entry_kv_step_booking() -> dict:
                          st["packed_mask"], valid, raw, raw)
 
 
+def _entry_serve_megastep() -> dict:
+    """The fused serve decode step (`SlotKVCache._megastep`): append
+    scatter, window repack, §VI counter update, byte booking and the LLP
+    observation as ONE donated jit.  The zero-stall serving contract —
+    zero callbacks, whole-state donation taking effect, exactly one
+    pallas_call (the pack kernel's) per step."""
+    import jax.numpy as jnp
+
+    from ..kv import synthetic_kv_stream
+    from ..serving.slots import SlotKVCache, _megastep
+
+    rng = np.random.default_rng(0)
+    cache = SlotKVCache(max_pages=4, page=8, n_kv=1, head_dim=32, batch=2,
+                        policy="static", interpret=True)
+    k0, v0 = synthetic_kv_stream(rng, 2, 8, 1, 32)
+    cache.megastep([0, 1], k0, v0)
+    # one decode-token step's arguments, built exactly as the wrapper does
+    k, v = synthetic_kv_stream(rng, 2, 1, 1, 32)
+    idx = np.array([0], np.int32)
+    n = cache._active_bucket()
+    kwargs = dict(lanes=cache.group_lanes, slot_bytes=cache.slot_bytes,
+                  strip_bytes=cache.strip_bytes, use_pack=True, dyn=False,
+                  interpret=True)
+    args = (cache.state, cache._marker_lanes, jnp.asarray(k),
+            jnp.asarray(v), jnp.asarray([0, 1], jnp.int32),
+            jnp.asarray(cache.tokens_b, jnp.int32),
+            jnp.ones((2,), bool), jnp.asarray(idx),
+            jnp.asarray(cache._gate_b), jnp.zeros((2, 1), bool),
+            jnp.asarray(
+                cache.valid_per_page()[:, : cache.group_lanes * n]))
+    return _traced_entry(_megastep, *args, donated_fn=_megastep,
+                         donate_kwargs=kwargs, **kwargs)
+
+
 def _entry_ckpt_pack_batch() -> dict:
     """checkpoint pack_batch: host-resident by design — zero jax arrays
     created, numpy in, numpy out, for every registered batch codec."""
@@ -263,6 +301,7 @@ ENTRIES = {
     "fused_decode_batched": lambda: _fused_decode(2, batched=True),
     "pack_window": _entry_pack_window,
     "serve_scatters": _entry_serve_scatters,
+    "serve_megastep": _entry_serve_megastep,
     "kv_step_booking": _entry_kv_step_booking,
     "ckpt_pack_batch": _entry_ckpt_pack_batch,
 }
@@ -291,6 +330,10 @@ def hard_violations(report: dict) -> list[str]:
         if name.startswith("fused_decode") and \
                 pinned.get("pallas_call") != 1:
             bad.append(f"{name}: expected exactly 1 pallas_call, found "
+                       f"{pinned.get('pallas_call')}")
+        if name == "serve_megastep" and pinned.get("pallas_call") != 1:
+            bad.append(f"{name}: the fused serve step must carry exactly "
+                       f"1 pallas_call (the pack kernel), found "
                        f"{pinned.get('pallas_call')}")
     if report.get("ckpt_pack_batch", {})["pinned"].get("jax_arrays_created"):
         bad.append("ckpt_pack_batch: checkpoint batch pack dispatched jax "

@@ -61,10 +61,15 @@ class PolicyChoice:
     choice: str                    # selected registry entry / packing
     expected: dict = field(default_factory=dict)   # candidate -> bytes/unit
     basis: str = "tables"          # "tables" | "probe" | "ledger"
+    preferred: str = ""            # the model pick BEFORE §VI gate
+                                   # suppression (== choice unless the
+                                   # gate forced "off") — a live re-enable
+                                   # migrates to this, not to a default
 
     def as_dict(self) -> dict:
         return {"target": self.target, "choice": self.choice,
-                "expected": dict(self.expected), "basis": self.basis}
+                "expected": dict(self.expected), "basis": self.basis,
+                "preferred": self.preferred}
 
 
 def kv_expected_bytes_per_page(fit_rate: float, lanes: int,
@@ -237,13 +242,17 @@ class AutoTuner:
                 kv_spill_bytes_per_page(fr, lanes, slot_bytes, page))
         choice = min(expected, key=lambda p: (expected[p],
                                               KV_PACKINGS.index(p)))
-        # no-slowdown guarantee: a packing must beat "off" by the margin,
-        # and a disabled §VI gate (measured harm) forces "off"
-        if (expected[choice] > expected["off"] * (1.0 - self.margin)
-                or not self.gate_enabled(gate_key)):
+        # no-slowdown guarantee: a packing must beat "off" by the margin
+        if expected[choice] > expected["off"] * (1.0 - self.margin):
+            choice = "off"
+        # `preferred` is the model's pick; a disabled §VI gate (measured
+        # harm) suppresses it to "off" in `choice` — recording both lets a
+        # later live re-enable migrate to the pick instead of a default
+        preferred = choice
+        if not self.gate_enabled(gate_key):
             choice = "off"
         target = "kv" if tier == "hot" else "kv-spill"
-        return PolicyChoice(target, choice, expected, basis)
+        return PolicyChoice(target, choice, expected, basis, preferred)
 
     # --------------------------------------------------- checkpoint codec
     def choose_ckpt_codec(self, sample_lines=None, *,

@@ -176,6 +176,27 @@ def raw_quad_window(pages):
     return pages[:, :, 0], pages[:, :, 1:], strips, none, none
 
 
+def layout_window(win, marker_lanes, enabled, *, use_pack, interpret=True):
+    """Dispatch one gathered dirty window to the right layout kernel.
+
+    win: (B, W, lanes, page, Hkv, D2) int16 — lanes (2 or 4) selects the
+    pair/quad family; `use_pack=False` is the `policy="off"` path (raw
+    layout, never launches the pack kernel).  The shared entry for the
+    incremental repack and the fused serve megastep — one place owns the
+    pack/raw x pair/quad product.  Returns the five window outputs
+    (slots, overflow, strips, layout_packed, fit)."""
+    lanes = win.shape[2]
+    assert lanes in (2, 4), lanes
+    if lanes == 2:
+        if not use_pack:
+            return raw_window(win[:, :, 0], win[:, :, 1])
+        return pack_window(win[:, :, 0], win[:, :, 1], marker_lanes,
+                           enabled, interpret=interpret)
+    if not use_pack:
+        return raw_quad_window(win)
+    return pack_quad_window(win, marker_lanes, enabled, interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def _pack_all_quad(pages, markers_i16, *, interpret=True):
     """pages: (4n, page, Hkv, D2) int16 -> (slots, overflow, strips, ok)."""

@@ -128,6 +128,18 @@ def _absorb_step_device(traffic, hits, misses, predictor, packed_mask,
     return traffic, hits, misses, observe_layout(packed_mask)
 
 
+def kernel_cache_slice(state: dict, n: int) -> dict:
+    """The decode-kernel view of a cache state pytree, restricted to the
+    first `n` page groups — the shape every fused consumer (attend,
+    byte accounting, `SlotKVCache._megastep`) feeds the kernels.  Pure
+    slicing: safe inside jit and on host state alike."""
+    return {"slots": state["slots"][:, :n],
+            "slots_overflow": state["slots_overflow"][:, :n],
+            "strips": state["strips"][:, :n],
+            "packed_mask": state["packed_mask"][:, :n],
+            "markers": state["markers"][:n]}
+
+
 @functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3))
 def _scatter_window(slots, over, strips, mask, idx, slots_w, over_w,
                     strips_w, lay):
@@ -326,18 +338,10 @@ class CRAMKVCache:
         """Dispatch the dirty window to the layout's pack/raw kernels.
 
         win: (B, W, lanes, page, n_kv, d2) gathered dirty groups."""
-        if self.packing == "pair":
-            a, b = win[:, :, 0], win[:, :, 1]
-            if self.policy == "off":
-                return kops.raw_window(a, b)
-            return kops.pack_window(a, b, self._marker_lanes[idx_j],
-                                    jnp.asarray(enabled),
-                                    interpret=self.interpret)
-        if self.policy == "off":
-            return kops.raw_quad_window(win)
-        return kops.pack_quad_window(win, self._marker_lanes[idx_j],
-                                     jnp.asarray(enabled),
-                                     interpret=self.interpret)
+        return kops.layout_window(win, self._marker_lanes[idx_j],
+                                  jnp.asarray(enabled),
+                                  use_pack=self.policy != "off",
+                                  interpret=self.interpret)
 
     def _book_repack(self, w: int, enabled, lay) -> None:
         """Host dispatch counters + device byte/layout booking for one
@@ -450,12 +454,7 @@ class CRAMKVCache:
         return min(1 << (n - 1).bit_length(), self.n_groups)
 
     def _kernel_cache(self, n: int) -> dict:
-        st = self.state
-        return {"slots": st["slots"][:, :n],
-                "slots_overflow": st["slots_overflow"][:, :n],
-                "strips": st["strips"][:, :n],
-                "packed_mask": st["packed_mask"][:, :n],
-                "markers": st["markers"][:n]}
+        return kernel_cache_slice(self.state, n)
 
     def account_step(self) -> dict:
         """One decode step's bandwidth accounting + LLP predictor update.

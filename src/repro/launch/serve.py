@@ -53,7 +53,9 @@ def _serve_tier(args, cfg, cache, ledger, *, prompt_len, total_tokens):
     n_need = -(-T // page)
     kw = dict(slots=args.slots or B, max_pages=max(n_need, 2), page=page,
               n_kv=hkv, head_dim=hd, spill_pages=args.spill_pages,
-              ledger=ledger)
+              ledger=ledger, fused=not args.unfused,
+              migrate_budget=args.migrate_budget,
+              async_spill=not args.sync_spill)
     choices = None
     if args.kv_policy == "auto":
         # auto picks BOTH tiers' packings; --spill-packing only applies
@@ -143,6 +145,16 @@ def main(argv=None) -> dict:
     ap.add_argument("--spill-packing", default="quad",
                     choices=["off", "pair", "quad"],
                     help="spill-tier packing (auto overrides it)")
+    ap.add_argument("--migrate-budget", type=int, default=1,
+                    help="page-group columns re-laid per decode step when "
+                         "a live gate flip / packing switch is migrating "
+                         "the cache (0 disables incremental migration)")
+    ap.add_argument("--unfused", action="store_true",
+                    help="run the legacy append/repack/account dispatch "
+                         "sequence instead of the fused megastep")
+    ap.add_argument("--sync-spill", action="store_true",
+                    help="re-encode spill payloads inline on evict "
+                         "instead of on the background worker")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 

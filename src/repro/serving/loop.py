@@ -1,30 +1,44 @@
 """ServeLoop: continuous batching over slot-reused KV lanes + spill tier.
 
-The production serve loop (DESIGN.md §9): a fixed pool of `slots` batch
-lanes in one `SlotKVCache`, a `SequenceSlot` record per live sequence,
-and a compressed `SpillStore` behind them.
+The production serve loop (DESIGN.md §9, §12): a fixed pool of `slots`
+batch lanes in one `SlotKVCache`, a `SequenceSlot` record per live
+sequence, and a compressed `SpillStore` behind them.
 
   admit   — take the lowest free slot (evicting the coldest active
             sequence to the spill tier when none is free) and prefill it;
   step    — one fused decode append for every sequence named this step
             (spilled ones are woken first; wake evictions never pick a
-            step-named sequence), then the batched bandwidth accounting.
+            step-named sequence).  The default `fused=True` path runs the
+            whole step — append scatter, window repack carrying the
+            migration quantum, §VI counter update, byte booking — as ONE
+            donated jitted `megastep` with zero host syncs; `fused=False`
+            keeps the legacy append/repack/account dispatch sequence.
             One fused step carries at most `slots` sequences; `step_all`
-            chunks an oversubscribed batch into waves;
+            chunks an oversubscribed batch into waves and prefetches the
+            later waves' spill payload decodes behind the current wave;
   attend  — one batched decode-attend over the whole slot axis (inactive
             lanes are masked by their zero valid counts), optionally
             sharded across devices (`serving.shard`);
   retire  — reset the lane and hand it to the next admit: the batch axis
             NEVER grows, slots are reused (tests pin this);
   evict / wake — explicit spill-tier crossings, each booking exactly one
-            ledger `spill` event with compressed duals.
+            ledger `spill` event with compressed duals.  With the default
+            `async_spill=True` the evict-side re-encode runs on a
+            background worker and books at collection (`sync_ledger`
+            flushes), so the crossing never serializes in front of a
+            decode step.
 
 Per-tier autotuning: `ServeLoop.auto` asks one `AutoTuner` for the hot
 packing (decode DMA model, gate key "kv-hot") and the spill packing
 (spill-link model, gate key "kv-spill") from the same KV sample, and
 `observe_tiers()` feeds each tier's §VI counter from its own ledger rows
 — hot from "read" traffic, spill from "spill" traffic — so a tier whose
-live traffic stops compressing is gated off independently.
+live traffic stops compressing is gated off independently.  The gate
+decision is LIVE: when an observation window re-enables a hot gate that
+had suppressed the tuner's packing pick, `observe_tiers` migrates the
+running cache to that recorded pick (`PolicyChoice.preferred`) via
+`migrate_to` — incrementally, `migrate_budget` page-group columns per
+decode step, never blocking a step (see `serving.migrate`).
 """
 
 from __future__ import annotations
@@ -32,6 +46,7 @@ from __future__ import annotations
 from bisect import insort
 from dataclasses import dataclass, field
 
+import jax.numpy as jnp
 import numpy as np
 
 from ..bandwidth import AutoTuner, Ledger
@@ -65,7 +80,9 @@ class ServeLoop:
                  tuner: AutoTuner | None = None,
                  ledger: Ledger | None = None, key: int = DEFAULT_MARKER_KEY,
                  counter_init: int = COUNTER_INIT,
-                 interpret: bool | None = None):
+                 interpret: bool | None = None,
+                 fused: bool = True, migrate_budget: int = 1,
+                 async_spill: bool = True):
         self.ledger = ledger if ledger is not None else Ledger("serve")
         self.cache = SlotKVCache(max_pages, page, n_kv, head_dim,
                                  batch=slots, policy=policy, packing=packing,
@@ -73,22 +90,32 @@ class ServeLoop:
                                  interpret=interpret, ledger=self.ledger)
         self.spill = SpillStore(packing=spill_packing,
                                 capacity_pages=spill_pages,
-                                ledger=self.ledger)
+                                ledger=self.ledger,
+                                async_spill=async_spill)
         self.tuner = tuner
         self.n_slots = slots
+        self.fused = fused
+        self.migrate_budget = migrate_budget
         self._free = list(range(slots))       # kept sorted: lowest first
         self.seqs: dict[int, SequenceSlot] = {}
         self.clock = 0
         self.counts = {"admitted": 0, "retired": 0, "evicted": 0,
                        "woken": 0}
         self.choices: dict = {}
+        # the tuner's hot pick while the gate suppressed it to "off" —
+        # a live re-enable migrates to THIS, not to a default
+        self.suppressed_packing: str | None = None
+        self._gate_seen: dict[str, bool] = {}
 
     @classmethod
     def auto(cls, tuner: AutoTuner, k_sample, v_sample, *, slots: int,
              max_pages: int, page: int, n_kv: int, head_dim: int, **kw):
         """`--kv-policy auto`: per-tier packing from one KV sample — hot
         under the decode DMA model, spill under the spill-link model, each
-        with its own gate key.  Returns (loop, {"hot": .., "spill": ..})."""
+        with its own gate key.  Returns (loop, {"hot": .., "spill": ..}).
+        A gate-suppressed hot pick is RECORDED (`suppressed_packing`), so
+        a later re-enabling observation window migrates the live cache to
+        the tuner's actual pick instead of restarting at a default."""
         d2 = 2 * head_dim
         slot_bytes = page * n_kv * d2 * 2
         strip_bytes = n_kv * (d2 + MARKER_LANES) * 2
@@ -104,6 +131,9 @@ class ServeLoop:
                    head_dim=head_dim, policy=policy, packing=packing,
                    spill_packing=spl.choice, tuner=tuner, **kw)
         loop.choices = {"hot": hot, "spill": spl}
+        if hot.choice == "off" and hot.preferred not in ("", "off"):
+            loop.suppressed_packing = hot.preferred
+        loop._gate_seen["kv-hot"] = tuner.gate_enabled("kv-hot")
         return loop, loop.choices
 
     # --------------------------------------------------------- scheduling
@@ -146,7 +176,8 @@ class ServeLoop:
     def evict(self, seq_id=None, *,
               protect: frozenset = frozenset()) -> SequenceSlot:
         """Spill one active sequence compressed — `seq_id`, or the coldest
-        active one outside `protect`."""
+        active one outside `protect`.  The slot frees immediately; with
+        async spill the payload re-encode overlaps the next steps."""
         rec = self.seqs[seq_id] if seq_id is not None else (
             self._coldest_active(protect))
         self.spill.evict(self.cache, rec.slot, rec.seq_id)  # resets slot
@@ -176,10 +207,12 @@ class ServeLoop:
         first, and the wake evictions never pick a step-named sequence —
         its last_step only advances below, so the coldest-active ordering
         could otherwise evict a sequence this very step is about to
-        append to, leaving slot=-1 in the scatter.  The append is one
-        fused scatter, so at most `n_slots` sequences fit one step;
-        `step_all` chunks a larger batch into waves.  Returns
-        {seq_id: slot}."""
+        append to, leaving slot=-1 in the scatter.  The per-step batch is
+        assembled ON DEVICE (`jnp.stack` — device-resident k/v never
+        round-trip through host), and the fused path runs append + repack
+        + migration quantum + booking as one donated `megastep` dispatch.
+        At most `n_slots` sequences fit one step; `step_all` chunks a
+        larger batch into waves.  Returns {seq_id: slot}."""
         self.clock += 1
         ids = sorted(kv_by_seq)
         if len(ids) > self.n_slots:
@@ -195,10 +228,15 @@ class ServeLoop:
             rec = self.seqs[sid]
             assert not rec.spilled and rec.slot >= 0, (sid, rec)
             slot_ids.append(rec.slot)
-        k = np.stack([np.asarray(kv_by_seq[sid][0]) for sid in ids])
-        v = np.stack([np.asarray(kv_by_seq[sid][1]) for sid in ids])
-        self.cache.append_active(slot_ids, k, v)
-        self.cache.account_step()
+        k = jnp.stack([jnp.asarray(kv_by_seq[sid][0]) for sid in ids])
+        v = jnp.stack([jnp.asarray(kv_by_seq[sid][1]) for sid in ids])
+        if self.fused:
+            self.cache.megastep(slot_ids, k, v,
+                                budget=self.migrate_budget)
+        else:
+            self.cache.append_active(slot_ids, k, v)
+            self.cache.migration_quantum(self.migrate_budget)
+            self.cache.account_step()
         for sid in ids:
             self.seqs[sid].last_step = self.clock
         return dict(zip(ids, slot_ids, strict=True))
@@ -208,12 +246,18 @@ class ServeLoop:
         slots cannot share one fused append, so they run in waves of at
         most `n_slots` — active sequences first (already resident), then
         spilled ones, whose wakes may evict earlier waves' members (those
-        have been appended by then).  Each wave is one fused append with
-        its own byte accounting.  Returns the merged {seq_id: slot}, each
-        slot from its sequence's own wave."""
+        have been appended by then).  The spilled members' payload decodes
+        are PREFETCHED onto the spill worker up front, so they expand
+        behind the earlier waves' compute and their wakes find the pages
+        ready.  Each wave is one fused append with its own byte
+        accounting.  Returns the merged {seq_id: slot}, each slot from
+        its sequence's own wave."""
         ids = sorted(kv_by_seq)
         order = ([s for s in ids if not self.seqs[s].spilled]
                  + [s for s in ids if self.seqs[s].spilled])
+        for sid in order:
+            if self.seqs[sid].spilled:
+                self.spill.prefetch(sid, self.cache.page)
         out: dict = {}
         for i in range(0, len(order), self.n_slots):
             wave = order[i:i + self.n_slots]
@@ -242,22 +286,61 @@ class ServeLoop:
         repack bytes into device accumulators only — an N-step run makes
         ZERO host ledger records (spill crossings excepted: those are
         rare, host-driven events).  Report boundaries call this fold; it
-        costs O(1) `Ledger.record` calls regardless of N."""
+        costs O(1) `Ledger.record` calls regardless of N.  In-flight
+        async evictions are collected first so their exactly-once spill
+        events are booked before anything reads the rows."""
+        self.spill.flush()
         self.cache.sync_ledger()
+
+    def migrate_to(self, *, packing: str | None = None,
+                   policy: str | None = None) -> dict:
+        """Re-target the LIVE hot cache: optionally switch policy and/or
+        packing, then refresh the per-slot target gate.  Nothing is
+        re-laid here — the layout converges incrementally, at most
+        `migrate_budget` page-group columns per decode step, and
+        mid-migration reads stay correct via the in-band markers.
+        Returns the cache's migration status after re-targeting."""
+        if policy is not None:
+            assert policy in ("dynamic", "static", "off", "auto")
+            self.cache.policy = policy
+        if packing is not None:
+            self.cache.switch_packing(packing)
+        self.cache.refresh_gate()
+        return self.cache.migration_status()
 
     def observe_tiers(self) -> dict:
         """One §VI observation window per tier: hot judged on the decode
         "read" rows, spill on the "spill" rows — independent counters.
-        Folds the pending device window first so the rows are current."""
+        Folds the pending device window first so the rows are current.
+        The hot gate decision is applied LIVE: a window that re-enables a
+        gate which had suppressed the tuner's packing pick migrates the
+        running cache to that pick; a window that turns the gate off
+        re-targets the gate to off (both converge incrementally)."""
         if self.tuner is None:
             return {}
         self.sync_ledger()
-        return {
+        out = {
             "kv-hot": self.tuner.observe(self.ledger, key="kv-hot",
                                          consumer="kv", event="read"),
             "kv-spill": self.tuner.observe(self.ledger, key="kv-spill",
                                            consumer="kv", event="spill"),
         }
+        hot_on = self.tuner.gate_enabled("kv-hot")
+        prev = self._gate_seen.get("kv-hot")
+        if prev is not None and hot_on != prev:
+            if hot_on and self.suppressed_packing:
+                # the gate came back and the tuner's pick was on hold:
+                # migrate the live cache to it
+                self.migrate_to(policy="auto",
+                                packing=self.suppressed_packing)
+                self.suppressed_packing = None
+            elif not hot_on and self.cache.policy != "off":
+                # measured harm: remember the running packing and degrade
+                # the live layout to raw, incrementally
+                self.suppressed_packing = self.cache.packing
+                self.migrate_to(policy="off")
+        self._gate_seen["kv-hot"] = hot_on
+        return out
 
     # ------------------------------------------------------------ queries
     def active_seqs(self) -> list:
@@ -276,6 +359,8 @@ class ServeLoop:
             "spill_tier": self.spill.summary(),
             "hot_packing": (self.cache.packing
                             if self.cache.policy != "off" else "off"),
+            "suppressed_packing": self.suppressed_packing,
+            "migration": self.cache.migration_status(),
             "decode_saving": round(self.ledger.saving(
                 "read", consumer="kv"), 4),
         }

@@ -25,6 +25,21 @@ independently-progressing *slot*:
     `reference_rebuild` judges a uniform prefix, a slot's parity is
     judged on ITS OWN active prefix.
 
+Gate semantics (DESIGN.md §12): the gate each repack lays under is the
+frozen per-slot TARGET `_gate_b`, refreshed from the §VI counter only at
+observation boundaries (`refresh_gate` — called by the plain `repack`
+and by the serve loop's report points) or forced via
+`set_gate_override`.  `_applied_b` records the gate every group's
+layout was actually laid under; `serving.migrate` derives the pending
+set from the two and converges the live layout with bounded per-step
+quanta instead of stop-the-world re-dirtying.
+
+`megastep` is the fused serve step: append scatter, window repack
+(appends + migration quantum columns), §VI counter update, repack/read
+byte booking and the LLP predictor observation all run in ONE donated
+jitted dispatch, traced once per pow2-bucketed shape — the decode loop
+makes zero host syncs per step (`jaxpr_audit` pins the entry).
+
 The spill tier (`serving.spill.SpillStore`) moves slots out of and back
 into this cache; bit-exact resurrection rides on the pinned
 incremental==rebuild invariant (tests/test_kv_cache.py): restore writes
@@ -41,11 +56,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..bandwidth import Ledger
+from ..bandwidth.adapters import kv_read_device, kv_repack_device
 from ..compression.framing import DEFAULT_MARKER_KEY
 from ..compression.gate import COUNTER_INIT, COUNTER_MAX, ENABLE_THRESHOLD
+from ..compression.predictor import observe_layout
 from ..kernels import ops as kops
 from ..kernels.ref import MARKER_LANES
-from ..kv.cache import CRAMKVCache, _scatter_window
+from ..kv.cache import CRAMKVCache, _scatter_window, kernel_cache_slice
+from . import migrate as _migrate
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -63,6 +81,79 @@ def _scatter_active(pages, kv, starts, active):
     return jax.vmap(one)(pages, kv, starts, active)
 
 
+@functools.partial(
+    jax.jit, donate_argnums=(0,),
+    static_argnames=("lanes", "slot_bytes", "strip_bytes", "use_pack",
+                     "dyn", "interpret"))
+def _megastep(state, mk_lanes, k, v, slot_idx, starts, active, idx,
+              enabled, countable, valid, *, lanes, slot_bytes, strip_bytes,
+              use_pack, dyn, interpret):
+    """One fused serve decode step over the whole cache pytree (donated).
+
+    Collapses the per-step dispatch sequence — append scatter, window
+    gather + pack/raw re-lay (the window covers the step's dirty appends
+    AND the migration quantum's pending columns), physical scatter, §VI
+    counter update, repack + read byte booking, LLP hit/miss tally and
+    predictor observation — into one jitted call.  Bit-identical to the
+    unfused append_active -> repack -> account path on the same window.
+
+    k/v: (S, T, Hkv, D) rows aligned with slot_idx; idx: (W,) union dirty
+    group columns, pow2-padded by REPEATING a real column (idempotent re-
+    lay; the pad's `countable` entries are False so §VI never recounts);
+    valid: (B, lanes*N) live-token counts at the attend bucket.
+    """
+    st = dict(state)
+    kv = jnp.concatenate([jnp.asarray(k, jnp.bfloat16).view(jnp.int16),
+                          jnp.asarray(v, jnp.bfloat16).view(jnp.int16)],
+                         axis=-1)
+    b = st["pages"].shape[0]
+    t = kv.shape[1]
+    full = jnp.zeros((b, t) + kv.shape[2:], kv.dtype).at[slot_idx].set(kv)
+
+    def one(p, s, t0, a):
+        return jnp.where(a, jax.lax.dynamic_update_slice(p, s, (t0, 0, 0)), p)
+    st["pages"] = jax.vmap(one)(st["pages"], full, starts, active)
+
+    hkv, d2 = st["pages"].shape[-2:]
+    page = st["slots"].shape[2]
+    n_groups = st["packed_mask"].shape[1]
+    groups = st["pages"].reshape(b, n_groups, lanes, page, hkv, d2)
+    win = groups[:, idx]
+    slots_w, over_w, strips_w, lay, fit = kops.layout_window(
+        win, mk_lanes[idx], enabled, use_pack=use_pack,
+        interpret=interpret)
+    st["slots"] = st["slots"].at[:, idx].set(slots_w)
+    st["slots_overflow"] = st["slots_overflow"].at[:, idx].set(over_w)
+    st["strips"] = st["strips"].at[:, idx].set(strips_w)
+    st["packed_mask"] = st["packed_mask"].at[:, idx].set(lay)
+    traffic, lay_n = kv_repack_device(st["traffic"], lay, lanes=lanes,
+                                      slot_bytes=slot_bytes,
+                                      strip_bytes=strip_bytes)
+    st["packed_n"] = st["packed_n"] + lay_n
+    st["raw_n"] = st["raw_n"] + (lay.size - lay_n)
+    if dyn:
+        fit_n = (fit & countable).sum(1)
+        unfit_n = ((~fit) & countable).sum(1)
+        st["counter"] = jnp.clip(
+            st["counter"] + (fit_n - unfit_n).astype(jnp.int32),
+            0, COUNTER_MAX)
+    n = valid.shape[1] // lanes
+    kc = kernel_cache_slice(st, n)
+    raw_seq, cram_seq = kops.hbm_bytes_moved_device(
+        kc, valid, predictor=st["predictor"][:, :n], lanes=lanes)
+    pm = st["packed_mask"][:, :n]
+    pred = st["predictor"][:, :n]
+    live = valid.reshape(b, n, lanes).sum(-1) > 0
+    mis = pred != pm
+    st["pred_hits"] = st["pred_hits"] + ((~mis) & live).sum(1).astype(
+        jnp.int32)
+    st["pred_misses"] = st["pred_misses"] + (mis & live).sum(1).astype(
+        jnp.int32)
+    st["traffic"] = kv_read_device(traffic, raw_seq, cram_seq)
+    st["predictor"] = observe_layout(st["packed_mask"])
+    return st, raw_seq, cram_seq
+
+
 class SlotKVCache(CRAMKVCache):
     """CRAMKVCache whose batch lanes are independent sequence slots."""
 
@@ -72,6 +163,9 @@ class SlotKVCache(CRAMKVCache):
                  counter_init: int = COUNTER_INIT,
                  interpret: bool | None = None,
                  ledger: Ledger | None = None):
+        # a serve cache may live-migrate between pair and quad layouts:
+        # round capacity to the 4-page lcm so both geometries tile it
+        max_pages = -(-max_pages // 4) * 4
         super().__init__(max_pages, page, n_kv, head_dim, batch=batch,
                          policy=policy, packing=packing, key=key,
                          counter_init=counter_init, interpret=interpret,
@@ -84,6 +178,12 @@ class SlotKVCache(CRAMKVCache):
         # shared 1-D masks assume uniform appends and are superseded here)
         self._dirty_b = np.zeros((batch, self.n_groups), bool)
         self._uncounted_b = np.zeros((batch, self.n_groups), bool)
+        # migration state (serving.migrate): frozen per-slot target gate,
+        # per-(slot, group) applied gate — pending is DERIVED, not stored
+        self._gate_override: bool | None = None
+        self._gate_b = self._policy_gate()
+        self._applied_b = np.broadcast_to(
+            self._gate_b[:, None], (batch, self.n_groups)).copy()
 
     # ------------------------------------------------------- slot geometry
     def slot_pages(self, slot: int) -> int:
@@ -98,6 +198,58 @@ class SlotKVCache(CRAMKVCache):
                     - np.arange(self.max_pages)[None, :] * self.page,
                     0, self.page)
         return v.astype(np.int32)
+
+    # ------------------------------------------------------------ the gate
+    def _policy_gate(self) -> np.ndarray:
+        """(B,) bool target gate under the current policy / override.
+        The only place the §VI counter crosses to the host."""
+        if self._gate_override is not None:
+            return np.full(self.batch, self._gate_override, bool)
+        if self.policy == "off":
+            return np.zeros(self.batch, bool)
+        if self.policy == "static":
+            return np.ones(self.batch, bool)
+        return np.asarray(self.state["counter"]) >= ENABLE_THRESHOLD
+
+    def refresh_gate(self) -> np.ndarray:
+        """Re-sample the per-slot target gate (one observation boundary).
+        Between refreshes the target is FROZEN: the fused decode step
+        never reads the counter back — §VI flips take effect at window
+        granularity and converge via budgeted migration quanta."""
+        self._gate_b = self._policy_gate()
+        return self._gate_b
+
+    def set_gate_override(self, value: bool | None) -> np.ndarray:
+        """Force the target gate on/off for every slot (None restores the
+        policy-derived gate).  The live layout converges to the new
+        target incrementally — see `serving.migrate`."""
+        self._gate_override = value
+        return self.refresh_gate()
+
+    # ----------------------------------------------------------- migration
+    def migration_pending(self) -> np.ndarray:
+        """(B, n_groups) bool: groups still laid under a non-target gate."""
+        return _migrate.pending_mask(self)
+
+    def migrated_upto(self, slot: int) -> int:
+        """Leading groups of `slot` already at the target layout."""
+        return _migrate.migrated_upto(self, slot)
+
+    def migration_quantum(self, budget: int = 1) -> int:
+        """Claim <= budget pending columns for this step's repack window."""
+        return _migrate.quantum(self, budget)
+
+    def drain_migration(self, slot: int | None = None) -> int:
+        """Settle all pending migration now (evict capture, oracles)."""
+        return _migrate.drain(self, slot)
+
+    def migration_status(self) -> dict:
+        return _migrate.status(self)
+
+    def switch_packing(self, packing: str) -> None:
+        """Live structural migration to a new packing layout — see
+        `serving.migrate.switch_packing`."""
+        _migrate.switch_packing(self, packing)
 
     # ------------------------------------------------------------- appends
     def append(self, k, v):
@@ -130,23 +282,26 @@ class SlotKVCache(CRAMKVCache):
         self.tokens_b[slot] += t
         self.tokens = int(self.tokens_b.max())
 
-    def append_active(self, slot_ids, k, v):
-        """One decode step for a subset of slots: k/v (S, T, n_kv, d) rows
-        aligned with `slot_ids`, each landing at its slot's own position —
-        ONE fused scatter, no per-slot dispatch."""
-        slot_ids = np.asarray(slot_ids, np.int64)
+    def _check_slot_ids(self, slot_ids, t: int) -> None:
         assert ((slot_ids >= 0) & (slot_ids < self.batch)).all(), \
             f"slot ids out of range: {slot_ids}"      # -1 would wrap the
         # scatter to the LAST lane and corrupt whichever sequence owns it
         assert np.unique(slot_ids).size == slot_ids.size, \
             f"duplicate slot ids: {slot_ids}"
+        assert (self.tokens_b[slot_ids] + t
+                <= self.max_pages * self.page).all(), "slot full"
+
+    def append_active(self, slot_ids, k, v):
+        """One decode step for a subset of slots: k/v (S, T, n_kv, d) rows
+        aligned with `slot_ids`, each landing at its slot's own position —
+        ONE fused scatter, no per-slot dispatch."""
+        slot_ids = np.asarray(slot_ids, np.int64)
         k = jnp.asarray(k, jnp.bfloat16).view(jnp.int16)
         v = jnp.asarray(v, jnp.bfloat16).view(jnp.int16)
         kv = jnp.concatenate([k, v], axis=-1)           # (S, T, Hkv, D2)
         s, t = kv.shape[:2]
         assert s == slot_ids.size
-        assert (self.tokens_b[slot_ids] + t
-                <= self.max_pages * self.page).all(), "slot full"
+        self._check_slot_ids(slot_ids, t)
         full = jnp.zeros((self.batch, t) + kv.shape[2:], kv.dtype)
         full = full.at[jnp.asarray(slot_ids)].set(kv)
         active = np.zeros(self.batch, bool)
@@ -166,18 +321,26 @@ class SlotKVCache(CRAMKVCache):
         self._uncounted_b[slot, lo:hi + 1] = True
 
     # ------------------------------------------------------------- packing
-    def repack(self):
+    def repack(self, gate: np.ndarray | None = None):
         """Incrementally re-pack the union of per-slot dirty groups.
 
         The window dispatch re-lays every slot's version of each union
         column (idempotent for clean slots — packing is deterministic in
         (pages, gate, markers)); §VI fitness is counted per slot, only on
-        groups that slot's OWN tokens complete, each exactly once."""
+        groups that slot's OWN tokens complete, each exactly once.
+
+        `gate` overrides the layout gate per slot for THIS window (spill
+        restore re-laying a payload under its recorded gate); the default
+        refreshes the policy gate — an observation boundary.  Groups laid
+        under a gate that later moves are NOT stop-the-world re-dirtied:
+        they become pending in `migration_pending()` and converge via
+        bounded quanta."""
         idx = np.nonzero(self._dirty_b.any(0))[0]
         if idx.size == 0:
             return
         w = int(idx.size)
-        enabled = self.enabled()
+        enabled = (self.refresh_gate() if gate is None
+                   else np.asarray(gate, bool))
         idx_j = jnp.asarray(idx, jnp.int32)
         groups = self.pages_view().reshape(
             self.batch, self.n_groups, self.group_lanes, self.page,
@@ -206,12 +369,75 @@ class SlotKVCache(CRAMKVCache):
         u[complete] = False
         self._uncounted_b[:, idx] = u
         self._dirty_b[:] = False
-        self._last_enabled = enabled
-        flipped = self.enabled() != enabled
-        for bi in np.nonzero(flipped)[0]:
-            # that slot's whole layout rebuilds under the new gate at the
-            # next repack (same invariant as the base cache, per slot)
-            self._dirty_b[bi, : self.slot_groups(int(bi))] = True
+        self._applied_b[:, idx] = enabled[:, None]
+        self._last_enabled = enabled.copy()
+
+    # ----------------------------------------------------- fused megastep
+    def megastep(self, slot_ids, k, v, *, budget: int = 0) -> dict:
+        """One fused serve decode step: append k/v (S, T, n_kv, d) rows to
+        `slot_ids`, re-lay the dirty window (+ up to `budget` migration
+        columns), and book the step's read/repack traffic — ONE donated
+        jitted dispatch (`_megastep`), traced once per pow2-bucketed
+        (window, attend) shape.  Device-resident k/v stay on device.
+
+        Bit-identical to append_active -> migration_quantum -> repack ->
+        account_step, minus their per-call dispatches and host syncs (the
+        layout gate is the frozen `_gate_b`; the §VI counter still
+        updates on device every step and is re-sampled at the next
+        `refresh_gate`)."""
+        slot_ids = np.asarray(slot_ids, np.int64)
+        assert slot_ids.size > 0, "megastep needs at least one active slot"
+        k = jnp.asarray(k)
+        v = jnp.asarray(v)
+        s, t = k.shape[:2]
+        assert s == slot_ids.size
+        self._check_slot_ids(slot_ids, t)
+        starts = self.tokens_b.copy()
+        active = np.zeros(self.batch, bool)
+        active[slot_ids] = True
+        for sl in slot_ids:
+            self._mark_dirty(int(sl), int(self.tokens_b[sl]), t)
+        self.tokens_b[slot_ids] += t
+        self.tokens = int(self.tokens_b.max())
+        if budget:
+            self.migration_quantum(budget)
+        idx = np.nonzero(self._dirty_b.any(0))[0]
+        w = int(idx.size)
+        wb = min(1 << (w - 1).bit_length(), self.n_groups)
+        idx_pad = np.full(wb, idx[0], np.int32)
+        idx_pad[:w] = idx
+        enabled = self._gate_b
+        span = self.group_lanes * self.page
+        complete = (idx[None, :] + 1) * span <= self.tokens_b[:, None]
+        countable = np.zeros((self.batch, wb), bool)
+        countable[:, :w] = complete & self._uncounted_b[:, idx]
+        n = self._active_bucket()
+        valid = self.valid_per_page()[:, : self.group_lanes * n]
+        self.state, raw_seq, cram_seq = _megastep(
+            self.state, self._marker_lanes, k, v,
+            jnp.asarray(slot_ids, jnp.int32),
+            jnp.asarray(starts, jnp.int32), jnp.asarray(active),
+            jnp.asarray(idx_pad), jnp.asarray(enabled),
+            jnp.asarray(countable), jnp.asarray(valid),
+            lanes=self.group_lanes, slot_bytes=self.slot_bytes,
+            strip_bytes=self.strip_bytes, use_pack=self.policy != "off",
+            dyn=self.policy in ("dynamic", "auto"),
+            interpret=self.interpret)
+        hs = self._host_stats        # same tallies as _book_repack, at the
+        if self.policy == "off":     # padded window actually dispatched
+            hs.pack_skipped_dynamic += self.batch * wb
+        else:
+            hs.pack_attempts += self.batch * wb
+            hs.pack_skipped_dynamic += int((~enabled).sum()) * wb
+        hs.pack_calls += 1
+        hs.pack_pairs_processed += self.batch * wb
+        u = self._uncounted_b[:, idx]
+        u[complete] = False
+        self._uncounted_b[:, idx] = u
+        self._dirty_b[:] = False
+        self._applied_b[:, idx] = enabled[:, None]
+        self._last_enabled = enabled.copy()
+        return {"raw_per_seq": raw_seq, "cram_per_seq": cram_seq}
 
     # ------------------------------------------------------ slot lifecycle
     def reset_slot(self, slot: int):
@@ -225,7 +451,8 @@ class SlotKVCache(CRAMKVCache):
         self.tokens_b[slot] = 0
         self._dirty_b[slot] = False
         self._uncounted_b[slot] = False
-        self._last_enabled[slot] = self.policy != "off"
+        self._applied_b[slot] = self._gate_b[slot]
+        self._last_enabled[slot] = bool(self._gate_b[slot])
         self.tokens = int(self.tokens_b.max())
 
     def slot_enabled_from_counter(self, counter: int) -> bool:
@@ -238,27 +465,42 @@ class SlotKVCache(CRAMKVCache):
 
     def slot_reference_state(self, slot: int) -> dict:
         """Per-slot from-scratch rebuild over the slot's OWN active prefix,
-        under the gate applied at its last repack — the bit-exactness
-        oracle for slot-level operations (spill round-trips, slot reuse)."""
+        under the PER-GROUP applied gate — the bit-exactness oracle for
+        slot-level operations (spill round-trips, slot reuse) INCLUDING
+        mid-migration states: groups already re-laid under the new target
+        are judged packed, the rest raw (or vice versa), exactly as the
+        in-band-marker kernel reads them."""
         g = self.slot_groups(slot)
         assert g > 0, "empty slot has no reference state"
         lanes = self.group_lanes
         pages = self.pages_view()[slot, : g * lanes]
-        if self._last_enabled[slot]:
+        applied = self._applied_b[slot, :g]
+        grouped = pages.reshape(g, lanes, self.page, self.n_kv, self.d2)
+        over = (grouped[:, 1] if self.packing == "pair"
+                else grouped[:, 1:])
+        raw = {
+            "slots": grouped[:, 0],
+            "slots_overflow": over,
+            "strips": jnp.zeros(
+                (g, self.n_kv, self.d2 + MARKER_LANES), jnp.int16),
+            "packed_mask": jnp.zeros((g,), bool),
+        }
+        if not applied.any():          # never launches the pack kernel
+            c = raw
+        else:
             build = (kops.build_cram_cache if self.packing == "pair"
                      else kops.build_cram_cache_quad)
-            c = dict(build(pages, key=self.key, interpret=self.interpret))
-        else:
-            grouped = pages.reshape(g, lanes, self.page, self.n_kv, self.d2)
-            over = (grouped[:, 1] if self.packing == "pair"
-                    else grouped[:, 1:])
-            c = {
-                "slots": grouped[:, 0],
-                "slots_overflow": over,
-                "strips": jnp.zeros(
-                    (g, self.n_kv, self.d2 + MARKER_LANES), jnp.int16),
-                "packed_mask": jnp.zeros((g,), bool),
-            }
+            packed = dict(build(pages, key=self.key,
+                                interpret=self.interpret))
+            if applied.all():
+                c = packed
+            else:
+                sel = jnp.asarray(applied)
+                c = {k: jnp.where(
+                        sel.reshape((g,) + (1,) * (raw[k].ndim - 1)),
+                        packed[k], raw[k])
+                     for k in raw}
+        c = dict(c)
         c["markers"] = self.state["markers"][:g]
         return c
 

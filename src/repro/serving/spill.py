@@ -15,26 +15,41 @@ groups cross with no strip), keeping
     whole group),
   * the raw lanes of unfitting groups (no in-band metadata),
   * the slot's hot-tier bookkeeping: §VI counter, LLP predictor row, the
-    uncounted-fitness mask, and the token count (the dirty mask is all
-    clear by construction — evict settles the layout first).
+    uncounted-fitness mask, the gate its layout was settled under and
+    the hot packing geometry it was evicted from.
 
 Restore is the inverse: decode the payload back to logical pages
 (`compression.pagepack` codecs are exact whenever the fit bit was set),
 write them into a free slot with the saved gate state, mark the slot
-dirty, and repack.  Because the hot cache's incremental layout is pinned
-bit-identical to a from-scratch rebuild (tests/test_kv_cache.py), the
-resurrected physical state — and therefore every subsequent `attend` —
-is bit-identical to the never-spilled execution; tests/test_serving.py
-holds that property across packings, partial pages and gate states.
+dirty, and repack under the payload's recorded gate.  Because the hot
+cache's incremental layout is pinned bit-identical to a from-scratch
+rebuild (tests/test_kv_cache.py), the resurrected physical state — and
+therefore every subsequent `attend` — is bit-identical to the
+never-spilled execution.  A sequence waking into a half-migrated cache
+simply joins the derived pending set: its layout was settled under
+`gate` at evict, and if the pool's target moved while it was cold the
+budgeted quanta converge it like any other slot (if the hot cache
+switched PACKING while it was cold, the geometry-indexed bookkeeping is
+reset and the slot lays directly under the current target).
 
-Every evict and every restore books exactly ONE ledger `spill` event
-(`bandwidth.adapters.kv_spill_event`) with compressed-byte duals: raw is
-what moving the decompressed pages would have cost, compressed is the
-payload that actually crossed.
+Async pipeline (DESIGN.md §12): with `async_spill=True` the evict is
+split in three — `_capture` snapshots the settled slot on the main
+thread (the slot frees immediately), `_encode` re-encodes the payload on
+a single background worker (pure numpy — no JAX contention with the
+decode stream), and `_commit` books the store insert at *collection*,
+back on the main thread.  Wakes overlap the other way: `prefetch`
+enqueues the payload decode behind any in-flight encodes (one FIFO
+worker makes the chaining deadlock-free), so `restore` finds the pages
+already expanded.  Every evict and every restore still books exactly ONE
+ledger `spill` event (`bandwidth.adapters.kv_spill_event`) with
+compressed-byte duals — booked at completion, on the main thread, in
+submission order, so the ledger stream is deterministic and
+exactly-once-per-crossing no matter how the worker interleaves.
 """
 
 from __future__ import annotations
 
+from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass
 
 import jax.numpy as jnp
@@ -67,6 +82,9 @@ class SpilledSeq:
     uncounted: np.ndarray        # (Gh,) hot-tier uncounted-fitness mask
     raw_bytes: int               # decompressed-page cost of this evict
     stored_bytes: int            # payload bytes that actually moved
+    gate: bool = True            # gate the hot layout was settled under
+    hot_packing: str = "pair"    # hot-tier geometry at evict (predictor/
+                                 # uncounted are indexed in it)
 
     @property
     def n_groups(self) -> int:
@@ -83,37 +101,72 @@ class SpillStore:
     `capacity_pages` bounds the tier (None = unbounded); `packing` is the
     spill-tier layout — independent of the hot cache's, chosen by
     `AutoTuner.choose_kv_packing(tier="spill")` under the spill-link byte
-    model."""
+    model.  `async_spill=True` moves the payload re-encode off the decode
+    path (see the module docstring); the observable store state is
+    identical either way — `__contains__`, `__len__` and the capacity
+    check all count in-flight evictions, and every read that needs a
+    payload collects it first."""
 
     def __init__(self, *, packing: str = "quad",
                  capacity_pages: int | None = None,
-                 ledger: Ledger | None = None):
+                 ledger: Ledger | None = None,
+                 async_spill: bool = False):
         assert packing in SPILL_LANES, packing
         self.packing = packing
         self.lanes = SPILL_LANES[packing]
         self.capacity_pages = capacity_pages
         self.ledger = ledger if ledger is not None else Ledger("spill")
+        self.async_spill = async_spill
         self._store: dict[int, SpilledSeq] = {}
+        self._inflight: dict[int, Future] = {}   # seq_id -> encode future
+        self._inflight_pages: dict[int, int] = {}
+        self._prefetched: dict[int, Future] = {}  # seq_id -> decode future
+        self._pool: ThreadPoolExecutor | None = None
         self.spills = 0
         self.restores = 0
         self.raw_bytes = 0        # cumulative decompressed-page duals
         self.stored_bytes = 0     # cumulative payload bytes moved out
 
+    def _worker(self) -> ThreadPoolExecutor:
+        # ONE worker, FIFO: jobs complete in submission order, so a
+        # prefetch enqueued after its sequence's encode can chain on the
+        # future without deadlock, and collection order == evict order
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="kv-spill")
+        return self._pool
+
     def __contains__(self, seq_id) -> bool:
-        return seq_id in self._store
+        return seq_id in self._store or seq_id in self._inflight
 
     def __len__(self) -> int:
-        return len(self._store)
+        return len(self._store) + len(self._inflight)
 
     # ------------------------------------------------------------- evict
-    def evict(self, cache: SlotKVCache, slot: int, seq_id: int) -> SpilledSeq:
+    def evict(self, cache: SlotKVCache, slot: int, seq_id: int) -> None:
         """Move one slot out of the hot cache, still compressed; the slot
-        is reset for reuse.  Books one ledger `spill` event."""
-        assert seq_id not in self._store, f"seq {seq_id} already spilled"
-        cache.repack()                    # spill the settled layout
+        is reset for reuse before this returns.  Sync mode encodes and
+        books inline; async mode snapshots the settled slot, frees it,
+        and ships the re-encode to the background worker — the ledger
+        `spill` event (exactly one per crossing) is booked when the
+        payload is collected."""
+        assert seq_id not in self, f"seq {seq_id} already spilled"
+        cap = self._capture(cache, slot, seq_id)
+        if not self.async_spill:
+            self._commit(self._encode(cap))
+            return
+        self._inflight_pages[seq_id] = cap["n_pages"]
+        self._inflight[seq_id] = self._worker().submit(self._encode, cap)
+
+    def _capture(self, cache: SlotKVCache, slot: int, seq_id: int) -> dict:
+        """Main-thread half of an evict: settle the slot's layout (drain
+        its pending migration under the frozen target, repack), snapshot
+        everything the encode needs as host arrays, and reset the slot."""
+        cache.drain_migration(slot)
+        cache.repack(gate=cache._gate_b)   # settle appends, frozen target
         tokens = int(cache.tokens_b[slot])
         assert tokens > 0, "evicting an empty slot"
-        page, hkv, d2 = cache.page, cache.n_kv, cache.d2
+        page = cache.page
         n_pages = -(-tokens // page)
         gs = -(-n_pages // self.lanes)
         if (self.capacity_pages is not None
@@ -121,10 +174,31 @@ class SpillStore:
             raise RuntimeError(
                 f"spill store full ({self._pages_stored()}+{n_pages} pages "
                 f"> capacity {self.capacity_pages})")
-        # gather the logical pages to spill-group granularity
         avail = min(gs * self.lanes, cache.max_pages)
-        pages = np.zeros((gs * self.lanes, page, hkv, d2), np.int16)
+        pages = np.zeros((gs * self.lanes, page, cache.n_kv, cache.d2),
+                         np.int16)
         pages[:avail] = np.asarray(cache.pages_view()[slot, :avail])
+        gh = cache.slot_groups(slot)
+        cap = {
+            "seq_id": seq_id, "tokens": tokens, "n_pages": n_pages,
+            "gs": gs, "pages": pages,
+            "counter": int(np.asarray(cache.state["counter"][slot])),
+            "predictor": np.asarray(
+                cache.state["predictor"][slot, :gh]).copy(),
+            "uncounted": cache._uncounted_b[slot, :gh].copy(),
+            "gate": bool(cache._gate_b[slot]),
+            "hot_packing": cache.packing,
+            "raw_bytes": n_pages * cache.slot_bytes,
+        }
+        cache.reset_slot(slot)
+        return cap
+
+    def _encode(self, cap: dict) -> SpilledSeq:
+        """Pure re-encode of a captured slot under the spill packing —
+        numpy only, safe on the background worker."""
+        tokens, page = cap["tokens"], cap["pages"].shape[1]
+        gs, pages = cap["gs"], cap["pages"]
+        hkv, d2 = pages.shape[-2:]
         fit = np.zeros(gs, bool)
         slots = np.empty((gs, page, hkv, d2), np.int16)
         bases, overflow, tail = [], [], None
@@ -164,36 +238,64 @@ class SpillStore:
                     overflow.append(orig[1:live].copy())
         bases = (np.stack(bases) if bases
                  else np.empty((0, hkv, d2), np.int16))
-        gh = cache.slot_groups(slot)
-        payload = SpilledSeq(
-            seq_id=seq_id, tokens=tokens, packing=self.packing,
+        return SpilledSeq(
+            seq_id=cap["seq_id"], tokens=tokens, packing=self.packing,
             fit=fit, slots=slots, bases=bases, overflow=overflow, tail=tail,
-            counter=int(np.asarray(cache.state["counter"][slot])),
-            predictor=np.asarray(cache.state["predictor"][slot, :gh]).copy(),
-            uncounted=cache._uncounted_b[slot, :gh].copy(),
-            raw_bytes=n_pages * cache.slot_bytes,
+            counter=cap["counter"], predictor=cap["predictor"],
+            uncounted=cap["uncounted"], raw_bytes=cap["raw_bytes"],
             stored_bytes=_payload_bytes(
                 slots, bases, fit, *overflow,
                 *(() if tail is None else (tail,))),
+            gate=cap["gate"], hot_packing=cap["hot_packing"],
         )
-        self._store[seq_id] = payload
+
+    def _commit(self, payload: SpilledSeq) -> None:
+        """Book one completed evict: store insert, byte totals, and the
+        single ledger `spill` event.  Always runs on the main thread."""
+        self._store[payload.seq_id] = payload
         self.spills += 1
         self.raw_bytes += payload.raw_bytes
         self.stored_bytes += payload.stored_bytes
         kv_spill_event(self.ledger, raw=payload.raw_bytes,
                        compressed=payload.stored_bytes, direction="evict")
-        cache.reset_slot(slot)
-        return payload
 
-    # ------------------------------------------------------------ restore
-    def restore(self, cache: SlotKVCache, slot: int, seq_id: int) -> None:
-        """Wake one sequence into a free slot: decode the payload back to
-        logical pages, reinstall the gate state, and repack — the hot
-        layout resurrects bit-identical to the never-spilled state.  Books
-        one ledger `spill` event."""
-        p = self._store.pop(seq_id)
-        assert int(cache.tokens_b[slot]) == 0, "restore needs a free slot"
-        page, hkv, d2 = cache.page, cache.n_kv, cache.d2
+    def _collect(self, seq_id) -> None:
+        """Join one in-flight evict and commit it (main thread).  Commit
+        BEFORE dropping the in-flight entry: a worker-side `_payload`
+        lookup then always finds the sequence in one map or the other."""
+        fut = self._inflight.get(seq_id)
+        if fut is not None:
+            self._commit(fut.result())
+            del self._inflight[seq_id]
+            self._inflight_pages.pop(seq_id, None)
+
+    def flush(self) -> int:
+        """Join every in-flight evict, committing in submission order —
+        the sync point before anything reads the ledger's spill rows.
+        Returns the number collected."""
+        pending = list(self._inflight)
+        for sid in pending:
+            self._collect(sid)
+        return len(pending)
+
+    # ----------------------------------------------------------- prefetch
+    def _payload(self, seq_id) -> SpilledSeq:
+        # single FIFO worker: an encode submitted before this job ran has
+        # already finished, so .result() cannot block the worker on itself.
+        # `_collect` commits to the store before dropping the in-flight
+        # entry, so one of these lookups always lands.
+        p = self._store.get(seq_id)
+        if p is not None:
+            return p
+        fut = self._inflight.get(seq_id)
+        if fut is not None:
+            return fut.result()
+        return self._store[seq_id]
+
+    def _decode_pages(self, p: SpilledSeq, page: int) -> np.ndarray:
+        """Payload -> logical pages (n_groups*lanes, page, Hkv, D2) — the
+        pure half of a restore, runnable on the worker."""
+        hkv, d2 = p.slots.shape[-2:]
         # decode under the packing the payload was EVICTED with, not the
         # store's current setting — per-tier retuning may change the
         # latter while sequences are cold
@@ -219,39 +321,93 @@ class SpillStore:
             pages[p.tokens // page] = p.tail        # its packed group
         pages[-(-p.tokens // page):] = 0   # dead lanes back to zeros (the
         # packed path decoded them as base replicas, the raw path trimmed)
+        return pages
+
+    def prefetch(self, seq_id, page: int) -> bool:
+        """Start decoding a spilled payload on the background worker so a
+        later `restore` finds the pages already expanded.  Chained behind
+        any in-flight encode of the same sequence by FIFO order.  Returns
+        False for unknown / already-prefetched sequences."""
+        if seq_id not in self or seq_id in self._prefetched:
+            return False
+        if not self.async_spill:
+            return False
+        fut = self._worker().submit(
+            lambda: self._decode_pages(self._payload(seq_id), page))
+        self._prefetched[seq_id] = fut
+        return True
+
+    # ------------------------------------------------------------ restore
+    def restore(self, cache: SlotKVCache, slot: int, seq_id: int) -> None:
+        """Wake one sequence into a free slot: decode the payload back to
+        logical pages (or consume the prefetched expansion), reinstall the
+        gate state, and repack under the payload's recorded gate — the hot
+        layout resurrects bit-identical to the never-spilled state, and
+        joins the migration pending set if the pool's target gate moved
+        while it was cold.  Books one ledger `spill` event."""
+        self._collect(seq_id)              # join an in-flight encode first
+        assert int(cache.tokens_b[slot]) == 0, "restore needs a free slot"
+        page = cache.page
+        # resolve the prefetch BEFORE popping the payload: the queued
+        # decode job reads the store entry
+        pre = self._prefetched.pop(seq_id, None)
+        pages = pre.result() if pre is not None else None
+        p = self._store.pop(seq_id)
+        if pages is None:
+            pages = self._decode_pages(p, page)
+        hkv, d2 = p.slots.shape[-2:]
         n_rows = min(pages.shape[0], cache.max_pages) * page
         flat = pages.reshape(-1, hkv, d2)[:n_rows]
         st = cache.state
         st["pages"] = st["pages"].at[slot, :n_rows].set(jnp.asarray(flat))
-        gh = -(-(-(-p.tokens // page)) // cache.group_lanes)  # hot groups
-        assert gh == len(p.predictor), (gh, len(p.predictor))
-        st["predictor"] = st["predictor"].at[slot, :gh].set(
-            jnp.asarray(p.predictor))
         st["counter"] = st["counter"].at[slot].set(p.counter)
         cache.tokens_b[slot] = p.tokens
         cache.tokens = int(cache.tokens_b.max())
-        cache._uncounted_b[slot, :gh] = p.uncounted
+        gh = cache.slot_groups(slot)
+        gate_vec = cache._gate_b.copy()
+        if p.hot_packing == cache.packing:
+            # same geometry: the payload's hot bookkeeping slots back in,
+            # and the layout resurrects under the gate it was settled with
+            # (a target that moved while cold leaves it derived-pending)
+            assert gh == len(p.predictor), (gh, len(p.predictor))
+            st["predictor"] = st["predictor"].at[slot, :gh].set(
+                jnp.asarray(p.predictor))
+            cache._uncounted_b[slot, :gh] = p.uncounted
+            gate_vec[slot] = p.gate
+        else:
+            # the hot cache switched packing while this sequence was cold:
+            # predictor/uncounted are indexed in the OLD geometry — reset
+            # (history is not re-counted) and lay directly under the
+            # current target gate
+            cache._uncounted_b[slot, :gh] = False
         cache._dirty_b[slot, :gh] = True
-        cache._last_enabled[slot] = cache.slot_enabled_from_counter(p.counter)
         self.restores += 1
         kv_spill_event(self.ledger, raw=p.raw_bytes,
                        compressed=p.stored_bytes, direction="restore")
-        cache.repack()   # materialize the resurrected layout now
+        cache.repack(gate=gate_vec)   # materialize the resurrected layout
 
-    def drop(self, seq_id: int) -> None:
-        """Discard a spilled sequence (retired while cold)."""
+    def drop(self, seq_id) -> None:
+        """Discard a spilled sequence (retired while cold).  An in-flight
+        evict is collected first — the crossing already happened, its
+        bytes moved and its ledger event must still book exactly once."""
+        self._collect(seq_id)
+        pre = self._prefetched.pop(seq_id, None)
+        if pre is not None:
+            pre.result()   # let a queued decode finish reading the entry
         self._store.pop(seq_id)
 
     # ------------------------------------------------------------ queries
     def _pages_stored(self) -> int:
-        return sum(p.n_groups * SPILL_LANES[p.packing]
-                   for p in self._store.values())
+        return (sum(p.n_groups * SPILL_LANES[p.packing]
+                    for p in self._store.values())
+                + sum(self._inflight_pages.values()))
 
     def saving(self) -> float:
         """1 - stored/raw over every spill so far (the link-bytes win)."""
         return 1.0 - self.stored_bytes / max(self.raw_bytes, 1)
 
     def summary(self) -> dict:
+        self.flush()
         return {"packing": self.packing, "held": len(self._store),
                 "spills": self.spills, "restores": self.restores,
                 "raw_bytes": self.raw_bytes,

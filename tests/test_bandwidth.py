@@ -463,6 +463,7 @@ def test_serve_loop_spill_crossings_hit_the_shared_ledger():
     k, v = _skv(rng, 1, 6 * PAGE, HKV, HD)
     loop.admit(0, k[0], v[0])
     loop.evict(0)
+    loop.spill.flush()       # async pipeline: ledger commit is at collection
     ev = led.total("spill", consumer="kv", tensor_class="kv-evict")
     assert ev["count"] == 1
     assert 0 < ev["compressed_bytes"] < ev["raw_bytes"]

@@ -1,0 +1,420 @@
+"""Incremental live migration (ISSUE 9 / DESIGN.md §12).
+
+The zero-stall claim rests on three invariants, each pinned bitwise:
+
+  1. convergence identity — after ANY prefix of budgeted migration quanta
+     (gate flip or packing switch), every slot's physical layout equals
+     the per-slot from-scratch rebuild under the applied gate
+     (`slot_reference_state`): mixed packed/raw mid-states are exactly
+     what a stop-the-world rebuild of that mixture would produce;
+  2. bounded work — one quantum claims at most `budget` page-group
+     columns, so a decode step never stalls on a flip;
+  3. schedule independence — interleaved admits / steps / evicts / wakes
+     (including waking a spilled sequence into a half-migrated pool)
+     never break 1: pending is DERIVED from applied-vs-target, so no
+     event ordering can drift it.
+
+The fused megastep is additionally pinned equal to the unfused dispatch
+sequence (state, §VI counters, traffic) and trace-stable across same-
+shape steps.  The deterministic tests run in tier-1; the hypothesis
+schedule sweep rides along when the dev dependency is present.
+"""
+
+import numpy as np
+import pytest
+
+from repro.bandwidth import AutoTuner, Ledger
+from repro.compression.gate import COUNTER_MAX
+from repro.kernels import ops as kops
+from repro.kv import synthetic_kv_stream
+from repro.serving import ServeLoop, SlotKVCache
+
+PAGE, HKV, HD = 8, 1, 16
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+
+def _mk(policy="static", packing="pair", batch=3, max_pages=8, **kw):
+    return SlotKVCache(max_pages, PAGE, HKV, HD, batch=batch,
+                       policy=policy, packing=packing, **kw)
+
+
+def _kv(rng, s, t, compressible=True):
+    return synthetic_kv_stream(rng, s, t, HKV, HD,
+                               compressible=compressible)
+
+
+def _assert_oracle(cache, ctx=""):
+    """Every non-empty slot's physical layout == its per-slot rebuild
+    under the PER-GROUP applied gate — the mid-migration identity."""
+    for sl in range(cache.batch):
+        if cache.tokens_b[sl] == 0:
+            continue
+        ref = cache.slot_reference_state(sl)
+        phys = cache.slot_physical_state(sl)
+        for key in ref:
+            assert np.array_equal(np.asarray(ref[key]),
+                                  np.asarray(phys[key])), (ctx, sl, key)
+
+
+def _oracle_if_settled(cache, ctx=""):
+    """Schedule sweeps interleave bare admits, whose appends stay dirty
+    until the next step's repack — the oracle judges settled layouts."""
+    if not cache._dirty_b.any():
+        _assert_oracle(cache, ctx)
+
+
+def _fill(cache, rng, steps, t=PAGE):
+    ids = np.arange(cache.batch)
+    for _ in range(steps):
+        cache.append_active(ids, *_kv(rng, cache.batch, t))
+    cache.repack()
+
+
+# ------------------------------------------------------------- gate flips
+
+def test_gate_flip_off_converges_one_column_per_quantum():
+    rng = np.random.default_rng(0)
+    c = _mk("static")
+    _fill(c, rng, 8)                       # 64 tokens = 4 pair groups/slot
+    assert not c.migration_pending().any()
+    assert np.asarray(c.state["packed_mask"]).any(), "fixture must pack"
+    c.set_gate_override(False)
+    pend = c.migration_status()
+    assert pend["migrating"] and pend["pending_columns"] == 4
+    steps = 0
+    while c.migration_pending().any():
+        before = c.migration_status()["pending_columns"]
+        assert c.migration_quantum(1) == 1          # bounded work
+        c.repack(gate=c._gate_b)
+        after = c.migration_status()["pending_columns"]
+        assert after == before - 1
+        steps += 1
+        _assert_oracle(c, f"flip-off step {steps}")
+        for sl in range(c.batch):                   # watermark is monotone
+            assert c.migrated_upto(sl) >= 0
+    assert steps == 4
+    assert not np.asarray(c.state["packed_mask"]).any()
+    for sl in range(c.batch):
+        assert c.migrated_upto(sl) == c.slot_groups(sl)
+
+
+def test_gate_reenable_promotes_raw_layout_to_packed():
+    rng = np.random.default_rng(1)
+    c = _mk("static")
+    c.set_gate_override(False)
+    _fill(c, rng, 8)                       # laid raw under the override
+    assert not np.asarray(c.state["packed_mask"]).any()
+    c.set_gate_override(True)
+    assert c.migration_status()["migrating"]
+    while c.migration_pending().any():
+        c.migration_quantum(2)
+        c.repack(gate=c._gate_b)
+        _assert_oracle(c, "re-enable")
+    assert np.asarray(c.state["packed_mask"]).any(), \
+        "compressible stream must pack once the gate returns"
+
+
+def test_zero_budget_never_migrates():
+    rng = np.random.default_rng(2)
+    c = _mk("static")
+    _fill(c, rng, 4)
+    c.set_gate_override(False)
+    before = c.migration_status()["pending_groups"]
+    assert before > 0
+    assert c.migration_quantum(0) == 0
+    c.repack(gate=c._gate_b)               # nothing dirty -> no-op
+    assert c.migration_status()["pending_groups"] == before
+    _assert_oracle(c, "zero-budget")
+
+
+# -------------------------------------------------------- packing switches
+
+@pytest.mark.parametrize("target", ["quad", "pair"])
+def test_packing_switch_live_promotes_bit_identical(target):
+    src = "pair" if target == "quad" else "quad"
+    rng = np.random.default_rng(3)
+    c = _mk("static", packing=src)
+    _fill(c, rng, 8)
+    pages_before = np.asarray(c.pages_view()).copy()
+    tokens_before = c.tokens_b.copy()
+    c.switch_packing(target)
+    c.refresh_gate()
+    assert c.packing == target
+    # the logical pages survive the structural swap untouched
+    assert np.array_equal(np.asarray(c.pages_view()), pages_before)
+    assert np.array_equal(c.tokens_b, tokens_before)
+    # raw new-geometry layout is immediately consistent...
+    _assert_oracle(c, "post-switch raw")
+    assert c.migration_status()["migrating"]
+    # ...and the budgeted quanta promote it without ever breaking identity
+    while c.migration_pending().any():
+        c.migration_quantum(1)
+        c.repack(gate=c._gate_b)
+        _assert_oracle(c, f"promote->{target}")
+    assert not c.migration_status()["migrating"]
+
+
+def test_packing_switch_round_trip_preserves_logical_pages():
+    rng = np.random.default_rng(4)
+    c = _mk("static", packing="pair")
+    _fill(c, rng, 6)
+    pages0 = np.asarray(c.pages_view()).copy()
+    for target in ("quad", "pair"):
+        c.switch_packing(target)
+        c.refresh_gate()
+        while c.migration_pending().any():
+            c.migration_quantum(2)
+            c.repack(gate=c._gate_b)
+    assert np.array_equal(np.asarray(c.pages_view()), pages0)
+    _assert_oracle(c, "round-trip")
+
+
+# ------------------------------------------------------------ fused megastep
+
+def test_megastep_bit_identical_to_unfused_dispatches():
+    rng = np.random.default_rng(5)
+    fused, unfused = _mk("dynamic"), _mk("dynamic")
+    ids = np.arange(3)
+    for step in range(8):
+        k, v = _kv(rng, 3, PAGE, compressible=step % 3 != 2)
+        unfused.append_active(ids, k, v)
+        unfused.repack(gate=unfused._gate_b)
+        unfused.account_step()
+        fused.megastep(ids, k, v)
+    for sl in range(3):
+        a = unfused.slot_physical_state(sl)
+        b = fused.slot_physical_state(sl)
+        for key in a:
+            assert np.array_equal(np.asarray(a[key]),
+                                  np.asarray(b[key])), (sl, key)
+    assert np.array_equal(np.asarray(unfused.state["counter"]),
+                          np.asarray(fused.state["counter"]))
+    assert np.array_equal(np.asarray(unfused.state["traffic"]),
+                          np.asarray(fused.state["traffic"]))
+
+
+def test_megastep_carries_migration_quanta():
+    rng = np.random.default_rng(6)
+    c = _mk("static")
+    for _ in range(6):
+        c.megastep(np.arange(3), *_kv(rng, 3, PAGE))
+    c.set_gate_override(False)
+    assert c.migration_status()["migrating"]
+    steps = 0
+    while c.migration_pending().any():
+        before = c.migration_status()["pending_columns"]
+        c.megastep(np.arange(3), *_kv(rng, 3, 1), budget=1)
+        after = c.migration_status()["pending_columns"]
+        assert before - after <= 1, "budget bounds per-step migration work"
+        steps += 1
+        _assert_oracle(c, f"megastep quantum {steps}")
+        assert steps < 100
+    assert not np.asarray(c.state["packed_mask"]).any()
+
+
+def test_megastep_trace_is_cached_across_same_shape_steps(monkeypatch):
+    """After warm-up, same-bucket decode steps must reuse the compiled
+    megastep — re-tracing would re-enter the window kernels' python."""
+    rng = np.random.default_rng(7)
+    c = _mk("static", batch=2)
+    c.megastep(np.arange(2), *_kv(rng, 2, PAGE))    # prefill trace (t=8)
+    for _ in range(2):                              # decode trace (t=1)
+        c.megastep(np.arange(2), *_kv(rng, 2, 1))
+
+    def boom(*a, **kw):
+        raise AssertionError("megastep re-traced: layout_window re-entered")
+    monkeypatch.setattr(kops, "layout_window", boom)
+    for _ in range(4):                              # same pow2 buckets
+        c.megastep(np.arange(2), *_kv(rng, 2, 1))
+    monkeypatch.undo()
+    _assert_oracle(c, "cached-trace")
+
+
+# ------------------------------------------- serve loop: flips under load
+
+def _loop(rng, *, slots=2, policy="static", **kw):
+    loop = ServeLoop(slots=slots, max_pages=8, page=PAGE, n_kv=HKV,
+                     head_dim=HD, policy=policy, **kw)
+    return loop
+
+
+def test_wake_into_half_migrated_cache_regression():
+    """A sequence evicted under gate=on and woken after the pool's target
+    flipped off resurrects under its RECORDED gate, joins the derived
+    pending set, and converges with everyone else — bit-identically."""
+    rng = np.random.default_rng(8)
+    loop = _loop(rng)
+    k0, v0 = _kv(rng, 1, 4 * PAGE)
+    k1, v1 = _kv(rng, 1, 4 * PAGE)
+    loop.admit(0, k0[0], v0[0])
+    loop.admit(1, k1[0], v1[0])
+    for _ in range(2):
+        loop.step({s: tuple(x[0] for x in _kv(rng, 1, 1))
+                   for s in (0, 1)})
+    loop.evict(0)                          # settled under gate=True
+    loop.cache.set_gate_override(False)    # target moves while 0 is cold
+    loop.step({1: tuple(x[0] for x in _kv(rng, 1, 1))})  # partial migration
+    assert loop.cache.migration_status()["migrating"]
+    _assert_oracle(loop.cache, "half-migrated before wake")
+    loop.wake(0)
+    slot0 = loop.seqs[0].slot
+    # the woken slot's layout came back under gate=True -> it is pending
+    assert loop.cache.migration_pending()[slot0].any()
+    _assert_oracle(loop.cache, "just woken")
+    steps = 0
+    while loop.cache.migration_pending().any():
+        loop.step({s: tuple(x[0] for x in _kv(rng, 1, 1))
+                   for s in (0, 1)})
+        steps += 1
+        _assert_oracle(loop.cache, f"post-wake step {steps}")
+        assert steps < 100
+    assert not np.asarray(loop.cache.state["packed_mask"]).any()
+
+
+def test_scripted_interleaving_admit_step_evict_wake_flip():
+    """Deterministic tier-1 cut of the schedule sweep: every migration-
+    relevant event class interleaved, oracle checked after each."""
+    rng = np.random.default_rng(9)
+    loop = _loop(rng, slots=2)
+    nxt = 0
+
+    def admit():
+        nonlocal nxt
+        k, v = _kv(rng, 1, 2 * PAGE)
+        loop.admit(nxt, k[0], v[0])
+        nxt += 1
+
+    def step():
+        act = loop.active_seqs()
+        if act:
+            loop.step({s: tuple(x[0] for x in _kv(rng, 1, 1))
+                       for s in act})
+
+    script = [admit, step, admit, step,
+              lambda: loop.cache.set_gate_override(False),
+              step, admit, step,                 # admit evicts the coldest
+              step, lambda: loop.wake(loop.spilled_seqs()[0]),
+              step, lambda: loop.cache.set_gate_override(True),
+              step, step, lambda: loop.evict(loop.active_seqs()[0]),
+              step, lambda: loop.cache.set_gate_override(None),
+              step, step, step]
+    for i, op in enumerate(script):
+        op()
+        _oracle_if_settled(loop.cache, f"script op {i}")
+    # drain whatever is still pending and land settled
+    loop.cache.drain_migration()
+    _assert_oracle(loop.cache, "script drained")
+    assert not loop.cache.migration_status()["migrating"]
+
+
+def test_migrate_to_packing_mid_serve_converges():
+    rng = np.random.default_rng(10)
+    loop = _loop(rng)
+    for s in range(2):
+        k, v = _kv(rng, 1, 4 * PAGE)
+        loop.admit(s, k[0], v[0])
+    status = loop.migrate_to(packing="quad")
+    assert status["migrating"] and loop.cache.packing == "quad"
+    steps = 0
+    while loop.cache.migration_pending().any():
+        loop.step({s: tuple(x[0] for x in _kv(rng, 1, 1))
+                   for s in (0, 1)})
+        steps += 1
+        _assert_oracle(loop.cache, f"quad promote {steps}")
+        assert steps < 100
+    assert loop.summary()["migration"]["migrating"] is False
+
+
+# ------------------------------------------------- §VI live gate decisions
+
+def test_suppressed_packing_reenables_into_tuner_pick():
+    """auto with the hot gate forced off records the tuner's real pick;
+    a re-enabling observation window migrates the LIVE cache to it."""
+    rng = np.random.default_rng(11)
+    k, v = synthetic_kv_stream(rng, 1, 8 * PAGE, HKV, HD, scale=2e-4)
+    tuner = AutoTuner()
+    tuner._counters["kv-hot"] = 0          # §VI gate: measured harm
+    loop, ch = ServeLoop.auto(tuner, k, v, slots=2, max_pages=8,
+                              page=PAGE, n_kv=HKV, head_dim=HD)
+    assert ch["hot"].choice == "off"
+    assert ch["hot"].preferred in ("pair", "quad")
+    assert loop.suppressed_packing == ch["hot"].preferred
+    assert loop.cache.policy == "off"
+    loop.admit(0, k[0, :4 * PAGE], v[0, :4 * PAGE])
+    loop.step({0: tuple(x[0] for x in _kv(rng, 1, 1))})
+    # the next window clears the gate (raw traffic is never judged
+    # harmful: saving is 0, not negative, so the forced counter holds)
+    tuner._counters["kv-hot"] = COUNTER_MAX
+    loop.observe_tiers()
+    assert loop.cache.policy == "auto"
+    assert loop.cache.packing == ch["hot"].preferred
+    assert loop.suppressed_packing is None
+    assert loop.cache.migration_status()["migrating"]
+    for i in range(20):
+        loop.step({0: tuple(x[0] for x in _kv(rng, 1, 1))})
+        _assert_oracle(loop.cache, f"re-enable step {i}")
+        if not loop.cache.migration_pending().any():
+            break
+    assert not loop.cache.migration_pending().any()
+
+
+def test_gate_disable_records_suppressed_packing():
+    """The symmetric transition: a window that turns the gate OFF
+    remembers the running packing and degrades the layout to raw."""
+    rng = np.random.default_rng(12)
+    k, v = synthetic_kv_stream(rng, 1, 8 * PAGE, HKV, HD, scale=2e-4)
+    tuner = AutoTuner()
+    loop, ch = ServeLoop.auto(tuner, k, v, slots=2, max_pages=8,
+                              page=PAGE, n_kv=HKV, head_dim=HD,
+                              ledger=Ledger("t"))
+    assert loop.cache.policy != "off"
+    running = loop.cache.packing
+    loop.admit(0, k[0, :4 * PAGE], v[0, :4 * PAGE])
+    loop.step({0: tuple(x[0] for x in _kv(rng, 1, 1))})
+    tuner._counters["kv-hot"] = 0          # window measured harm
+    loop.observe_tiers()
+    assert loop.cache.policy == "off"
+    assert loop.suppressed_packing == running
+    assert loop.summary()["hot_packing"] == "off"
+
+
+# ------------------------------------------------- hypothesis schedule sweep
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=12, deadline=None)
+    @given(ops=st.lists(st.integers(0, 5), min_size=4, max_size=14),
+           seed=st.integers(0, 2**16))
+    def test_schedule_sweep_migration_oracle(ops, seed):
+        """Random admit/step/evict/wake/flip schedules with per-step
+        migration quanta: the applied-gate oracle holds after EVERY op."""
+        rng = np.random.default_rng(seed)
+        loop = _loop(rng, slots=2)
+        nxt = 0
+        overrides = [True, False, None]
+        for i, op in enumerate(ops):
+            if op == 0:
+                k, v = _kv(rng, 1, 2 * PAGE)
+                loop.admit(nxt, k[0], v[0])
+                nxt += 1
+            elif op in (1, 2):
+                act = loop.active_seqs()
+                if act:
+                    loop.step({s: tuple(x[0] for x in _kv(rng, 1, 1))
+                               for s in act})
+            elif op == 3 and len(loop.active_seqs()) > 1:
+                loop.evict(loop.active_seqs()[0])
+            elif op == 4 and loop.spilled_seqs():
+                loop.wake(loop.spilled_seqs()[0])
+            elif op == 5:
+                loop.cache.set_gate_override(overrides[i % 3])
+            _oracle_if_settled(loop.cache, f"sweep op {i}:{op}")
+        loop.cache.drain_migration()
+        _assert_oracle(loop.cache, "sweep drained")
+        assert not loop.cache.migration_status()["migrating"]

@@ -258,6 +258,7 @@ def test_spill_roundtrip_bit_identical(spk):
     q = {0: np.asarray(_stream(rng, 1)[0][0], np.float32)}
     before = np.asarray(loop.attend(q)[0])
     loop.evict(0)
+    loop.spill.flush()        # async evict: join before reading counters
     assert loop.seqs[0].spilled and loop.spill.spills == 1
     loop.wake(0)
     slot = loop.seqs[0].slot
@@ -280,6 +281,7 @@ def test_spill_savings_order_on_compressible_stream():
                          head_dim=HD, policy="static", spill_packing=spk)
         loop.admit(0, k, v)
         loop.evict(0)
+        loop.spill.flush()
         stored[spk] = loop.spill.stored_bytes
         assert loop.spill.raw_bytes == 8 * loop.cache.slot_bytes
     assert stored["quad"] < stored["pair"] < stored["off"]
@@ -326,6 +328,7 @@ def test_spill_roundtrip_partial_page_compressible(spk, tokens, want_tail):
     snap = _snap(loop.cache.slot_physical_state(0))
     pages_snap = np.asarray(loop.cache.pages_view()[0])
     loop.evict(0)
+    loop.spill.flush()
     p = loop.spill._store[0]
     assert p.fit.any()
     assert (p.tail is not None) == want_tail
@@ -349,6 +352,7 @@ def test_restore_decodes_under_the_payloads_packing():
     snap = _snap(loop.cache.slot_physical_state(0))
     pages_snap = np.asarray(loop.cache.pages_view()[0])
     loop.evict(0)
+    loop.spill.flush()
     assert loop.spill._store[0].packing == "quad"
     loop.spill.packing, loop.spill.lanes = "pair", SPILL_LANES["pair"]
     loop.wake(0)
