@@ -72,6 +72,8 @@ The consolidated JSON report written by --sweep has this schema:
         "tensors":  {tensor: {codec: ratio}}       # ckpt/gradient bytes
       },
       "serve_spill": {                  # present for --sweep serve-spill/all
+        "backend":     {platform, device_kind},   # throughput rows are
+                                                  #   backend-scoped
         "curves":      {spill_packing: churn curve — spill/ledger/decode
                         summaries, wall_s, wake_state_parity},
         "incompressible_quad": same curve on a noise stream,
@@ -79,15 +81,21 @@ The consolidated JSON report written by --sweep has this schema:
         "migration":   {"gate"/"repack": live-migration churn curve —
                         per-phase tokens/s (steady / migrating /
                         spill_churn), no_stall, bit_identical},
+        "prefill":     {fused / replay wall+tokens_per_s, speedup,
+                        bit_identical},   # ONE-dispatch bulk-pack ingest
+                                          #   vs token-by-token replay
         "guarantee":   {same_schedule_across_packings,
                         compressed_moves_fewer_bytes, spill_no_slowdown,
                         wake_state_parity, migration_no_stall,
-                        migration_bit_identical}  # the flags CI enforces
+                        migration_bit_identical,
+                        prefill_no_slower_than_replay}  # CI-enforced
       },
       # a serve-spill sweep also APPENDS one compact throughput entry
-      # (git short sha, per-phase tokens/s, guarantee flags) to
-      # BENCH_history.json at the repo root — the trend line across PRs,
-      # where BENCH_serve.json is only the latest snapshot
+      # (git short sha, backend, per-phase + prefill tokens/s, guarantee
+      # flags) to BENCH_history.json at the repo root — the trend line
+      # across PRs, where BENCH_serve.json is only the latest snapshot;
+      # re-running on the same sha REPLACES that sha's entry instead of
+      # appending a duplicate row
       "kernels": {                      # present for --sweep kernels/all
         "modes": {"lanes2"/"lanes4": {"rows": [per block_groups tiling:
                    us_per_call, max_err_vs_oracle, numerics_parity,
@@ -235,7 +243,10 @@ def _sweep_serve_spill(args) -> dict:
 def _append_bench_history(report: dict) -> None:
     """Append one compact serve-tier throughput entry to the repo-root
     BENCH_history.json — BENCH_serve.json is overwritten each run, the
-    history keeps the per-phase tokens/s trend across commits."""
+    history keeps the per-phase tokens/s trend across commits.  Re-runs
+    on the SAME commit replace the previous entry (one row per sha — the
+    trend line tracks commits, not local re-runs); throughput rows are
+    only comparable within one backend, so each entry records it."""
     sp = report.get("serve_spill")
     if not sp:
         return
@@ -249,7 +260,13 @@ def _append_bench_history(report: dict) -> None:
     entry = {
         "sha": sha,
         "date": time.strftime("%Y-%m-%d"),
+        "backend": sp["backend"],
         "tokens_per_s": sp["tokens_per_s"],
+        "prefill": {
+            "tokens_per_s": sp["prefill"]["fused"]["tokens_per_s"],
+            "replay_tokens_per_s": sp["prefill"]["replay"]["tokens_per_s"],
+            "speedup": sp["prefill"]["speedup"],
+        },
         "migration_phases": {
             mode: {ph: d["tokens_per_s"] for ph, d in m["phases"].items()}
             for mode, m in sp["migration"].items()},
@@ -260,7 +277,11 @@ def _append_bench_history(report: dict) -> None:
         hist = json.loads(path.read_text()) if path.exists() else []
     except json.JSONDecodeError:
         hist = []
-    hist.append(entry)
+    if hist and sha != "unknown" and hist[-1].get("sha") == sha:
+        print(f"bench history: replacing existing entry for {sha}")
+        hist[-1] = entry
+    else:
+        hist.append(entry)
     path.write_text(json.dumps(hist, indent=1))
 
 
@@ -328,6 +349,12 @@ def run_sweep(args) -> None:
               " ".join(f"{mode}={m['migrating_over_steady']:.2f}x"
                        f"(pend={m['pending_columns_at_flip']})"
                        for mode, m in mig.items()))
+        pf = report["serve_spill"]["prefill"]
+        print(f"serve-prefill: T={pf['prompt_tokens']} "
+              f"fused={pf['fused']['tokens_per_s']:.0f} tok/s "
+              f"replay={pf['replay']['tokens_per_s']:.0f} tok/s "
+              f"({pf['speedup']:.1f}x, "
+              f"bit_identical={pf['bit_identical']})")
         flags = report["serve_spill"]["guarantee"]
         print("serve-spill guarantee:", flags)
         if not all(flags.values()):

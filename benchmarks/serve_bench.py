@@ -284,8 +284,76 @@ def churn_spill_curve(*, spill_packing="quad", slots=3, n_seqs=10,
     }
 
 
-def migration_churn_curve(*, mode="gate", slots=4, max_pages=64,
-                          prefill_pages=48, steady_steps=24,
+def prefill_curve(*, prompt_tokens=512, policy="static", packing="pair",
+                  compressible=True, seed=0) -> dict:
+    """Fused chunked-prefill ingest vs token-by-token replay.
+
+    Both paths ingest the SAME prompt into the same cache geometry; the
+    fused path is ONE `prefill_slot` call (a single bulk-pack dispatch
+    chain), the replay is `prompt_tokens` fused decode megasteps — the
+    fastest pre-existing ingest.  Each path warms its traces on a
+    throwaway cache first (the replay warm covers every pow2 window
+    bucket it crosses), so the timed regions compare steady-state work,
+    not compile time.  R3 discipline: device work synced at the timer
+    boundaries only, zero host materialization inside.  The end states
+    are compared bit-for-bit — the speedup only counts if the fused
+    ingest produced EXACTLY the replayed cache."""
+    import jax
+
+    from repro.serving import SlotKVCache
+
+    rng = np.random.default_rng(seed)
+    n_pages = -(-prompt_tokens // PAGE)
+    mk = dict(page=PAGE, n_kv=HKV, head_dim=HD, batch=1, policy=policy,
+              packing=packing)
+    ks, vs = _stream(rng, 1, prompt_tokens, compressible)
+    k, v = ks[0], vs[0]
+    ids = np.arange(1)
+
+    warm = SlotKVCache(n_pages, **mk)
+    warm.prefill_slot(0, k, v)             # compiles the T-bucket trace
+    fused = SlotKVCache(n_pages, **mk)
+    jax.block_until_ready((warm.state, fused.state))
+    t0 = time.perf_counter()
+    fused.prefill_slot(0, k, v)
+    jax.block_until_ready(fused.state)
+    fused_wall = time.perf_counter() - t0
+
+    warm = SlotKVCache(n_pages, **mk)
+    for i in range(prompt_tokens):
+        warm.megastep(ids, k[None, i:i + 1], v[None, i:i + 1])
+    replay = SlotKVCache(n_pages, **mk)
+    jax.block_until_ready((warm.state, replay.state))
+    t0 = time.perf_counter()
+    for i in range(prompt_tokens):
+        replay.megastep(ids, k[None, i:i + 1], v[None, i:i + 1])
+    jax.block_until_ready(replay.state)
+    replay_wall = time.perf_counter() - t0
+
+    fused.repack()
+    replay.repack()
+    a, b = fused.slot_physical_state(0), replay.slot_physical_state(0)
+    bit_identical = (
+        all(bool(jnp.array_equal(a[kk], b[kk])) for kk in a)
+        and bool(jnp.array_equal(fused.state["counter"],
+                                 replay.state["counter"])))
+    return {
+        "prompt_tokens": prompt_tokens, "policy": policy,
+        "packing": packing, "compressible": compressible,
+        "fused": {"wall_s": round(fused_wall, 4), "dispatches": 1,
+                  "tokens_per_s": round(prompt_tokens
+                                        / max(fused_wall, 1e-9), 2)},
+        "replay": {"wall_s": round(replay_wall, 4),
+                   "dispatches": prompt_tokens,
+                   "tokens_per_s": round(prompt_tokens
+                                         / max(replay_wall, 1e-9), 2)},
+        "speedup": round(replay_wall / max(fused_wall, 1e-9), 2),
+        "bit_identical": bit_identical,
+    }
+
+
+def migration_churn_curve(*, mode="gate", slots=4, max_pages=128,
+                          prefill_pages=96, steady_steps=32,
                           churn_steps=16, migrate_budget=1,
                           seed=0) -> dict:
     """Zero-stall live migration under decode load, phase by phase.
@@ -297,13 +365,21 @@ def migration_churn_curve(*, mode="gate", slots=4, max_pages=64,
     attend per step, so tokens/s measures the decode path a model would
     feel.  `mode="gate"` flips the §VI gate off (packed -> raw);
     `mode="repack"` live-switches the packing geometry (pair -> quad and
-    re-promotes).  Timing is phase-aggregate: device work is synced at
-    phase boundaries only, and each phase runs 2 untimed warm-up steps
-    so one-off retraces (the migration window's pow2 bucket) don't bill
-    the steady rate.  The report carries the two flags CI enforces:
-    `no_stall` — migrating tokens/s >= 90% of steady — and
-    `bit_identical` — after convergence every slot's physical layout
-    equals its from-scratch rebuild oracle."""
+    re-promotes).  Timing is chunk-aggregate: device work is synced at
+    chunk boundaries only (never per step), and each phase runs 2
+    untimed warm-up steps so one-off retraces (the migration window's
+    pow2 bucket) don't bill the steady rate.  The no-stall comparison
+    uses the MEDIAN chunk rate per phase (a single GC pause inside one
+    chunk must not fail the flag; the pool is sized so both modes
+    migrate for 20+ timed steps / 3+ chunks), and the baseline is the
+    SLOWER of the two steady phases bracketing the migration — whole-
+    machine speed drift between phases (CPU frequency scaling, noisy
+    neighbours on shared runners) slows steady and migrating alike, and
+    must not fail the flag either.  The report carries the two flags CI
+    enforces: `no_stall` — migrating median tokens/s >= 90% of the
+    bracketing-steady baseline — and `bit_identical` — after
+    convergence every slot's physical layout equals its from-scratch
+    rebuild oracle."""
     import jax
 
     from repro.serving import ServeLoop
@@ -332,22 +408,41 @@ def migration_churn_curve(*, mode="gate", slots=4, max_pages=64,
         loop.attend({sid: q for sid in loop.active_seqs()})
         return len(kvs)
 
-    def run_phase(should_stop, *, warmup=2, churn_every=0):
+    def run_phase(should_stop, *, warmup=2, churn_every=0, chunk=8):
         for _ in range(warmup):
             decode_step()
         jax.block_until_ready(loop.cache.state)
-        n_tok, steps, t0 = 0, 0, time.perf_counter()
+        n_tok, steps, rates = 0, 0, []
+        c_tok, c_steps, t0 = 0, 0, time.perf_counter()
+
+        def close_chunk():
+            nonlocal c_tok, c_steps, t0
+            jax.block_until_ready(loop.cache.state)
+            w = time.perf_counter() - t0
+            if c_steps:
+                rates.append((c_tok, w))
+            c_tok, c_steps, t0 = 0, 0, time.perf_counter()
+
         while not should_stop(steps):
             if churn_every and steps % churn_every == 0:
                 loop.evict(loop.active_seqs()[0])  # the next decode_step
                 # names it again, so the wake crossing rides in-phase
-            n_tok += decode_step()
+            t = decode_step()
+            n_tok += t
+            c_tok += t
             steps += 1
-        jax.block_until_ready(loop.cache.state)
-        wall = time.perf_counter() - t0
+            c_steps += 1
+            if c_steps >= chunk:
+                close_chunk()
+        close_chunk()
+        wall = sum(w for _, w in rates)
+        per_chunk = [round(tk / max(w, 1e-9), 2) for tk, w in rates]
         return {"steps": steps, "decode_tokens": n_tok,
                 "wall_s": round(wall, 4),
-                "tokens_per_s": round(n_tok / max(wall, 1e-9), 2)}
+                "tokens_per_s": round(n_tok / max(wall, 1e-9), 2),
+                "chunk_tokens_per_s": per_chunk,
+                "median_tokens_per_s": (round(float(np.median(per_chunk)),
+                                              2) if per_chunk else 0.0)}
 
     phases = {}
     phases["steady"] = run_phase(lambda s: s >= steady_steps)
@@ -358,11 +453,13 @@ def migration_churn_curve(*, mode="gate", slots=4, max_pages=64,
     pending0 = loop.cache.migration_status()["pending_columns"]
     # convergence is polled on HOST state only (the derived pending mask
     # never touches the device), so the poll cannot serialize the stream
-    # (the pool is sized so both modes migrate for 10+ timed steps — a
-    # 3-step phase would let one retrace or GC pause swing the ratio)
     phases["migrating"] = run_phase(
         lambda s: not loop.cache.migration_pending().any() or s > 200)
     converged = loop.cache.migration_status()
+    # second steady phase on the CONVERGED layout: the no-stall baseline
+    # is the slower of the two steady measurements bracketing the
+    # migration, so machine-speed drift across phases cancels out
+    phases["steady_converged"] = run_phase(lambda s: s >= steady_steps // 2)
     phases["spill_churn"] = run_phase(lambda s: s >= churn_steps,
                                       churn_every=4)
     loop.sync_ledger()
@@ -371,8 +468,9 @@ def migration_churn_curve(*, mode="gate", slots=4, max_pages=64,
         for a, b in ((loop.cache.slot_physical_state(loop.seqs[sid].slot),
                       loop.cache.slot_reference_state(loop.seqs[sid].slot))
                      for sid in loop.active_seqs()))
-    steady, mig = (phases["steady"]["tokens_per_s"],
-                   phases["migrating"]["tokens_per_s"])
+    steady = min(phases["steady"]["median_tokens_per_s"],
+                 phases["steady_converged"]["median_tokens_per_s"])
+    mig = phases["migrating"]["median_tokens_per_s"]
     return {
         "mode": mode, "slots": slots, "max_pages": max_pages,
         "prefill_pages": prefill_pages, "migrate_budget": migrate_budget,
@@ -406,13 +504,20 @@ def spill_sweep(spill_packings=("off", "pair", "quad"), steps=48,
                                        packing switch both keep migrating-
                                        phase tokens/s >= 90% of steady;
       * migration_bit_identical      — the converged layouts equal the
-                                       per-slot rebuild oracle.
+                                       per-slot rebuild oracle;
+      * prefill_no_slower_than_replay — the ONE-dispatch bulk-pack ingest
+                                       is at least as fast as replaying
+                                       the prompt token by token, and the
+                                       end state is bit-identical.
     """
+    import jax
+
     curves = {spk: churn_spill_curve(spill_packing=spk, steps=steps,
                                      seed=seed)
               for spk in spill_packings}
     migration = {mode: migration_churn_curve(mode=mode, seed=seed)
                  for mode in ("gate", "repack")}
+    prefill = prefill_curve(seed=seed)
     noise = churn_spill_curve(spill_packing="quad", steps=steps, seed=seed,
                               compressible=False)
     base = curves[spill_packings[0]]["spill"]
@@ -436,12 +541,18 @@ def spill_sweep(spill_packings=("off", "pair", "quad"), steps=48,
                                   for m in migration.values()),
         "migration_bit_identical": all(m["bit_identical"]
                                        for m in migration.values()),
+        "prefill_no_slower_than_replay": (prefill["bit_identical"]
+                                          and prefill["speedup"] >= 1.0),
     }
+    dev = jax.devices()[0]
     return {
         "page": PAGE, "n_kv": HKV, "head_dim": HD,
+        "backend": {"platform": dev.platform,
+                    "device_kind": dev.device_kind},
         "curves": curves,
         "incompressible_quad": noise,
         "migration": migration,
+        "prefill": prefill,
         "spill_bytes": {spk: {"raw": c["spill"]["raw_bytes"],
                               "stored": c["spill"]["stored_bytes"],
                               "saving": c["spill"]["saving"]}
@@ -486,4 +597,8 @@ def run() -> list[tuple]:
                      f"ratio={m['migrating_over_steady']:.3f} "
                      f"no_stall={m['no_stall']} "
                      f"bit_identical={m['bit_identical']}"))
+    pf = sp["prefill"]
+    rows.append(("serve/prefill", pf["fused"]["wall_s"] * 1e6,
+                 f"T={pf['prompt_tokens']} speedup={pf['speedup']:.1f}x "
+                 f"bit_identical={pf['bit_identical']}"))
     return rows

@@ -266,6 +266,36 @@ def _entry_serve_megastep() -> dict:
                          donate_kwargs=kwargs, **kwargs)
 
 
+def _entry_serve_prefill() -> dict:
+    """The fused chunked-prefill ingest (`SlotKVCache._prefill`): prompt
+    scatter, bulk pack of every touched page group
+    (`kernels.prefill_pack`), byte booking, §VI counter update and LLP
+    predictor seeding as ONE donated jit — a whole prompt costs exactly
+    one pallas_call (the bulk pack kernel's), zero callbacks, donated
+    state."""
+    import jax.numpy as jnp
+
+    from ..kv import synthetic_kv_stream
+    from ..serving.slots import SlotKVCache, _prefill
+
+    rng = np.random.default_rng(0)
+    cache = SlotKVCache(max_pages=4, page=8, n_kv=1, head_dim=32, batch=2,
+                        policy="static", interpret=True)
+    # one whole-prompt ingest's arguments, built exactly as the wrapper
+    # does: two full page groups into slot 0 (T = 32, pow2 token bucket)
+    k, v = synthetic_kv_stream(rng, 1, 32, 1, 32)
+    idx = np.array([0, 1], np.int32)
+    kwargs = dict(lanes=cache.group_lanes, slot_bytes=cache.slot_bytes,
+                  strip_bytes=cache.strip_bytes, use_pack=True, dyn=False,
+                  interpret=True)
+    args = (cache.state, cache._marker_lanes, jnp.asarray(k[0]),
+            jnp.asarray(v[0]), jnp.int32(0), jnp.int32(0),
+            jnp.asarray(idx), jnp.asarray(cache._gate_b),
+            jnp.zeros((2, 2), bool))
+    return _traced_entry(_prefill, *args, donated_fn=_prefill,
+                         donate_kwargs=kwargs, **kwargs)
+
+
 def _entry_ckpt_pack_batch() -> dict:
     """checkpoint pack_batch: host-resident by design — zero jax arrays
     created, numpy in, numpy out, for every registered batch codec."""
@@ -302,6 +332,7 @@ ENTRIES = {
     "pack_window": _entry_pack_window,
     "serve_scatters": _entry_serve_scatters,
     "serve_megastep": _entry_serve_megastep,
+    "serve_prefill": _entry_serve_prefill,
     "kv_step_booking": _entry_kv_step_booking,
     "ckpt_pack_batch": _entry_ckpt_pack_batch,
 }
@@ -335,6 +366,10 @@ def hard_violations(report: dict) -> list[str]:
             bad.append(f"{name}: the fused serve step must carry exactly "
                        f"1 pallas_call (the pack kernel), found "
                        f"{pinned.get('pallas_call')}")
+        if name == "serve_prefill" and pinned.get("pallas_call") != 1:
+            bad.append(f"{name}: the fused prefill ingest must carry "
+                       f"exactly 1 pallas_call (the bulk pack kernel), "
+                       f"found {pinned.get('pallas_call')}")
     if report.get("ckpt_pack_batch", {})["pinned"].get("jax_arrays_created"):
         bad.append("ckpt_pack_batch: checkpoint batch pack dispatched jax "
                    "work — it is a host-numpy cold path by design")

@@ -26,7 +26,8 @@ from .base import Rule, call_name, is_jit_decorated, register, walk_functions
 
 HOT_NAMES = frozenset({
     "step", "step_all", "attend", "repack", "account_step",
-    "append_active", "_absorb_step", "megastep",
+    "append_active", "_absorb_step", "megastep", "prefill",
+    "prefill_slot", "_prefill",
 })
 
 _JIT_FORBIDDEN_CALLS = frozenset({

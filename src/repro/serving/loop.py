@@ -100,7 +100,7 @@ class ServeLoop:
         self.seqs: dict[int, SequenceSlot] = {}
         self.clock = 0
         self.counts = {"admitted": 0, "retired": 0, "evicted": 0,
-                       "woken": 0}
+                       "woken": 0, "spilled_direct": 0}
         self.choices: dict = {}
         # the tuner's hot pick while the gate suppressed it to "off" —
         # a live re-enable migrates to THIS, not to a default
@@ -150,17 +150,58 @@ class ServeLoop:
             self.evict(protect=protect)
         return self._free.pop(0)
 
-    def admit(self, seq_id, k=None, v=None) -> SequenceSlot:
-        """Join a sequence mid-flight; k/v (T, n_kv, d) prefill its slot.
-        Evicts the coldest active sequence when no slot is free."""
+    def _incoming_is_coldest(self, seq_id) -> bool:
+        """Admit-beyond-pool ordering: would the incoming sequence itself
+        be the next eviction victim?  Its would-be record sorts at
+        (last_step=clock, admitted_at=clock, seq_id); compare it against
+        the coldest resident under the same ordering."""
+        cold = self._coldest_active()
+        return ((self.clock, self.clock, seq_id)
+                < (cold.last_step, cold.admitted_at, cold.seq_id))
+
+    def admit(self, seq_id, k=None, v=None, *, prompt=None) -> SequenceSlot:
+        """Join a sequence mid-flight.
+
+        k/v (T, n_kv, d) prefill its slot through the incremental append;
+        `prompt=(k, v)` takes the fused chunked-prefill path instead
+        (`SlotKVCache.prefill_slot`: scatter + bulk pack + booking in ONE
+        donated dispatch).  When no slot is free the coldest active
+        sequence is evicted — unless the incoming sequence would itself
+        be the coldest under the eviction ordering, in which case its
+        payload is encoded STRAIGHT into the spill tier
+        (`SpillStore.spill_in`) without ever occupying a lane: evicting a
+        hotter resident just to spill the newcomer next step would thrash
+        two link crossings for nothing."""
         assert seq_id not in self.seqs, f"seq {seq_id} already live"
+        if prompt is not None:
+            assert k is None and v is None, "pass k/v or prompt=, not both"
+            k, v = prompt
+        if (k is not None and not self._free
+                and self._incoming_is_coldest(seq_id)):
+            rec = SequenceSlot(seq_id, -1, self.clock, self.clock,
+                               spilled=True)
+            self.seqs[seq_id] = rec
+            self.spill.spill_in(self.cache, seq_id, k, v)
+            self.counts["admitted"] += 1
+            self.counts["spilled_direct"] += 1
+            return rec
         slot = self._take_slot()
         rec = SequenceSlot(seq_id, slot, self.clock, self.clock)
         self.seqs[seq_id] = rec
         if k is not None:
-            self.cache.append_slot(slot, k, v)
+            if prompt is not None:
+                self.cache.prefill_slot(slot, k, v)
+            else:
+                self.cache.append_slot(slot, k, v)
         self.counts["admitted"] += 1
         return rec
+
+    def prefill(self, seq_id, k, v) -> SequenceSlot:
+        """Admit with the fused chunked-prefill ingest: the whole prompt
+        k/v (T, n_kv, d) is compressed page-group-at-a-time in one
+        dispatch — or encoded straight to the spill tier for an
+        admit-beyond-pool that would itself be the coldest."""
+        return self.admit(seq_id, prompt=(k, v))
 
     def retire(self, seq_id) -> None:
         """Finish a sequence: its lane resets and returns to the free pool

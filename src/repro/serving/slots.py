@@ -61,6 +61,7 @@ from ..compression.framing import DEFAULT_MARKER_KEY
 from ..compression.gate import COUNTER_INIT, COUNTER_MAX, ENABLE_THRESHOLD
 from ..compression.predictor import observe_layout
 from ..kernels import ops as kops
+from ..kernels.prefill_pack import prefill_pack
 from ..kernels.ref import MARKER_LANES
 from ..kv.cache import CRAMKVCache, _scatter_window, kernel_cache_slice
 from . import migrate as _migrate
@@ -152,6 +153,61 @@ def _megastep(state, mk_lanes, k, v, slot_idx, starts, active, idx,
     st["traffic"] = kv_read_device(traffic, raw_seq, cram_seq)
     st["predictor"] = observe_layout(st["packed_mask"])
     return st, raw_seq, cram_seq
+
+
+@functools.partial(
+    jax.jit, donate_argnums=(0,),
+    static_argnames=("lanes", "slot_bytes", "strip_bytes", "use_pack",
+                     "dyn", "interpret"))
+def _prefill(state, mk_lanes, k, v, slot, start, idx, enabled, countable,
+             *, lanes, slot_bytes, strip_bytes, use_pack, dyn, interpret):
+    """Fused chunked-prefill ingest for one slot (donated).
+
+    Installs a whole prompt — scatter at the slot's position, bulk pack of
+    every touched page group (`kernels.prefill_pack`: ONE vmapped
+    pallas_call for the per-page codec try + marker framing + slot
+    placement), physical scatter, repack byte booking, §VI counter update
+    from the pack results and LLP predictor initialization — in ONE jitted
+    dispatch.  No read-side accounting: nothing was attended yet, so
+    unlike `_megastep` there is no read event, no hit/miss tally, and no
+    full-predictor observation (only the prefilled slot's row is seeded).
+
+    k/v: (T, Hkv, D) the prompt rows (T pow2-padded by the caller with
+    zeros, which land on never-written all-zero page rows); idx: (W,)
+    union dirty group columns, pow2-padded by repeating a real column
+    (idempotent re-lay, pad `countable` False).  Bit-identical to
+    append_slot -> repack(gate) on the same window.
+    """
+    st = dict(state)
+    kv = jnp.concatenate([jnp.asarray(k, jnp.bfloat16).view(jnp.int16),
+                          jnp.asarray(v, jnp.bfloat16).view(jnp.int16)],
+                         axis=-1)[None]                 # (1, T, Hkv, D2)
+    st["pages"] = jax.lax.dynamic_update_slice(
+        st["pages"], kv, (slot, start, 0, 0))
+    page = st["slots"].shape[2]
+    slots_w, over_w, strips_w, lay, fit = prefill_pack(
+        st["pages"], idx, mk_lanes, enabled, lanes=lanes, page=page,
+        use_pack=use_pack, interpret=interpret)
+    st["slots"] = st["slots"].at[:, idx].set(slots_w)
+    st["slots_overflow"] = st["slots_overflow"].at[:, idx].set(over_w)
+    st["strips"] = st["strips"].at[:, idx].set(strips_w)
+    st["packed_mask"] = st["packed_mask"].at[:, idx].set(lay)
+    traffic, lay_n = kv_repack_device(st["traffic"], lay, lanes=lanes,
+                                      slot_bytes=slot_bytes,
+                                      strip_bytes=strip_bytes)
+    st["traffic"] = traffic
+    st["packed_n"] = st["packed_n"] + lay_n
+    st["raw_n"] = st["raw_n"] + (lay.size - lay_n)
+    if dyn:
+        fit_n = (fit & countable).sum(1)
+        unfit_n = ((~fit) & countable).sum(1)
+        st["counter"] = jnp.clip(
+            st["counter"] + (fit_n - unfit_n).astype(jnp.int32),
+            0, COUNTER_MAX)
+    # the prompt's own pack results seed the slot's LLP prediction; the
+    # other slots' rows are untouched (no observation happened for them)
+    st["predictor"] = st["predictor"].at[slot].set(st["packed_mask"][slot])
+    return st
 
 
 class SlotKVCache(CRAMKVCache):
@@ -439,6 +495,82 @@ class SlotKVCache(CRAMKVCache):
         self._last_enabled = enabled.copy()
         return {"raw_per_seq": raw_seq, "cram_per_seq": cram_seq}
 
+    # ------------------------------------------------------ fused prefill
+    def prefill_slot(self, slot: int, k, v, *, budget: int = 0) -> dict:
+        """Install a whole prompt into one slot as ONE fused dispatch.
+
+        k/v (T, n_kv, d): the prompt, landing at the slot's own position.
+        Where the replay path pays T per-token `megastep` dispatches (T
+        pack launches for what is one bulk write), this scatters the whole
+        prompt and bulk-packs every touched page group in a single donated
+        jitted call (`_prefill`): per-page codec try, in-band marker
+        framing and packed-slot placement ride in ONE vmapped pallas_call
+        (`kernels.prefill_pack`), the §VI counter takes the prompt's
+        fitness in one clip, the LLP predictor row is seeded from the pack
+        results, and the repack bytes are booked on the device accumulators
+        — zero host ledger records.  A partial tail page stays raw (its
+        group is zero-padded and fails the fit check), and the resulting
+        cache state + attend output are bit-identical to the token-by-token
+        append oracle (append_slot -> repack under the frozen `_gate_b`).
+
+        Like `megastep`, an optional migration `budget` folds pending
+        gate-flip columns into the same window, so mid-migration admits
+        never add a dispatch."""
+        k = jnp.asarray(k)
+        v = jnp.asarray(v)
+        assert k.ndim == 3, "prefill_slot takes one sequence (T, n_kv, d)"
+        t = int(k.shape[0])
+        assert t > 0, "prefill_slot needs a non-empty prompt"
+        start = int(self.tokens_b[slot])
+        cap = self.max_pages * self.page
+        assert start + t <= cap, "slot full"
+        self._mark_dirty(slot, start, t)
+        self.tokens_b[slot] += t
+        self.tokens = int(self.tokens_b.max())
+        if budget:
+            self.migration_quantum(budget)
+        idx = np.nonzero(self._dirty_b.any(0))[0]
+        w = int(idx.size)
+        wb = min(1 << (w - 1).bit_length(), self.n_groups)
+        idx_pad = np.full(wb, idx[0], np.int32)
+        idx_pad[:w] = idx
+        enabled = self._gate_b
+        span = self.group_lanes * self.page
+        complete = (idx[None, :] + 1) * span <= self.tokens_b[:, None]
+        countable = np.zeros((self.batch, wb), bool)
+        countable[:, :w] = complete & self._uncounted_b[:, idx]
+        # pow2 token bucket bounds retraces across prompt lengths; the
+        # zero pad rows land on never-written (all-zero) page rows
+        t_pad = min(1 << (t - 1).bit_length(), cap - start)
+        if t_pad > t:
+            k = jnp.concatenate(
+                [k, jnp.zeros((t_pad - t,) + k.shape[1:], k.dtype)])
+            v = jnp.concatenate(
+                [v, jnp.zeros((t_pad - t,) + v.shape[1:], v.dtype)])
+        self.state = _prefill(
+            self.state, self._marker_lanes, k, v, jnp.int32(slot),
+            jnp.int32(start), jnp.asarray(idx_pad), jnp.asarray(enabled),
+            jnp.asarray(countable),
+            lanes=self.group_lanes, slot_bytes=self.slot_bytes,
+            strip_bytes=self.strip_bytes, use_pack=self.policy != "off",
+            dyn=self.policy in ("dynamic", "auto"),
+            interpret=self.interpret)
+        hs = self._host_stats        # same tallies as _book_repack, at the
+        if self.policy == "off":     # padded window actually dispatched
+            hs.pack_skipped_dynamic += self.batch * wb
+        else:
+            hs.pack_attempts += self.batch * wb
+            hs.pack_skipped_dynamic += int((~enabled).sum()) * wb
+        hs.pack_calls += 1
+        hs.pack_pairs_processed += self.batch * wb
+        u = self._uncounted_b[:, idx]
+        u[complete] = False
+        self._uncounted_b[:, idx] = u
+        self._dirty_b[:] = False
+        self._applied_b[:, idx] = enabled[:, None]
+        self._last_enabled = enabled.copy()
+        return {"tokens": t, "groups": w}
+
     # ------------------------------------------------------ slot lifecycle
     def reset_slot(self, slot: int):
         """Return a lane to pristine state for reuse (retire/evict)."""
@@ -462,6 +594,15 @@ class SlotKVCache(CRAMKVCache):
         if self.policy == "static":
             return True
         return counter >= ENABLE_THRESHOLD
+
+    def default_slot_gate(self) -> bool:
+        """Target gate a freshly admitted slot would lay under — the
+        override if one is forced, else the policy gate at the counter
+        init.  Spill-direct admits record THIS as their payload gate so a
+        later wake repacks like a fresh hot-lane prefill."""
+        if self._gate_override is not None:
+            return bool(self._gate_override)
+        return self.slot_enabled_from_counter(self._counter_init)
 
     def slot_reference_state(self, slot: int) -> dict:
         """Per-slot from-scratch rebuild over the slot's OWN active prefix,

@@ -158,6 +158,56 @@ class SpillStore:
         self._inflight_pages[seq_id] = cap["n_pages"]
         self._inflight[seq_id] = self._worker().submit(self._encode, cap)
 
+    def spill_in(self, cache: SlotKVCache, seq_id: int, k, v) -> None:
+        """Encode a prompt STRAIGHT into the spill tier — no hot lane.
+
+        The spill-direct half of `ServeLoop.admit`: an admit-beyond-pool
+        whose sequence would itself be the coldest encodes its prompt
+        under the spill packing right away (one evict-direction crossing,
+        exactly one ledger `spill` event) instead of thrashing a hotter
+        resident out and straight back.  The payload records the hot
+        bookkeeping a fresh hot-lane prefill would start from — counter
+        at the policy init, every group's fitness uncounted, the default
+        target gate — so a later `restore` + repack resurrects the slot's
+        physical state, attend output and §VI counter exactly as if the
+        sequence had been prefilled into a hot lane (only the LLP
+        predictor row starts unseeded; it re-seeds at the next
+        observation).  k/v: (T, n_kv, d), the prompt."""
+        assert seq_id not in self, f"seq {seq_id} already spilled"
+        kk = np.asarray(jnp.asarray(k, jnp.bfloat16).view(jnp.int16))
+        vv = np.asarray(jnp.asarray(v, jnp.bfloat16).view(jnp.int16))
+        assert kk.ndim == 3, "spill_in takes one sequence (T, n_kv, d)"
+        kv = np.concatenate([kk, vv], axis=-1)
+        tokens = kv.shape[0]
+        assert tokens > 0, "spill_in needs a non-empty prompt"
+        page = cache.page
+        n_pages = -(-tokens // page)
+        gs = -(-n_pages // self.lanes)
+        if (self.capacity_pages is not None
+                and self._pages_stored() + n_pages > self.capacity_pages):
+            raise RuntimeError(
+                f"spill store full ({self._pages_stored()}+{n_pages} pages "
+                f"> capacity {self.capacity_pages})")
+        pages = np.zeros((gs * self.lanes, page, cache.n_kv, cache.d2),
+                         np.int16)
+        pages.reshape(-1, cache.n_kv, cache.d2)[:tokens] = kv
+        gh = -(-n_pages // cache.group_lanes)
+        cap = {
+            "seq_id": seq_id, "tokens": tokens, "n_pages": n_pages,
+            "gs": gs, "pages": pages,
+            "counter": cache._counter_init,
+            "predictor": np.zeros(gh, bool),
+            "uncounted": np.ones(gh, bool),
+            "gate": cache.default_slot_gate(),
+            "hot_packing": cache.packing,
+            "raw_bytes": n_pages * cache.slot_bytes,
+        }
+        if not self.async_spill:
+            self._commit(self._encode(cap))
+            return
+        self._inflight_pages[seq_id] = n_pages
+        self._inflight[seq_id] = self._worker().submit(self._encode, cap)
+
     def _capture(self, cache: SlotKVCache, slot: int, seq_id: int) -> dict:
         """Main-thread half of an evict: settle the slot's layout (drain
         its pending migration under the frozen target, repack), snapshot

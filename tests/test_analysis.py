@@ -51,6 +51,17 @@ def test_cli_exits_nonzero_on_fixture(rule):
     assert cli_main([str(RULE_FIXTURES[rule])]) == 1
 
 
+def test_r3_fires_on_prefill_hot_paths():
+    """The chunked-prefill ingest counts as a hot path: `prefill` /
+    `prefill_slot` entries with host syncs or per-call ledger booking
+    must be flagged like any decode-step method."""
+    found = analyze([FIXTURES / "r3_prefill_bad.py"], rules=["r3"])
+    assert len(found) >= 5, found
+    assert all(v.rule == "r3" for v in found)
+    msgs = " ".join(v.message for v in found)
+    assert "'prefill'" in msgs and "'prefill_slot'" in msgs, msgs
+
+
 def test_fixture_findings_are_rule_scoped():
     """A fixture only has to be bad its OWN way: with all rules on, the
     r5/r6 fixtures (path-scoped) still report their own rule."""

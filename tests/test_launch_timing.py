@@ -51,23 +51,26 @@ def test_launch_decode_no_host_sync_in_timed_region(monkeypatch):
         return tok + 1, cache
 
     prompts = np.arange(12, dtype=np.int32).reshape(3, 4)
-    gen, cache, wall = serve_mod._timed_decode(
+    gen, cache, prefill_wall, decode_wall = serve_mod._timed_decode(
         serve_step, None, prompts, {"k": np.zeros(2)}, gen=5)
 
     # the stub increments the last prompt token once per step
     want = prompts[:, -1:] + 1 + np.arange(5)[None, :]
     np.testing.assert_array_equal(gen, want)
-    assert wall >= 0.0
+    assert prefill_wall >= 0.0 and decode_wall >= 0.0
 
+    # prefill and decode are SEPARATELY timed regions: four clock reads,
+    # each region obeying the R3 discipline on its own
     clocks = [i for i, e in enumerate(log) if e == "time.time"]
-    assert len(clocks) == 2, log
-    timed = log[clocks[0] + 1:clocks[1]]
-    # no host materialization between t0 and the wall read ...
-    assert not any(e.startswith("np.") for e in timed), timed
-    # ... and the device work is synced before the timer stops
-    assert "jax.block_until_ready" in timed, timed
-    # the host copies happen, but only after the timed region
-    assert any(e.startswith("np.") for e in log[clocks[1]:]), log
+    assert len(clocks) == 4, log
+    for t0, t1 in ((clocks[0], clocks[1]), (clocks[2], clocks[3])):
+        timed = log[t0 + 1:t1]
+        # no host materialization between the clock reads ...
+        assert not any(e.startswith("np.") for e in timed), timed
+        # ... and the device work is synced before the timer stops
+        assert "jax.block_until_ready" in timed, timed
+    # the host copies happen, but only after the last timed region
+    assert any(e.startswith("np.") for e in log[clocks[3]:]), log
 
 
 def test_serve_bench_timed_loop_never_syncs_stats(monkeypatch):

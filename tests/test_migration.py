@@ -290,17 +290,24 @@ def test_scripted_interleaving_admit_step_evict_wake_flip():
         loop.admit(nxt, k[0], v[0])
         nxt += 1
 
+    def prefill():
+        nonlocal nxt
+        k, v = _kv(rng, 1, 3 * PAGE + 3)
+        loop.prefill(nxt, k[0], v[0])
+        nxt += 1
+
     def step():
         act = loop.active_seqs()
         if act:
             loop.step({s: tuple(x[0] for x in _kv(rng, 1, 1))
                        for s in act})
 
-    script = [admit, step, admit, step,
+    script = [admit, step, prefill, step,
               lambda: loop.cache.set_gate_override(False),
-              step, admit, step,                 # admit evicts the coldest
+              step, prefill, step,               # admit evicts the coldest
               step, lambda: loop.wake(loop.spilled_seqs()[0]),
               step, lambda: loop.cache.set_gate_override(True),
+              prefill,                           # prefill mid-migration
               step, step, lambda: loop.evict(loop.active_seqs()[0]),
               step, lambda: loop.cache.set_gate_override(None),
               step, step, step]
@@ -311,6 +318,38 @@ def test_scripted_interleaving_admit_step_evict_wake_flip():
     loop.cache.drain_migration()
     _assert_oracle(loop.cache, "script drained")
     assert not loop.cache.migration_status()["migrating"]
+
+
+def test_prefill_admit_into_half_migrated_pool():
+    """A prompt bulk-packed into a pool whose residents are mid-flip lays
+    out under the CURRENT target gate (nothing pending on the new slot),
+    advances applied state only through the recorded per-group gates, and
+    the convergence identity holds at every point."""
+    rng = np.random.default_rng(13)
+    loop = _loop(rng, slots=3)
+    for s in range(2):
+        k, v = _kv(rng, 1, 4 * PAGE)
+        loop.admit(s, k[0], v[0])
+    loop.step({s: tuple(x[0] for x in _kv(rng, 1, 1)) for s in (0, 1)})
+    assert np.asarray(loop.cache.state["packed_mask"]).any()
+    loop.cache.set_gate_override(False)    # flip while residents are live
+    loop.step({0: tuple(x[0] for x in _kv(rng, 1, 1))})
+    assert loop.cache.migration_status()["migrating"]
+    _assert_oracle(loop.cache, "half-migrated before prefill")
+    kp, vp = _kv(rng, 1, 3 * PAGE + 3)
+    loop.prefill(5, kp[0], vp[0])
+    _assert_oracle(loop.cache, "prefill mid-migration")
+    slot5 = loop.seqs[5].slot
+    assert not loop.cache.migration_pending()[slot5].any(), \
+        "a bulk-packed prompt is born settled under the target gate"
+    steps = 0
+    while loop.cache.migration_pending().any():
+        loop.step({s: tuple(x[0] for x in _kv(rng, 1, 1))
+                   for s in loop.active_seqs()})
+        steps += 1
+        _assert_oracle(loop.cache, f"post-prefill drain {steps}")
+        assert steps < 100
+    assert not np.asarray(loop.cache.state["packed_mask"]).any()
 
 
 def test_migrate_to_packing_mid_serve_converges():
@@ -389,11 +428,13 @@ def test_gate_disable_records_suppressed_packing():
 if HAVE_HYPOTHESIS:
 
     @settings(max_examples=12, deadline=None)
-    @given(ops=st.lists(st.integers(0, 5), min_size=4, max_size=14),
+    @given(ops=st.lists(st.integers(0, 6), min_size=4, max_size=14),
            seed=st.integers(0, 2**16))
     def test_schedule_sweep_migration_oracle(ops, seed):
-        """Random admit/step/evict/wake/flip schedules with per-step
-        migration quanta: the applied-gate oracle holds after EVERY op."""
+        """Random admit/prefill/step/evict/wake/flip schedules with
+        per-step migration quanta: the applied-gate oracle holds after
+        EVERY op (prefill-admits land settled, so they are oracle-checked
+        immediately, mid-migration included)."""
         rng = np.random.default_rng(seed)
         loop = _loop(rng, slots=2)
         nxt = 0
@@ -402,6 +443,10 @@ if HAVE_HYPOTHESIS:
             if op == 0:
                 k, v = _kv(rng, 1, 2 * PAGE)
                 loop.admit(nxt, k[0], v[0])
+                nxt += 1
+            elif op == 6:
+                k, v = _kv(rng, 1, int(rng.integers(1, 4 * PAGE)))
+                loop.prefill(nxt, k[0], v[0])
                 nxt += 1
             elif op in (1, 2):
                 act = loop.active_seqs()

@@ -117,7 +117,10 @@ def _run_schedule(loop: ServeLoop, rng, n_ops: int, check_every: int = 4,
         op = rng.choice(("admit", "step", "step", "retire", "evict", "wake"))
         if op == "admit" and len(live) < loop.n_slots + extra_live:
             k, v = _stream(rng, int(rng.integers(1, 3 * PAGE)))
-            loop.admit(next_sid, k, v)
+            if rng.random() < 0.5:    # fused chunked-prefill ingest: must
+                loop.prefill(next_sid, k, v)    # be indistinguishable from
+            else:                               # the incremental admit
+                loop.admit(next_sid, k, v)
             solo = _solo_like(loop)
             solo.append_slot(0, k, v)
             solos[next_sid] = solo
@@ -241,6 +244,152 @@ def test_step_never_evicts_a_step_named_sequence():
     for sid, (kk, vv) in kvs.items():
         solos[sid].append_slot(0, kk, vv)
     _check_parity_all(loop, solos, rng)
+
+
+# ------------------------------------- fused chunked-prefill ingest
+
+
+def _window_cols(cache: SlotKVCache, tokens: int) -> int:
+    span = cache.group_lanes * cache.page
+    return -(-tokens // span)
+
+
+@pytest.mark.parametrize("policy,packing", [
+    ("static", "pair"), ("static", "quad"), ("off", "pair"),
+    ("dynamic", "pair"), ("dynamic", "quad")])
+@pytest.mark.parametrize("tokens", [16, 35, 56, 64])
+def test_prefill_bit_identical_to_append_oracle(policy, packing, tokens):
+    """prefill_slot (ONE bulk-pack launch) == append_slot + repack under
+    the pre-count gate, bit-for-bit: physical layout, §VI counter,
+    uncounted set, and the attend output.  Ledger duals are compared on
+    pow2 windows (the bulk kernel pads the window to pow2 by repeating a
+    real column — idempotent for layout, overbooked for bytes, the SAME
+    convention the fused megastep uses)."""
+    rng = np.random.default_rng(21)
+    k, v = _stream(rng, tokens)
+    fused = SlotKVCache(8, PAGE, HKV, HD, batch=2, policy=policy,
+                        packing=packing)
+    fused.prefill_slot(0, k, v)
+    oracle = SlotKVCache(8, PAGE, HKV, HD, batch=2, policy=policy,
+                         packing=packing)
+    oracle.append_slot(0, k, v)
+    oracle.repack(gate=oracle._gate_b)
+    for slot in (0, 1):                      # lane 1 (all-zero) untouched
+        _assert_state_equal(fused.slot_physical_state(slot),
+                            _snap(oracle.slot_physical_state(slot)),
+                            ctx=(policy, packing, tokens, slot))
+    assert np.array_equal(np.asarray(fused.state["counter"]),
+                          np.asarray(oracle.state["counter"]))
+    assert (fused._uncounted_b == oracle._uncounted_b).all()
+    q = np.asarray(_stream(rng, 1)[0], np.float32)      # (1, HKV, HD)
+    q2 = np.broadcast_to(q, (2,) + q.shape[1:])
+    assert np.array_equal(
+        np.asarray(shard_kv_attend(fused, q2, shard=False)),
+        np.asarray(shard_kv_attend(oracle, q2, shard=False)))
+    w = _window_cols(fused, tokens)
+    if w & (w - 1) == 0:                     # pow2 window: exact duals
+        assert np.array_equal(np.asarray(fused.state["traffic"]),
+                              np.asarray(oracle.state["traffic"]))
+        assert np.array_equal(np.asarray(fused.state["packed_n"]),
+                              np.asarray(oracle.state["packed_n"]))
+        assert np.array_equal(np.asarray(fused.state["raw_n"]),
+                              np.asarray(oracle.state["raw_n"]))
+
+
+@pytest.mark.parametrize("policy,packing", [("static", "pair"),
+                                            ("dynamic", "quad")])
+def test_prefill_matches_token_by_token_replay(policy, packing):
+    """Loop-level: one prefill admit == admitting the first token and
+    replaying the rest through the fused decode megastep — state,
+    counter and attend all bit-identical."""
+    rng = np.random.default_rng(24)
+    k, v = _stream(rng, 5 * PAGE + 3)
+    mk = dict(slots=2, max_pages=8, page=PAGE, n_kv=HKV, head_dim=HD,
+              policy=policy, packing=packing)
+    fused, replay = ServeLoop(**mk), ServeLoop(**mk)
+    fused.prefill(0, k, v)
+    replay.admit(0, k[:1], v[:1])
+    for i in range(1, k.shape[0]):
+        replay.step({0: (k[i:i + 1], v[i:i + 1])})
+    fused.cache.repack()
+    replay.cache.repack()
+    _assert_state_equal(fused.cache.slot_physical_state(0),
+                        _snap(replay.cache.slot_physical_state(0)))
+    assert np.array_equal(np.asarray(fused.cache.state["counter"]),
+                          np.asarray(replay.cache.state["counter"]))
+    q = {0: np.asarray(_stream(rng, 1)[0][0], np.float32)}
+    assert np.array_equal(np.asarray(fused.attend(q)[0]),
+                          np.asarray(replay.attend(q)[0]))
+
+
+def test_admit_beyond_pool_ordering_spills_incoming_coldest():
+    """ISSUE 10 bugfix pin: a prompt admitted into a FULL pool whose
+    would-be recency key orders below every resident goes straight to the
+    spill tier (no lane, no eviction) — thrashing a hotter resident to
+    make room for the coldest sequence in the system is strictly worse.
+    Waking it later must be bit-identical to a hot-lane prefill."""
+    rng = np.random.default_rng(22)
+    loop = ServeLoop(slots=2, max_pages=8, page=PAGE, n_kv=HKV, head_dim=HD,
+                     policy="static", packing="pair", spill_packing="quad")
+    loop.admit(10, *_stream(rng, 2 * PAGE))
+    loop.admit(11, *_stream(rng, 2 * PAGE))
+    loop.cache.repack()
+    resident = {sid: _snap(loop.cache.slot_physical_state(
+        loop.seqs[sid].slot)) for sid in (10, 11)}
+    kp, vp = _stream(rng, 3 * PAGE + 3)
+    # same clock, smaller seq id: the incoming key sorts below both
+    # residents' — it must NOT displace either of them
+    rec = loop.prefill(3, kp, vp)
+    assert rec.spilled and rec.slot == -1 and 3 in loop.spill
+    assert loop.counts["spilled_direct"] == 1
+    assert loop.counts["evicted"] == 0
+    assert sorted(loop.active_seqs()) == [10, 11]
+    for sid in (10, 11):
+        _assert_state_equal(loop.cache.slot_physical_state(
+            loop.seqs[sid].slot), resident[sid], ctx=sid)
+    # a spill-direct admit is a real admit: wake == hot-lane prefill
+    solo = _solo_like(loop)
+    solo.prefill_slot(0, kp, vp)
+    loop.retire(10)
+    loop.wake(3)
+    loop.cache.repack()
+    solo.repack()
+    _assert_state_equal(
+        loop.cache.slot_physical_state(loop.seqs[3].slot),
+        _snap(solo.slot_physical_state(0)))
+    assert (int(np.asarray(loop.cache.state["counter"][loop.seqs[3].slot]))
+            == int(np.asarray(solo.state["counter"][0])))
+    # once anything has stepped, a NEW admit is the hottest sequence and
+    # takes the eviction path as before
+    loop.step({11: _stream(rng, 1)})
+    rec2 = loop.admit(20, *_stream(rng, PAGE))
+    assert not rec2.spilled and rec2.slot >= 0
+    assert loop.counts["evicted"] == 1
+
+
+def test_prefill_makes_zero_host_ledger_records(monkeypatch):
+    """The prefill ingest obeys the PR-7 accounting contract: ALL of its
+    traffic lands in the device accumulators — zero host Ledger.record
+    calls per admit, one fold at the report boundary."""
+    from repro.bandwidth.ledger import N_EVENTS, Ledger
+
+    calls: list = []
+    orig = Ledger.record
+
+    def counting(self, *a, **kw):
+        calls.append(a)
+        return orig(self, *a, **kw)
+
+    monkeypatch.setattr(Ledger, "record", counting)
+    rng = np.random.default_rng(23)
+    loop = ServeLoop(slots=3, max_pages=8, page=PAGE, n_kv=HKV, head_dim=HD,
+                     policy="static", packing="pair")
+    for sid in range(3):
+        loop.prefill(sid, *_stream(rng, 4 * PAGE + sid))
+    assert calls == [], (
+        f"prefill admits reached the host ledger {len(calls)} times")
+    loop.sync_ledger()
+    assert 0 < len(calls) <= N_EVENTS
 
 
 # ------------------------------------------------------- spill round-trip
@@ -562,3 +711,31 @@ if HAVE_HYPOTHESIS:
         assert np.array_equal(np.asarray(loop.cache.pages_view()[slot]),
                               pages)
         assert int(np.asarray(loop.cache.state["counter"][slot])) == ctr
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        policy=st.sampled_from(["static", "dynamic", "off"]),
+        packing=st.sampled_from(["pair", "quad"]),
+        tokens=st.integers(min_value=1, max_value=6 * PAGE),
+        compressible=st.booleans(),
+        seed=st.integers(min_value=0, max_value=2 ** 16),
+    )
+    def test_prefill_oracle_property(policy, packing, tokens, compressible,
+                                     seed):
+        """The bulk-pack prefill equals the append+repack oracle for every
+        packing x gate policy x token count x stream regime — partial
+        pages, partial groups, raw fallbacks and all."""
+        rng = np.random.default_rng(seed)
+        k, v = _stream(rng, tokens, compressible=compressible)
+        fused = SlotKVCache(8, PAGE, HKV, HD, batch=2, policy=policy,
+                            packing=packing)
+        fused.prefill_slot(0, k, v)
+        oracle = SlotKVCache(8, PAGE, HKV, HD, batch=2, policy=policy,
+                             packing=packing)
+        oracle.append_slot(0, k, v)
+        oracle.repack(gate=oracle._gate_b)
+        _assert_state_equal(fused.slot_physical_state(0),
+                            _snap(oracle.slot_physical_state(0)))
+        assert np.array_equal(np.asarray(fused.state["counter"]),
+                              np.asarray(oracle.state["counter"]))
+        assert (fused._uncounted_b == oracle._uncounted_b).all()
